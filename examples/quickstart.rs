@@ -1,0 +1,66 @@
+//! Quickstart: build an iDMA engine with the §3.6 wrapper, move some
+//! memory, initialize a buffer with the Init pseudo-protocol, and read
+//! the area/timing/latency characterization for the configuration.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use idma::backend::{BackendCfg, PortCfg};
+use idma::engine::EngineBuilder;
+use idma::mem::{Endpoint, MemModel};
+use idma::midend::NdJob;
+use idma::model::{synthesize_area, synthesize_fmax_ghz};
+use idma::protocol::ProtocolKind;
+use idma::transfer::{InitPattern, NdTransfer, Transfer1D};
+
+fn main() {
+    // 1. An engine from the three §3.6 wrapper parameters:
+    //    AW=32 bits, DW=8 bytes, NAx=8, with a 3D tensor mid-end.
+    let mut engine = EngineBuilder::new(32, 8, 8).tensor(3).build().unwrap();
+
+    // 2. A memory system: SRAM-class endpoint (3 cycles, 8 outstanding).
+    let mut mems = [Endpoint::new(MemModel::sram(8))];
+    let payload: Vec<u8> = (0..=255).collect();
+    mems[0].data.write(0x1000, &payload);
+
+    // 3. A 2D transfer: 4 rows of 64 B, source stride 256 B.
+    let inner = Transfer1D::copy(0, 0x1000, 0x8000, 64, ProtocolKind::Axi4);
+    let nd = NdTransfer::d2(inner, 256, 64, 4);
+    assert!(engine.submit(0, NdJob::new(1, nd)));
+
+    // 4. A memory-init transfer right behind it.
+    let init = Transfer1D::init(0, 0x9000, 128, InitPattern::Incrementing(0), ProtocolKind::Axi4);
+    let mut now = 0u64;
+    loop {
+        engine.tick(now, &mut mems);
+        now += 1;
+        if engine.submit(now, NdJob::new(2, NdTransfer::d1(init))) {
+            break;
+        }
+    }
+    while engine.busy() {
+        engine.tick(now, &mut mems);
+        now += 1;
+    }
+    for d in engine.take_done() {
+        println!("job {} done at cycle {} (errors: {})", d.job, d.at, d.errors);
+    }
+    assert_eq!(mems[0].data.read_vec(0x8000, 64), payload[0..64].to_vec());
+    assert_eq!(mems[0].data.read_u8(0x9000 + 77), 77);
+    println!("2D copy + memory init complete in {now} cycles — byte exact.");
+
+    // 5. Characterize the configuration (the §4 models).
+    let cfg = BackendCfg {
+        aw_bits: 32,
+        dw_bytes: 8,
+        nax_r: 8,
+        nax_w: 8,
+        ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+        ..Default::default()
+    };
+    println!(
+        "this back-end: {:.1} kGE, fmax {:.2} GHz, launch latency {} cycles",
+        synthesize_area(&cfg).total() / 1000.0,
+        synthesize_fmax_ghz(&cfg),
+        idma::model::backend_latency(&cfg),
+    );
+}

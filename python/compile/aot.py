@@ -1,0 +1,142 @@
+"""AOT lowering: every Rust-callable entry point → HLO **text** under
+``artifacts/``, plus the weight/input/expected binaries and a TSV
+manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the rust `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo/.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import dct, dwconv, gemm, vec
+
+
+def to_hlo_text(lowered):
+    """Lowered jax computation → XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries():
+    """(name, fn, arg_specs) for every artifact."""
+    out = []
+
+    # ---- MobileNetV1 layers (PULP-open §3.1 / edge_ai example) ----
+    out.append(("mb_l0", model.l0, [spec((32, 32, 3)), spec((27, 8))]))
+    for name, s, h, w, c in model.DW_LAYERS:
+        out.append(
+            (
+                f"mb_{name}",
+                functools.partial(model.dw_layer, stride=s),
+                [spec((h, w, c)), spec((3, 3, c))],
+            )
+        )
+    for name, hw, cin, cout in model.PW_LAYERS:
+        side = int(np.sqrt(hw))
+        out.append((f"mb_{name}", model.pw_layer, [spec((side, side, cin)), spec((cin, cout))]))
+    out.append(("mb_head", model.head, [spec((4, 4, 64)), spec((64, 10)), spec((10,))]))
+    out.append(("mb_full", model.forward_flat, model.full_specs()))
+
+    # ---- Case-study compute tiles ----
+    # Manticore §3.5: double-precision GEMM tiles S/M/L/XL.
+    for n in (24, 32, 48, 64):
+        out.append(
+            (
+                f"gemm_f64_{n}",
+                gemm.gemm,
+                [spec((n, n), jnp.float64), spec((n, n), jnp.float64)],
+            )
+        )
+    # MemPool §3.4 kernels.
+    out.append(("gemm_f32_64", gemm.gemm, [spec((64, 64)), spec((64, 64))]))
+    out.append(
+        (
+            "conv3x3_f32_64",
+            functools.partial(dwconv.depthwise_conv3x3, stride=1),
+            [spec((66, 66, 1)), spec((3, 3, 1))],
+        )
+    )
+    out.append(("dct8x8_f32_b64", dct.dct8x8, [spec((64, 8, 8))]))
+    out.append(("axpy_f32_4096", vec.axpy, [spec((1,)), spec((4096,)), spec((4096,))]))
+    out.append(("dot_f32_4096", vec.dot, [spec((4096,)), spec((4096,))]))
+    return out
+
+
+def write_binaries(out_dir):
+    """Weights + sample input + expected logits for the Rust E2E driver."""
+    ws = model.init_weights()
+    x = model.sample_input()
+    manifest = []
+    blob = bytearray()
+    order = (
+        ["l0"]
+        + [n for n, *_ in model.DW_LAYERS]
+        + [n for n, *_ in model.PW_LAYERS]
+        + ["fc", "fc_b"]
+    )
+    for name in order:
+        arr = np.ascontiguousarray(ws[name], dtype=np.float32)
+        manifest.append((name, len(blob), arr.size))
+        blob.extend(arr.tobytes())
+    with open(os.path.join(out_dir, "mb_weights.bin"), "wb") as f:
+        f.write(bytes(blob))
+    with open(os.path.join(out_dir, "mb_weights.tsv"), "w") as f:
+        for name, off, n in manifest:
+            f.write(f"{name}\t{off}\t{n}\n")
+    x.tofile(os.path.join(out_dir, "mb_input.bin"))
+    expected = np.asarray(model.forward(jnp.asarray(x), ws), dtype=np.float32)
+    expected.tofile(os.path.join(out_dir, "mb_expected.bin"))
+    return ws, x, expected
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jax.config.update("jax_enable_x64", True)
+
+    rows = []
+    for name, fn, specs in entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            f"{'x'.join(map(str, s.shape)) or '1'}:{np.dtype(s.dtype).name}" for s in specs
+        )
+        rows.append((name, fname, shapes))
+        print(f"lowered {name:>16} → {fname} ({len(text)} chars)")
+
+    write_binaries(args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for name, fname, shapes in rows:
+            f.write(f"{name}\t{fname}\t{shapes}\n")
+    print(f"{len(rows)} artifacts + binaries written to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

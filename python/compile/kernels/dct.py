@@ -1,0 +1,30 @@
+"""L1 Pallas kernel: batched 8x8 2D DCT-II (the MemPool DCT workload,
+§3.4). Computed as D·X·Dᵀ per block with the orthonormal DCT basis baked
+into the kernel as a constant — two small MXU passes per block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(d_ref, x_ref, o_ref):
+    x = x_ref[...]
+    d = d_ref[...]
+    o_ref[...] = jnp.einsum("ij,bjk,lk->bil", d, x, d)
+
+
+def dct8x8(blocks):
+    """2D DCT-II over a batch of 8x8 blocks: (B, 8, 8) → (B, 8, 8)."""
+    b = blocks.shape[0]
+    assert blocks.shape[1:] == (8, 8)
+    # Pallas kernels may not capture constants; the basis matrix enters
+    # as a regular operand (it lives in VMEM alongside the blocks).
+    d = ref.dct_matrix(8, blocks.dtype)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 8, 8), blocks.dtype),
+        interpret=True,
+    )(d, blocks)

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: depthwise 3x3 convolution.
+
+The per-channel hot-spot of the MobileNetV1 workload (PULP-open, §3.1).
+The kernel unrolls the 3x3 stencil into nine strided-slice multiply-
+accumulates over the whole (pre-padded) activation block resident in
+VMEM — the DORY-style tiling in the Rust coordinator sizes blocks so
+this holds, mirroring how the cluster DMA stages tiles into TCDM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, stride, h_out, w_out):
+    x = x_ref[...]
+    w = w_ref[...]
+    c = x.shape[-1]
+    acc = jnp.zeros((h_out, w_out, c), dtype=o_ref.dtype)
+    for dy in range(3):
+        for dx in range(3):
+            window = lax.slice(
+                x,
+                (dy, dx, 0),
+                (dy + (h_out - 1) * stride + 1, dx + (w_out - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = acc + window * w[dy, dx, :]
+    o_ref[...] = acc
+
+
+def depthwise_conv3x3(x, w, stride=1):
+    """Depthwise 3x3 conv over a pre-padded (H+2, W+2, C) block."""
+    hp, wp, c = x.shape
+    assert w.shape == (3, 3, c)
+    h_out = (hp - 3) // stride + 1
+    w_out = (wp - 3) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_kernel, stride=stride, h_out=h_out, w_out=w_out),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, c), x.dtype),
+        interpret=True,
+    )(x, w)

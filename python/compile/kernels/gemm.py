@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: tiled-accumulation GEMM.
+
+The compute hot-spot of the Manticore (§3.5 GEMM tiles), MemPool (§3.4
+matmul) and PULP-open (pointwise convolutions) case-study workloads.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid's `k` axis streams
+`(bm, bk) × (bk, bn)` tiles through VMEM — the same HBM↔scratchpad burst
+schedule the iDMA back-end realizes in RTL — and each tile matmul is one
+MXU pass. Accumulation happens in the revisited output block, avoiding a
+scratch allocation so the kernel also runs under `interpret=True` on the
+CPU PJRT backend (the only mode this repo executes: real TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, o_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype)
+    _ = k_steps
+
+
+def gemm(x, y, bm=None, bn=None, bk=None):
+    """Tiled matmul `x @ y` via a Pallas kernel.
+
+    Tile sizes default to whole-array (single MXU pass) and must divide
+    the operand shapes when given.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = bm or m
+    bn = bn or n
+    bk = bk or k
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, "tiles must divide shapes"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm, bn, bk, itemsize):
+    """VMEM footprint of one grid step (perf model, DESIGN.md §Perf)."""
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def mxu_utilization(bm, bn, bk, mxu=128):
+    """Estimated MXU utilization of one tile pass on a `mxu`×`mxu` array."""
+    eff_m = min(bm, mxu) / mxu
+    eff_n = min(bn, mxu) / mxu
+    return eff_m * eff_n

@@ -1,0 +1,62 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package is checked against these references by
+pytest (exactly, for matched dtypes, or to tight tolerances where
+accumulation order differs). The oracles are also what the L2 model
+would compute without the Pallas hot-spots.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def matmul(x, y):
+    """Plain matrix multiply with f32/f64 accumulation."""
+    return jnp.matmul(x, y)
+
+
+def depthwise_conv3x3(x, w, stride=1):
+    """Depthwise 3x3 convolution.
+
+    x: (H+2, W+2, C) pre-padded input; w: (3, 3, C); returns
+    (H', W', C) with H' = (H+2-3)//stride + 1.
+    """
+    xb = x[None, ...]  # NHWC
+    c = x.shape[-1]
+    # HWIO with feature_group_count=C: (3, 3, 1, C)
+    k = w[:, :, None, :]
+    out = lax.conv_general_dilated(
+        xb,
+        k,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out[0]
+
+
+def dct_matrix(n=8, dtype=jnp.float32):
+    """Orthonormal DCT-II basis matrix."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    d = np.sqrt(2.0 / n) * np.cos(np.pi * (2 * i + 1) * k / (2 * n))
+    d[0, :] = 1.0 / np.sqrt(n)
+    return jnp.asarray(d, dtype=dtype)
+
+
+def dct8x8(blocks):
+    """2D DCT-II over a batch of 8x8 blocks: (B, 8, 8) → (B, 8, 8)."""
+    d = dct_matrix(8, blocks.dtype)
+    return jnp.einsum("ij,bjk,lk->bil", d, blocks, d)
+
+
+def axpy(a, x, y):
+    """a*x + y (BLAS axpy); `a` has shape (1,)."""
+    return a * x + y
+
+
+def dot(x, y):
+    """Inner product, returned as shape (1,)."""
+    return jnp.sum(x * y)[None]

@@ -1,0 +1,36 @@
+"""L1 Pallas kernels: vector primitives (axpy, dot) — the memory-bound
+MemPool workloads of §3.4 whose double-buffered DMA speedups the paper
+reports (15.7× / 15.8×).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(a, x, y):
+    """`a*x + y`; `a` has shape (1,)."""
+    assert x.shape == y.shape and a.shape == (1,)
+    return pl.pallas_call(
+        _axpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(a, x, y)
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...] * y_ref[...])[None]
+
+
+def dot(x, y):
+    """Inner product, shape (1,)."""
+    assert x.shape == y.shape
+    return pl.pallas_call(
+        _dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y)

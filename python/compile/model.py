@@ -1,0 +1,181 @@
+"""L2: JAX model — a tiny MobileNetV1 (width multiplier 0.25-class,
+32x32x3 input, 10 classes) built from the L1 Pallas kernels.
+
+This is the PULP-open case-study workload (§3.1): DORY deploys
+MobileNetV1 on the cluster, and the iDMA moves every layer's
+activations and weights between L2 and the TCDM while the cores compute.
+Here each layer is a separate AOT entry point so the Rust coordinator
+can execute them tile-by-tile over PJRT on buffers it physically moved
+through the simulated memory system.
+
+Layer schedule (all convs followed by ReLU; BN folded into weights):
+
+    l0 : conv3x3 s2   3 →  8   (32x32 → 16x16)   im2col + gemm kernel
+    l1 : dw3x3 s1 @ 16x16x8 ; pw  8 → 16
+    l2 : dw3x3 s2 → 8x8x16  ; pw 16 → 32
+    l3 : dw3x3 s1 @ 8x8x32  ; pw 32 → 32
+    l4 : dw3x3 s2 → 4x4x32  ; pw 32 → 64
+    l5 : dw3x3 s1 @ 4x4x64  ; pw 64 → 64
+    head: global avg pool → fc 64 → 10
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import dwconv, gemm, ref
+
+# (name, kind, params) — kind: dw (stride, H, W, C) / pw (HW, Cin, Cout)
+DW_LAYERS = [
+    ("dw1", 1, 16, 16, 8),
+    ("dw2", 2, 16, 16, 16),
+    ("dw3", 1, 8, 8, 32),
+    ("dw4", 2, 8, 8, 32),
+    ("dw5", 1, 4, 4, 64),
+]
+PW_LAYERS = [
+    ("pw1", 256, 8, 16),
+    ("pw2", 64, 16, 32),
+    ("pw3", 64, 32, 32),
+    ("pw4", 16, 32, 64),
+    ("pw5", 16, 64, 64),
+]
+
+
+def init_weights(seed=42):
+    """Deterministic float32 weights for every layer."""
+    rng = np.random.default_rng(seed)
+
+    def w(*shape):
+        fan_in = int(np.prod(shape[:-1])) or 1
+        return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+    ws = {"l0": w(27, 8)}
+    for name, _s, _h, _w, c in DW_LAYERS:
+        ws[name] = w(3, 3, c)
+    for name, _hw, cin, cout in PW_LAYERS:
+        ws[name] = w(cin, cout)
+    ws["fc"] = w(64, 10)
+    ws["fc_b"] = np.zeros(10, np.float32)
+    return ws
+
+
+def sample_input(seed=7):
+    """Deterministic 32x32x3 input."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((32, 32, 3)).astype(np.float32)
+
+
+def _relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def _im2col_3x3_s2(x):
+    """(H, W, C) → (H/2 * W/2, 9C) patch matrix for a stride-2 3x3 conv
+    with 'same'-style padding (pad 1 left/top)."""
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    ho, wo = h // 2, w // 2
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            win = lax.slice(
+                xp, (dy, dx, 0), (dy + (ho - 1) * 2 + 1, dx + (wo - 1) * 2 + 1, c), (2, 2, 1)
+            )
+            cols.append(win.reshape(ho * wo, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def l0(x, w0):
+    """Entry conv: 3x3 stride-2, 3→8, via im2col + the GEMM kernel."""
+    cols = _im2col_3x3_s2(x)  # (256, 27)
+    out = gemm.gemm(cols, w0)  # (256, 8)
+    return _relu(out).reshape(16, 16, 8)
+
+
+def dw_layer(x, w, stride):
+    """Depthwise stage: pad 1, dw conv (Pallas), ReLU."""
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    return _relu(dwconv.depthwise_conv3x3(xp, w, stride))
+
+
+def pw_layer(x, w):
+    """Pointwise stage: (H, W, Cin) → (H, W, Cout) via the GEMM kernel."""
+    h, wd, cin = x.shape
+    out = gemm.gemm(x.reshape(h * wd, cin), w)
+    return _relu(out).reshape(h, wd, w.shape[1])
+
+
+def head(x, wfc, bfc):
+    """Global average pool + fully connected (GEMM kernel) → logits."""
+    pooled = jnp.mean(x, axis=(0, 1), keepdims=False).reshape(1, -1)  # (1, 64)
+    return (gemm.gemm(pooled, wfc) + bfc[None, :]).reshape(-1)
+
+
+def forward(x, ws):
+    """Full forward pass through the Pallas-kernel layers."""
+    a = l0(x, jnp.asarray(ws["l0"]))
+    for (name, s, _h, _w, _c), (pname, _hw, _cin, _cout) in zip(DW_LAYERS, PW_LAYERS):
+        a = dw_layer(a, jnp.asarray(ws[name]), s)
+        a = pw_layer(a, jnp.asarray(ws[pname]))
+    return head(a, jnp.asarray(ws["fc"]), jnp.asarray(ws["fc_b"]))
+
+
+def forward_ref(x, ws):
+    """Oracle forward pass built from pure-jnp reference ops."""
+    cols = _im2col_3x3_s2(x)
+    a = _relu(ref.matmul(cols, jnp.asarray(ws["l0"]))).reshape(16, 16, 8)
+    for (name, s, _h, _w, _c), (pname, _hw, cin, cout) in zip(DW_LAYERS, PW_LAYERS):
+        xp = jnp.pad(a, ((1, 1), (1, 1), (0, 0)))
+        a = _relu(ref.depthwise_conv3x3(xp, jnp.asarray(ws[name]), s))
+        h, wd, _ = a.shape
+        a = _relu(ref.matmul(a.reshape(h * wd, cin), jnp.asarray(ws[pname]))).reshape(h, wd, cout)
+    pooled = jnp.mean(a, axis=(0, 1)).reshape(1, -1)
+    return (ref.matmul(pooled, jnp.asarray(ws["fc"])) + jnp.asarray(ws["fc_b"])[None, :]).reshape(-1)
+
+
+# Positional argument order of the `mb_full` AOT entry (weights cannot
+# travel as a dict through jax.jit.lower with named specs).
+FULL_ARG_ORDER = (
+    ["l0"]
+    + [n for n, *_ in DW_LAYERS]
+    + [n for n, *_ in PW_LAYERS]
+    + ["fc", "fc_b"]
+)
+
+
+def forward_flat(x, *flat_ws):
+    """`forward` with weights as positional arguments (AOT entry)."""
+    ws = dict(zip(FULL_ARG_ORDER, flat_ws))
+    return forward(x, ws)
+
+
+def full_specs():
+    """ShapeDtypeStructs for the `mb_full` entry, in argument order."""
+    import jax
+
+    shapes = {"l0": (27, 8), "fc": (64, 10), "fc_b": (10,)}
+    for name, _s, _h, _w, c in DW_LAYERS:
+        shapes[name] = (3, 3, c)
+    for name, _hw, cin, cout in PW_LAYERS:
+        shapes[name] = (cin, cout)
+    specs = [jax.ShapeDtypeStruct((32, 32, 3), jnp.float32)]
+    specs += [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in FULL_ARG_ORDER]
+    return specs
+
+
+def layer_macs():
+    """Multiply-accumulate counts per layer (drives the MAC/cycle metric
+    of §3.1)."""
+    macs = {"l0": 256 * 27 * 8}
+    for name, s, h, w, c in DW_LAYERS:
+        macs[name] = (h // s) * (w // s) * 9 * c
+    for name, hw, cin, cout in PW_LAYERS:
+        macs[name] = hw * cin * cout
+    macs["head"] = 64 * 10
+    return macs
+
+
+def total_macs():
+    """Whole-network MAC count."""
+    return sum(layer_macs().values())

@@ -1,0 +1,11 @@
+"""Shared pytest config: make the `compile` package importable when
+pytest runs from the repo root, and enable f64 (Manticore tiles are
+double precision) before jax initializes."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

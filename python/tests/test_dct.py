@@ -1,0 +1,40 @@
+"""DCT kernel vs oracle + mathematical properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dct, ref
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 32), seed=st.integers(0, 2**31))
+def test_matches_reference(b, seed):
+    x = _rand((b, 8, 8), seed)
+    np.testing.assert_allclose(dct.dct8x8(x), ref.dct8x8(x), rtol=1e-4, atol=1e-5)
+
+
+def test_orthonormal_basis():
+    d = np.asarray(ref.dct_matrix(8))
+    np.testing.assert_allclose(d @ d.T, np.eye(8), atol=1e-6)
+
+
+def test_energy_preservation():
+    # Orthonormal transform preserves the Frobenius norm.
+    x = _rand((4, 8, 8), 11)
+    y = dct.dct8x8(x)
+    np.testing.assert_allclose(
+        jnp.sum(x * x), jnp.sum(y * y), rtol=1e-4
+    )
+
+
+def test_constant_block_concentrates_dc():
+    x = jnp.ones((1, 8, 8), jnp.float32)
+    y = np.asarray(dct.dct8x8(x))
+    assert abs(y[0, 0, 0] - 8.0) < 1e-4  # DC = sqrt(64) * mean * ... = 8
+    assert np.abs(y).sum() - abs(y[0, 0, 0]) < 1e-3

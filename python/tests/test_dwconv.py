@@ -1,0 +1,44 @@
+"""Depthwise-conv Pallas kernel vs the lax.conv oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dwconv, ref
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    w=st.integers(4, 20),
+    c=st.sampled_from([1, 3, 8, 16]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_lax_conv(h, w, c, stride, seed):
+    x = _rand((h + 2, w + 2, c), seed)
+    k = _rand((3, 3, c), seed + 1)
+    out = dwconv.depthwise_conv3x3(x, k, stride)
+    expect = ref.depthwise_conv3x3(x, k, stride)
+    assert out.shape == expect.shape
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_identity_kernel_is_crop():
+    x = _rand((10, 10, 4), 3)
+    k = jnp.zeros((3, 3, 4), jnp.float32).at[1, 1, :].set(1.0)
+    out = dwconv.depthwise_conv3x3(x, k, 1)
+    np.testing.assert_allclose(out, x[1:-1, 1:-1, :], atol=1e-7)
+
+
+def test_mobilenet_shapes():
+    for (name, s, h, w, c) in [("dw1", 1, 16, 16, 8), ("dw2", 2, 16, 16, 16), ("dw4", 2, 8, 8, 32)]:
+        x = _rand((h + 2, w + 2, c), 5)
+        k = _rand((3, 3, c), 6)
+        out = dwconv.depthwise_conv3x3(x, k, s)
+        assert out.shape == (h // s, w // s, c), name

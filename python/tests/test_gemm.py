@@ -1,0 +1,61 @@
+"""L1 GEMM kernel vs the pure-jnp oracle — the core correctness signal,
+swept over shapes/tilings/dtypes with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, ref
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.float64, 1e-10)])
+def test_single_tile_exact(dtype, tol):
+    x = _rand((32, 16), dtype, 0)
+    y = _rand((16, 24), dtype, 1)
+    out = gemm.gemm(x, y)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    bm=st.sampled_from([8, 16]),
+    bn=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_tiled_matches_reference(mi, ni, ki, bm, bn, bk, seed):
+    m, n, k = mi * bm, ni * bn, ki * bk
+    x = _rand((m, k), jnp.float32, seed)
+    y = _rand((k, n), jnp.float32, seed + 1)
+    out = gemm.gemm(x, y, bm, bn, bk)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([24, 32, 48, 64]), seed=st.integers(0, 2**31))
+def test_manticore_f64_tiles(n, seed):
+    x = _rand((n, n), jnp.float64, seed)
+    y = _rand((n, n), jnp.float64, seed + 1)
+    np.testing.assert_allclose(gemm.gemm(x, y), ref.matmul(x, y), rtol=1e-12)
+
+
+def test_tile_mismatch_asserts():
+    x = _rand((30, 16), jnp.float32, 0)
+    y = _rand((16, 30), jnp.float32, 1)
+    with pytest.raises(AssertionError):
+        gemm.gemm(x, y, 8, 8, 8)  # 30 % 8 != 0
+
+
+def test_perf_model_helpers():
+    assert gemm.vmem_bytes(128, 128, 128, 4) == 3 * 128 * 128 * 4
+    assert gemm.mxu_utilization(128, 128, 128) == 1.0
+    assert gemm.mxu_utilization(64, 128, 128) == 0.5

@@ -1,0 +1,45 @@
+"""L2 model: Pallas-kernel forward vs pure-jnp oracle forward, shapes,
+MAC accounting."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def test_forward_matches_reference():
+    ws = model.init_weights()
+    x = jnp.asarray(model.sample_input())
+    got = model.forward(x, ws)
+    expect = model.forward_ref(x, ws)
+    assert got.shape == (10,)
+    np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_flat_equals_forward():
+    ws = model.init_weights()
+    x = jnp.asarray(model.sample_input())
+    flat = [jnp.asarray(ws[n]) for n in model.FULL_ARG_ORDER]
+    np.testing.assert_allclose(model.forward_flat(x, *flat), model.forward(x, ws), atol=1e-6)
+
+
+def test_deterministic_weights():
+    a = model.init_weights()
+    b = model.init_weights()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_layer_shapes_consistent():
+    # DW output channels feed the matching PW input channels.
+    for (dw, _s, _h, _w, c), (pw, _hw, cin, _cout) in zip(model.DW_LAYERS, model.PW_LAYERS):
+        assert c == cin, f"{dw} → {pw}"
+
+
+def test_mac_count_sane():
+    macs = model.layer_macs()
+    assert macs["l0"] == 256 * 27 * 8
+    assert macs["pw1"] == 256 * 8 * 16
+    total = model.total_macs()
+    assert total == sum(macs.values())
+    assert 300_000 < total < 2_000_000, total

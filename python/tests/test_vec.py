@@ -1,0 +1,33 @@
+"""Vector kernels (axpy, dot) vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, vec
+
+
+def _rand(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31))
+def test_axpy(n, seed):
+    a = jnp.asarray([float(seed % 13) - 6.0], jnp.float32)
+    x, y = _rand(n, seed), _rand(n, seed + 1)
+    np.testing.assert_allclose(vec.axpy(a, x, y), ref.axpy(a, x, y), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31))
+def test_dot(n, seed):
+    x, y = _rand(n, seed), _rand(n, seed + 1)
+    np.testing.assert_allclose(vec.dot(x, y), ref.dot(x, y), rtol=1e-3, atol=1e-3)
+
+
+def test_dot_orthogonal_is_zero():
+    x = jnp.asarray([1.0, 0.0, 2.0, 0.0], jnp.float32)
+    y = jnp.asarray([0.0, 5.0, 0.0, -1.0], jnp.float32)
+    assert float(vec.dot(x, y)[0]) == 0.0

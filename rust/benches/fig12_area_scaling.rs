@@ -1,0 +1,68 @@
+//! Fig. 12 (§4.1): back-end area scaling from the base configuration
+//! (32-b AW/DW, 2 outstanding) along AW, DW and NAx, for several
+//! protocol configurations — synthesis stand-in vs the NNLS-fitted
+//! linear model.
+
+use idma::backend::{BackendCfg, PortCfg};
+use idma::model::area::{default_sweep, synthesize_area, AreaModel};
+use idma::protocol::ProtocolKind;
+use idma::sim::bench::{bench, header};
+
+fn cfg(ports: &[ProtocolKind], aw: u32, dw: u64, nax: usize) -> BackendCfg {
+    BackendCfg {
+        aw_bits: aw,
+        dw_bytes: dw,
+        nax_r: nax,
+        nax_w: nax,
+        ports: ports.iter().map(|&p| PortCfg { protocol: p, mem: 0 }).collect(),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    header("Fig. 12 — area scaling (synthesized vs fitted model, GE)");
+    let model = AreaModel::fit(&default_sweep());
+    println!("model training error: {:.1}% (paper: <9 %)\n", model.train_error * 100.0);
+    let configs: [(&str, Vec<ProtocolKind>); 4] = [
+        ("AXI4", vec![ProtocolKind::Axi4]),
+        ("OBI", vec![ProtocolKind::Obi]),
+        ("TL-UH", vec![ProtocolKind::TileLinkUh]),
+        ("AXI4+OBI", vec![ProtocolKind::Axi4, ProtocolKind::Obi]),
+    ];
+    println!("(a) address width sweep (DW=32 b, NAx=2):");
+    for (name, ports) in &configs {
+        print!("  {name:<10}");
+        for aw in [16u32, 32, 48, 64] {
+            let c = cfg(ports, aw, 4, 2);
+            print!("  {:>6.0}/{:<6.0}", synthesize_area(&c).total(), model.predict(&c));
+        }
+        println!();
+    }
+    println!("(b) data width sweep (AW=32 b, NAx=2):");
+    for (name, ports) in &configs {
+        print!("  {name:<10}");
+        for dw in [2u64, 4, 8, 16, 32, 64] {
+            let c = cfg(ports, 32, dw, 2);
+            print!("  {:>6.0}/{:<6.0}", synthesize_area(&c).total(), model.predict(&c));
+        }
+        println!();
+    }
+    println!("(c) outstanding-transaction sweep (32 b):");
+    for (name, ports) in &configs {
+        print!("  {name:<10}");
+        for nax in [1usize, 2, 4, 8, 16, 32] {
+            let c = cfg(ports, 32, 4, nax);
+            print!("  {:>6.0}/{:<6.0}", synthesize_area(&c).total(), model.predict(&c));
+        }
+        println!();
+    }
+    let c32 = cfg(&[ProtocolKind::Axi4], 32, 4, 32);
+    println!(
+        "\n32 outstanding, 32-b config: {:.0} GE (paper: <25 kGE, ≈400 GE/txn)",
+        synthesize_area(&c32).total()
+    );
+    let r = bench("NNLS fit over default sweep", 1, 5, || {
+        let _ = AreaModel::fit(&default_sweep());
+    });
+    println!("\n{r}");
+}

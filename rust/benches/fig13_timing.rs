@@ -1,0 +1,66 @@
+//! Fig. 13 (§4.2): maximum clock frequency scaling of the back-end over
+//! AW / DW / NAx for six protocol configurations — synthesis stand-in
+//! vs the fitted inverse-linear timing model.
+
+use idma::backend::{BackendCfg, PortCfg};
+use idma::model::area::default_sweep;
+use idma::model::timing::{synthesize_fmax_ghz, TimingModel};
+use idma::protocol::ProtocolKind;
+use idma::sim::bench::{bench, header};
+
+fn cfg(ports: &[ProtocolKind], aw: u32, dw: u64, nax: usize) -> BackendCfg {
+    BackendCfg {
+        aw_bits: aw,
+        dw_bytes: dw,
+        nax_r: nax,
+        nax_w: nax,
+        ports: ports.iter().map(|&p| PortCfg { protocol: p, mem: 0 }).collect(),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    header("Fig. 13 — fmax scaling (GHz): synthesized / fitted model");
+    let model = TimingModel::fit(&default_sweep());
+    println!("model training error: {:.2}% (paper: <4 %)\n", model.train_error * 100.0);
+    let configs: [(&str, Vec<ProtocolKind>); 6] = [
+        ("OBI", vec![ProtocolKind::Obi]),
+        ("AXI4-Lite", vec![ProtocolKind::Axi4Lite]),
+        ("TL-UL", vec![ProtocolKind::TileLinkUl]),
+        ("TL-UH", vec![ProtocolKind::TileLinkUh]),
+        ("AXI4", vec![ProtocolKind::Axi4]),
+        ("AXI4+OBI+S", vec![ProtocolKind::Axi4, ProtocolKind::Obi, ProtocolKind::Axi4Stream]),
+    ];
+    println!("(b) data width sweep (AW=32 b, NAx=2):");
+    print!("  {:<12}", "config");
+    for dw in [2u64, 4, 8, 16, 32, 64] {
+        print!(" {:>11}", format!("{}b", dw * 8));
+    }
+    println!();
+    for (name, ports) in &configs {
+        print!("  {name:<12}");
+        for dw in [2u64, 4, 8, 16, 32, 64] {
+            let c = cfg(ports, 32, dw, 2);
+            print!(" {:>5.2}/{:<5.2}", synthesize_fmax_ghz(&c), model.predict_fmax_ghz(&c));
+        }
+        println!();
+    }
+    println!("(c) outstanding sweep (AXI4, 32 b):");
+    for nax in [1usize, 2, 4, 8, 16, 32, 64] {
+        let c = cfg(&[ProtocolKind::Axi4], 32, 4, nax);
+        println!(
+            "  NAx {nax:>3}: {:.2} GHz (model {:.2})",
+            synthesize_fmax_ghz(&c),
+            model.predict_fmax_ghz(&c)
+        );
+    }
+    println!("(a) address width sweep (AXI4, DW=32 b):");
+    for aw in [16u32, 32, 48, 64] {
+        let c = cfg(&[ProtocolKind::Axi4], aw, 4, 2);
+        println!("  AW {aw:>3}: {:.2} GHz — little effect, as the paper notes", synthesize_fmax_ghz(&c));
+    }
+    let r = bench("timing model fit", 1, 10, || {
+        let _ = TimingModel::fit(&default_sweep());
+    });
+    println!("\n{r}");
+}

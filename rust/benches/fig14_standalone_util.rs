@@ -1,0 +1,75 @@
+//! Fig. 14: bus utilization of the base-configuration back-end copying a
+//! 64 KiB transfer fragmented into 1 B – 1 KiB pieces, with varying
+//! outstanding transactions, in three memory systems (SRAM, RPC-DRAM,
+//! HBM). Also the §4.5 energy proxy (active cycles).
+
+use idma::backend::{Backend, BackendCfg, PortCfg};
+use idma::mem::{Endpoint, MemModel};
+use idma::protocol::ProtocolKind;
+use idma::sim::bench::{bench, header};
+use idma::transfer::Transfer1D;
+
+fn run(mem: MemModel, nax: usize, frag: u64) -> (f64, u64) {
+    let total = 64 * 1024u64;
+    let mut be = Backend::new(BackendCfg {
+        dw_bytes: 4,
+        nax_r: nax,
+        nax_w: nax,
+        desc_depth: 8,
+        ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+        ..Default::default()
+    })
+    .unwrap();
+    let mut mems = [Endpoint::new(mem)];
+    let n = total / frag;
+    let mut now = 0u64;
+    let mut submitted = 0u64;
+    while be.busy() || submitted < n {
+        while submitted < n {
+            let t = Transfer1D::copy(
+                submitted,
+                submitted * frag,
+                0x10_0000 + submitted * frag,
+                frag,
+                ProtocolKind::Axi4,
+            );
+            if !be.try_submit(now, t) {
+                break;
+            }
+            submitted += 1;
+        }
+        be.tick(now, &mut mems);
+        now += 1;
+        assert!(now < 50_000_000);
+    }
+    (be.stats.bus_utilization(4), be.stats.active_cycles())
+}
+
+fn main() {
+    header("Fig. 14 — standalone bus utilization (base config, 32-b)");
+    let systems: [(&str, fn(u64) -> MemModel); 3] =
+        [("SRAM", MemModel::sram), ("RPC-DRAM", MemModel::rpc_dram), ("HBM", MemModel::hbm)];
+    println!(
+        "{:<10} {:>6} | {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7}",
+        "system", "NAx", "1B", "4B", "16B", "64B", "128B", "512B", "1KiB"
+    );
+    for (name, m) in systems {
+        for nax in [2usize, 4, 8, 16, 32, 64] {
+            let mut row = format!("{name:<10} {nax:>6} |");
+            for frag in [1u64, 4, 16, 64, 128, 512, 1024] {
+                let (util, _) = run(m(4), nax, frag);
+                row += &format!(" {util:>7.3}");
+            }
+            println!("{row}");
+        }
+    }
+    println!("\n§4.5 energy proxy (active cycles, 64 KiB in 64 B pieces):");
+    for (name, m) in systems {
+        let (_, active) = run(m(4), 16, 64);
+        println!("  {name:<10} {active} active cycles (min possible: 16384)");
+    }
+    let r = bench("fig14 hot point (HBM, NAx=32, 16B)", 1, 5, || {
+        let _ = run(MemModel::hbm(4), 32, 16);
+    });
+    println!("\n{r}");
+}

@@ -1,0 +1,22 @@
+//! §3.2: ControlPULP — rt_3D autonomous sensor readout: ≈2200 core
+//! cycles saved per scheduling period, sDMAE ≈11 kGE.
+
+use idma::sim::bench::{bench, header};
+use idma::systems::control_pulp::ControlPulp;
+
+fn main() {
+    header("§3.2 — ControlPULP real-time mid-end");
+    let c = ControlPulp::default();
+    let r = c.run_hyperperiod();
+    println!("PFCT 500 µs / PVCT 50 µs; ctx switch 120, programming 100 cycles");
+    println!("  software-driven core cycles / period: {}", r.sw_core_cycles);
+    println!("  rt_3D-driven core cycles / period:    {}", r.rt_core_cycles);
+    println!("  SAVED: {} cycles (paper ≈2200)", r.saved);
+    println!("  autonomous launches observed: {} — data byte-exact: {}", r.launches, r.data_ok);
+    println!("  rt_3D mid-end area: {:.0} GE (paper ≈11 kGE @ 8 events/16 outst.)", r.rt3d_area_ge);
+    assert!(r.data_ok);
+    let b = bench("hyperperiod sim", 1, 5, || {
+        let _ = c.run_hyperperiod();
+    });
+    println!("\n{b}");
+}

@@ -1,0 +1,66 @@
+//! §4.3: launch latency — two cycles from descriptor to first read
+//! request (one without the legalizer), +1 per mid-end, 0 for the
+//! zero-latency tensor_ND. Measured on the cycle-accurate engine and
+//! cross-checked against the analytical model.
+
+use idma::backend::{Backend, BackendCfg, PortCfg};
+use idma::mem::{Endpoint, MemModel};
+use idma::model::latency::{backend_latency, launch_latency, MidEndKind};
+use idma::protocol::ProtocolKind;
+use idma::sim::bench::header;
+use idma::transfer::Transfer1D;
+
+fn measure(legalizer: bool, dw: u64, nax: usize) -> u64 {
+    let mut be = Backend::new(BackendCfg {
+        legalizer,
+        dw_bytes: dw,
+        nax_r: nax,
+        nax_w: nax,
+        ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+        ..Default::default()
+    })
+    .unwrap();
+    let mut mems = [Endpoint::new(MemModel::sram(dw))];
+    let submit_at = 5;
+    assert!(be.try_submit(submit_at, Transfer1D::copy(1, 0, 0x100, 64, ProtocolKind::Axi4)));
+    for now in submit_at + 1..100 {
+        be.tick(now, &mut mems);
+        if be.stats.read.requests > 0 {
+            return now - submit_at;
+        }
+    }
+    panic!("no request");
+}
+
+fn main() {
+    header("§4.3 — launch latency (measured on the cycle-accurate engine)");
+    println!("{:<44} {:>9} {:>7}", "configuration", "measured", "model");
+    for (dw, nax) in [(4u64, 2usize), (8, 8), (64, 32)] {
+        let m = measure(true, dw, nax);
+        let cfg = BackendCfg { legalizer: true, ..Default::default() };
+        println!(
+            "{:<44} {:>9} {:>7}",
+            format!("with legalizer (DW={}b, NAx={nax})", dw * 8),
+            m,
+            backend_latency(&cfg)
+        );
+        assert_eq!(m, 2, "latency independent of parameters");
+    }
+    let m = measure(false, 4, 2);
+    println!("{:<44} {:>9} {:>7}", "without legalizer", m, 1);
+    assert_eq!(m, 1);
+    let cfg = BackendCfg::default();
+    println!(
+        "{:<44} {:>9} {:>7}",
+        "+ zero-latency tensor_ND (analytical)",
+        "-",
+        launch_latency(&cfg, &[MidEndKind::TensorNdZeroLatency])
+    );
+    println!(
+        "{:<44} {:>9} {:>7}",
+        "+ rt_3D + tensor_ND (analytical)",
+        "-",
+        launch_latency(&cfg, &[MidEndKind::Rt3D, MidEndKind::TensorNd])
+    );
+    println!("\npaper: 2 cycles (1 w/o legalizer), +1 per mid-end, 0 for tensor_ND.");
+}

@@ -1,0 +1,69 @@
+//! Table 5 (§5): the "This Work" rows of the state-of-the-art
+//! comparison — areas of the five case-study engine configurations from
+//! the area model, against the published SoA numbers.
+
+use idma::backend::{BackendCfg, PortCfg};
+use idma::model::area::{frontend_area_ge, midend_area_ge, synthesize_area};
+use idma::protocol::ProtocolKind;
+use idma::sim::bench::header;
+
+fn be(aw: u32, dw: u64, nax: usize, ports: &[ProtocolKind]) -> f64 {
+    synthesize_area(&BackendCfg {
+        aw_bits: aw,
+        dw_bytes: dw,
+        nax_r: nax,
+        nax_w: nax,
+        ports: ports.iter().map(|&p| PortCfg { protocol: p, mem: 0 }).collect(),
+        ..Default::default()
+    })
+    .total()
+}
+
+fn main() {
+    header("Table 5 — This-Work configuration areas (GE)");
+    use ProtocolKind::*;
+    let manticore = be(48, 64, 32, &[Axi4, Obi])
+        + frontend_area_ge("inst_64")
+        + midend_area_ge("tensor_ND", 1, 0);
+    let mempool = 4.0 * be(32, 64, 16, &[Axi4, Obi])
+        + midend_area_ge("mp_split", 0, 0)
+        + 3.0 * midend_area_ge("mp_dist", 0, 0)
+        + frontend_area_ge("reg_32");
+    let pulp = be(32, 8, 16, &[Axi4, Obi])
+        + 10.0 * frontend_area_ge("reg_32_3d")
+        + midend_area_ge("rr_arbiter", 10, 0)
+        + midend_area_ge("tensor_ND", 2, 0);
+    let cheshire = be(64, 8, 8, &[Axi4]) + frontend_area_ge("desc_64");
+    let controlpulp = be(32, 4, 16, &[Axi4, Obi])
+        + frontend_area_ge("reg_32_rt_3d")
+        + midend_area_ge("rt_3D", 8, 16)
+        + midend_area_ge("tensor_ND", 2, 0);
+    let io_dma = synthesize_area(&BackendCfg {
+        aw_bits: 32,
+        dw_bytes: 4,
+        nax_r: 1,
+        nax_w: 1,
+        legalizer: false,
+        buffer_beats: 2,
+        ports: vec![PortCfg { protocol: Obi, mem: 0 }],
+        ..Default::default()
+    })
+    .total()
+        + frontend_area_ge("reg_32");
+    let per_backend = be(32, 64, 16, &[Axi4, Obi]);
+    let rows = [
+        ("Manticore-0432x2 (paper ≈75 kGE)", manticore),
+        ("MemPool, 4-backend total", mempool),
+        ("MemPool, per back-end (paper row ≈45 kGE)", per_backend),
+        ("PULP-open (paper ≈50 kGE)", pulp),
+        ("Cheshire (paper ≈60 kGE)", cheshire),
+        ("ControlPULP (paper ≈61 kGE)", controlpulp),
+        ("IO-DMA (paper ≈2 kGE)", io_dma),
+    ];
+    for (name, ge) in rows {
+        println!("  {name:<44} {ge:>9.0} GE");
+    }
+    println!("\nmodel estimates; Cheshire/ControlPULP deltas vs the paper stem from");
+    println!("system-level wrappers (CDC cuts, config buses) outside the model's scope.");
+    println!("architecture span: ≥2 kGE (minimal OBI) to HPC configs >1 GHz — Table 5 row.");
+}

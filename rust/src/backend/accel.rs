@@ -1,0 +1,227 @@
+//! In-stream accelerators (paper §2.3, Fig. 5 "✓").
+//!
+//! iDMA exposes a standardized hook on the byte stream inside the
+//! dataflow element, so operations can be performed *while the data is
+//! being moved* — the paper cites cDMA-style (de)compression and MT-DMA
+//! block transposition as prior art and provides the interface to plug
+//! such units in. We ship three reference accelerators:
+//!
+//! * [`BytewiseMap`] — streaming, zero-buffer (e.g. masking, ReLU on u8).
+//! * [`BlockTranspose`] — MT-DMA-style matrix transposition; requires the
+//!   SRAM-buffered ("fully buffered") dataflow element configuration.
+//! * [`RleCompress`] — cDMA-inspired zero-run-length compression of the
+//!   stream (models the activation-sparsity use case).
+
+/// A pluggable in-stream operation on the transferred byte stream.
+///
+/// Streaming accelerators transform chunk-by-chunk; whole-transfer
+/// accelerators (`needs_full_buffer() == true`) are handed the complete
+/// transfer payload at once and require the SRAM-buffer configuration.
+pub trait InStreamAccel: std::fmt::Debug {
+    /// Short name for configs/reports.
+    fn name(&self) -> &'static str;
+
+    /// True if the accelerator must observe the whole transfer at once
+    /// (engine must be configured `fully_buffered`).
+    fn needs_full_buffer(&self) -> bool {
+        false
+    }
+
+    /// Transform one chunk (streaming mode) or the whole payload
+    /// (full-buffer mode). Length may change (e.g. compression).
+    fn process(&mut self, bytes: Vec<u8>) -> Vec<u8>;
+
+    /// Reset per-transfer state (called between transfers).
+    fn reset(&mut self) {}
+}
+
+/// Streaming byte-wise map.
+pub struct BytewiseMap {
+    /// Applied to every byte.
+    pub f: fn(u8) -> u8,
+    name: &'static str,
+}
+
+impl BytewiseMap {
+    /// Create a named byte-wise map accelerator.
+    pub fn new(name: &'static str, f: fn(u8) -> u8) -> Self {
+        Self { f, name }
+    }
+}
+
+impl std::fmt::Debug for BytewiseMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BytewiseMap({})", self.name)
+    }
+}
+
+impl InStreamAccel for BytewiseMap {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn process(&mut self, mut bytes: Vec<u8>) -> Vec<u8> {
+        for b in &mut bytes {
+            *b = (self.f)(*b);
+        }
+        bytes
+    }
+}
+
+/// MT-DMA-style block transposition of a `rows × cols` matrix of
+/// `elem`-byte elements (the PULP-open configuration's "Block Transp."
+/// stream modification capability, Table 5).
+#[derive(Debug)]
+pub struct BlockTranspose {
+    /// Matrix rows.
+    pub rows: usize,
+    /// Matrix columns.
+    pub cols: usize,
+    /// Element size in bytes.
+    pub elem: usize,
+}
+
+impl InStreamAccel for BlockTranspose {
+    fn name(&self) -> &'static str {
+        "block_transpose"
+    }
+
+    fn needs_full_buffer(&self) -> bool {
+        true
+    }
+
+    fn process(&mut self, bytes: Vec<u8>) -> Vec<u8> {
+        let (r, c, e) = (self.rows, self.cols, self.elem);
+        assert_eq!(bytes.len(), r * c * e, "payload must be a whole {r}x{c} matrix");
+        let mut out = vec![0u8; bytes.len()];
+        for i in 0..r {
+            for j in 0..c {
+                let src = (i * c + j) * e;
+                let dst = (j * r + i) * e;
+                out[dst..dst + e].copy_from_slice(&bytes[src..src + e]);
+            }
+        }
+        out
+    }
+}
+
+/// cDMA-inspired zero-run-length compression: encodes runs of zero bytes
+/// as `0x00 <count u8>`; other bytes pass through, `0x00` in data is
+/// escaped as a run of length 1. Decompression is [`RleDecompress`].
+#[derive(Debug, Default)]
+pub struct RleCompress;
+
+impl InStreamAccel for RleCompress {
+    fn name(&self) -> &'static str {
+        "rle_compress"
+    }
+
+    fn needs_full_buffer(&self) -> bool {
+        true
+    }
+
+    fn process(&mut self, bytes: Vec<u8>) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bytes.len());
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == 0 {
+                let mut run = 0usize;
+                while i + run < bytes.len() && bytes[i + run] == 0 && run < 255 {
+                    run += 1;
+                }
+                out.push(0);
+                out.push(run as u8);
+                i += run;
+            } else {
+                out.push(bytes[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Inverse of [`RleCompress`].
+#[derive(Debug, Default)]
+pub struct RleDecompress;
+
+impl InStreamAccel for RleDecompress {
+    fn name(&self) -> &'static str {
+        "rle_decompress"
+    }
+
+    fn needs_full_buffer(&self) -> bool {
+        true
+    }
+
+    fn process(&mut self, bytes: Vec<u8>) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bytes.len() * 2);
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == 0 {
+                let run = *bytes.get(i + 1).expect("truncated RLE stream") as usize;
+                out.extend(std::iter::repeat_n(0u8, run));
+                i += 2;
+            } else {
+                out.push(bytes[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytewise_map_applies() {
+        let mut a = BytewiseMap::new("invert", |b| !b);
+        assert_eq!(a.process(vec![0x00, 0xFF, 0x0F]), vec![0xFF, 0x00, 0xF0]);
+        assert!(!a.needs_full_buffer());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut t = BlockTranspose { rows: 2, cols: 3, elem: 2 };
+        // 2x3 matrix of u16: [[1,2,3],[4,5,6]]
+        let m: Vec<u8> =
+            [1u16, 2, 3, 4, 5, 6].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let tr = t.process(m);
+        let vals: Vec<u16> =
+            tr.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+        assert_eq!(vals, vec![1, 4, 2, 5, 3, 6]);
+        // transposing back restores
+        let mut t2 = BlockTranspose { rows: 3, cols: 2, elem: 2 };
+        let back = t2.process(tr);
+        let vals: Vec<u16> =
+            back.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+        assert_eq!(vals, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn rle_roundtrip() {
+        let data = vec![1, 2, 0, 0, 0, 3, 0, 4, 4, 0, 0];
+        let mut c = RleCompress;
+        let mut d = RleDecompress;
+        let enc = c.process(data.clone());
+        assert!(enc.len() < data.len() + 2);
+        assert_eq!(d.process(enc), data);
+    }
+
+    #[test]
+    fn rle_compresses_sparse_streams() {
+        let data = vec![0u8; 1000];
+        let enc = RleCompress.process(data);
+        assert!(enc.len() <= 8, "1000 zeros → {} bytes", enc.len());
+    }
+
+    #[test]
+    fn rle_long_runs_split_at_255() {
+        let mut data = vec![0u8; 300];
+        data.push(7);
+        let enc = RleCompress.process(data.clone());
+        assert_eq!(RleDecompress.process(enc), data);
+    }
+}

@@ -1,0 +1,186 @@
+//! The dataflow element (paper Fig. 5): a byte-stream buffer decoupling
+//! the read from the write half of the transport layer.
+//!
+//! It applies protocol-legal back pressure at both ends, coalesces
+//! narrow read beats into full write beats, and hosts the optional
+//! in-stream accelerator. Chunks are tagged with the legalized-burst
+//! sequence number so the error handler can rewind the stream to a burst
+//! boundary on replay (§2.3).
+
+use std::collections::VecDeque;
+
+/// Byte-stream FIFO with per-chunk sequence tags and a byte-capacity
+/// bound (the "small FIFO buffer"; the SRAM-buffer configuration simply
+/// uses a transfer-sized capacity).
+#[derive(Debug, Default)]
+pub struct StreamBuffer {
+    /// (burst seq, transfer id, payload)
+    chunks: VecDeque<(u64, u64, Vec<u8>)>,
+    bytes: usize,
+    capacity: usize,
+    /// Spent chunk allocations, recycled to the read path so the steady
+    /// state allocates nothing per cycle (EXPERIMENTS.md §Perf).
+    spares: Vec<Vec<u8>>,
+}
+
+impl StreamBuffer {
+    /// Create a buffer bounded to `capacity` bytes.
+    pub fn new(capacity: usize) -> Self {
+        Self { chunks: VecDeque::new(), bytes: 0, capacity, spares: Vec::new() }
+    }
+
+    /// Take a recycled chunk allocation, if any (cleared, capacity kept).
+    pub fn take_spare(&mut self) -> Option<Vec<u8>> {
+        self.spares.pop()
+    }
+
+    /// Bytes currently buffered.
+    pub fn len(&self) -> usize {
+        self.bytes
+    }
+
+    /// True when no bytes are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.bytes == 0
+    }
+
+    /// Free space in bytes.
+    pub fn free(&self) -> usize {
+        self.capacity - self.bytes
+    }
+
+    /// Whether a chunk of `n` bytes fits (read-side `ready`).
+    pub fn can_push(&self, n: usize) -> bool {
+        self.bytes + n <= self.capacity
+    }
+
+    /// Push a chunk tagged with burst sequence `seq` and owner `tid`.
+    pub fn push(&mut self, seq: u64, tid: u64, data: Vec<u8>) {
+        debug_assert!(self.can_push(data.len()));
+        self.bytes += data.len();
+        self.chunks.push_back((seq, tid, data));
+    }
+
+    /// Pop up to `n` bytes, in stream order, across chunk boundaries
+    /// (this is where narrow read beats coalesce into full write beats).
+    pub fn pop_bytes(&mut self, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n.min(self.bytes));
+        self.pop_into(n, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::pop_bytes`]: appends into a
+    /// caller-owned scratch buffer (hot-path: one write beat per cycle).
+    pub fn pop_into(&mut self, n: usize, out: &mut Vec<u8>) {
+        let take = n.min(self.bytes);
+        let target = out.len() + take;
+        while out.len() < target {
+            let (_, _, front) = self.chunks.front_mut().expect("bytes accounted");
+            let need = target - out.len();
+            if front.len() <= need {
+                out.extend_from_slice(front);
+                self.bytes -= front.len();
+                let (_, _, mut spent) = self.chunks.pop_front().unwrap();
+                if self.spares.len() < 64 {
+                    spent.clear();
+                    self.spares.push(spent);
+                }
+            } else {
+                out.extend_from_slice(&front[..need]);
+                front.drain(..need);
+                self.bytes -= need;
+            }
+        }
+    }
+
+    /// Drop every buffered chunk with `seq >= from_seq` (error-handler
+    /// rewind: discard data from the faulting burst onwards).
+    pub fn drop_from_seq(&mut self, from_seq: u64) {
+        while let Some(&(seq, _, _)) = self.chunks.back() {
+            if seq >= from_seq {
+                let (_, _, data) = self.chunks.pop_back().unwrap();
+                self.bytes -= data.len();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Drop every buffered chunk belonging to transfer `tid` (abort
+    /// path: orphaned bytes must never be consumed by later transfers).
+    pub fn drop_tid(&mut self, tid: u64) {
+        let mut bytes = self.bytes;
+        self.chunks.retain(|(_, t, data)| {
+            if *t == tid {
+                bytes -= data.len();
+                false
+            } else {
+                true
+            }
+        });
+        self.bytes = bytes;
+    }
+
+    /// Clear all content (abort path).
+    pub fn clear(&mut self) {
+        self.chunks.clear();
+        self.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_order() {
+        let mut b = StreamBuffer::new(64);
+        b.push(0, 9, vec![1, 2, 3]);
+        b.push(1, 9, vec![4, 5]);
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.pop_bytes(4), vec![1, 2, 3, 4]);
+        assert_eq!(b.pop_bytes(4), vec![5]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let mut b = StreamBuffer::new(4);
+        assert!(b.can_push(4));
+        b.push(0, 9, vec![0; 4]);
+        assert!(!b.can_push(1));
+        b.pop_bytes(2);
+        assert!(b.can_push(2));
+        assert_eq!(b.free(), 2);
+    }
+
+    #[test]
+    fn drop_from_seq_rewinds_to_burst_boundary() {
+        let mut b = StreamBuffer::new(64);
+        b.push(0, 9, vec![1, 2]);
+        b.push(1, 9, vec![3, 4]);
+        b.push(2, 9, vec![5, 6]);
+        b.drop_from_seq(1);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.pop_bytes(10), vec![1, 2]);
+    }
+
+    #[test]
+    fn drop_tid_removes_only_owner() {
+        let mut b = StreamBuffer::new(64);
+        b.push(0, 1, vec![1, 2]);
+        b.push(1, 2, vec![3, 4]);
+        b.push(2, 1, vec![5]);
+        b.drop_tid(1);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.pop_bytes(10), vec![3, 4]);
+    }
+
+    #[test]
+    fn pop_more_than_available_returns_what_exists() {
+        let mut b = StreamBuffer::new(8);
+        b.push(0, 9, vec![9]);
+        assert_eq!(b.pop_bytes(100), vec![9]);
+        assert_eq!(b.pop_bytes(1), Vec::<u8>::new());
+    }
+}

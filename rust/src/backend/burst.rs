@@ -1,0 +1,39 @@
+//! Legalized burst descriptors — the unit the transport layer moves and
+//! the error handler replays (§2.3).
+
+use crate::protocol::ProtocolKind;
+use crate::sim::Cycle;
+
+/// One protocol-legal burst, produced by the transfer legalizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Burst {
+    /// Monotone sequence number within the engine's byte stream. In
+    /// coupled (error-handling) mode, read burst *i* and write burst *i*
+    /// cover the same byte range.
+    pub seq: u64,
+    /// Transfer this burst belongs to.
+    pub tid: u64,
+    /// Base address.
+    pub addr: u64,
+    /// Length in bytes (never zero).
+    pub len: u64,
+    /// Engine port index this burst uses.
+    pub port: usize,
+    /// Protocol of that port (cached for manager behaviour).
+    pub protocol: ProtocolKind,
+    /// Last burst of its transfer in this direction.
+    pub last: bool,
+}
+
+/// Completion record handed back to the front-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    /// Transfer ID.
+    pub tid: u64,
+    /// Cycle the last write response retired.
+    pub at: Cycle,
+    /// Whether the transfer was aborted by the error handler.
+    pub aborted: bool,
+    /// Number of bus errors encountered (replays/continues included).
+    pub errors: u32,
+}

@@ -1,0 +1,346 @@
+//! The transfer legalizer (paper Fig. 4).
+//!
+//! Accepts a 1D transfer and reshapes it into bursts every involved
+//! protocol supports: splitting at page boundaries, protocol burst-length
+//! caps, user burst caps (§2.3), bus-sized accesses for burst-less
+//! protocols and naturally-aligned power-of-two bursts for TileLink-UH.
+//! Modular *legalizer cores* compute the maximum legal length from the
+//! current cursor; the wrapper walks the transfer.
+//!
+//! In *coupled* mode (required by the error handler so replays are
+//! byte-range aligned), read and write bursts are split at the union of
+//! both directions' split points.
+
+use crate::protocol::{BurstRule, ProtocolKind};
+
+/// Maximum legal burst length starting at `addr`, for one direction.
+/// This is the "legalizer core" of Fig. 4: one per protocol family.
+pub fn max_legal_len(rule: BurstRule, addr: u64, remaining: u64, bus_bytes: u64) -> u64 {
+    debug_assert!(remaining > 0);
+    match rule {
+        BurstRule::SingleBeat => {
+            // One bus window: up to the next bus-width boundary.
+            let window_end = (addr / bus_bytes + 1) * bus_bytes;
+            (window_end - addr).min(remaining)
+        }
+        BurstRule::Paged { max_beats, max_bytes, page } => {
+            let page_end = (addr / page + 1) * page;
+            // `max_beats` bus beats from an unaligned start cover
+            // `max_beats * bus - misalignment` bytes.
+            let beat_cap = max_beats * bus_bytes - (addr % bus_bytes);
+            (page_end - addr).min(max_bytes).min(beat_cap).min(remaining)
+        }
+        BurstRule::PowerOfTwo { max_bytes } => {
+            // Largest naturally-aligned power-of-two block at `addr`.
+            let align = if addr == 0 { max_bytes } else { 1u64 << addr.trailing_zeros().min(63) };
+            let mut size = align.min(max_bytes).min(remaining.next_power_of_two());
+            while size > remaining {
+                size /= 2;
+            }
+            size.max(1)
+        }
+        BurstRule::Unlimited => remaining,
+    }
+}
+
+/// Split-point iterator state for one direction of one transfer.
+#[derive(Debug, Clone)]
+struct DirCursor {
+    rule: BurstRule,
+    addr: u64,
+    remaining: u64,
+    user_cap: u64,
+    bus: u64,
+}
+
+impl DirCursor {
+    fn next_len(&self) -> u64 {
+        let n = max_legal_len(self.rule, self.addr, self.remaining, self.bus).min(self.user_cap);
+        self.relegalize(n)
+    }
+
+    /// Clamping a legal length (user cap, coupled-mode min) can break
+    /// power-of-two rules; round back down to a legal size. A smaller
+    /// power of two at the same address stays naturally aligned.
+    fn relegalize(&self, n: u64) -> u64 {
+        match self.rule {
+            BurstRule::PowerOfTwo { .. } => prev_power_of_two(n),
+            _ => n,
+        }
+    }
+
+    fn advance(&mut self, n: u64) {
+        self.addr += n;
+        self.remaining -= n;
+    }
+}
+
+/// Largest power of two ≤ `n` (n ≥ 1).
+fn prev_power_of_two(n: u64) -> u64 {
+    debug_assert!(n >= 1);
+    1 << (63 - n.leading_zeros())
+}
+
+/// Streaming legalizer for one 1D transfer: yields `(read_len, write_len)`
+/// burst pairs. In decoupled mode the two directions split independently
+/// (lengths differ); in coupled mode both use the union of split points
+/// (lengths equal).
+#[derive(Debug, Clone)]
+pub struct Legalizer {
+    rd: DirCursor,
+    wr: DirCursor,
+    coupled: bool,
+}
+
+/// One legalizer step: how many bytes the next read and/or write burst
+/// covers. In decoupled mode one side may be `0` (that side has already
+/// been fully emitted).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LegalStep {
+    /// Next read burst length (0 = read side exhausted).
+    pub read: u64,
+    /// Next write burst length (0 = write side exhausted).
+    pub write: u64,
+}
+
+impl Legalizer {
+    /// Set up legalization of `len` bytes from `src`/`dst` with the given
+    /// protocols, bus width and optional user burst cap.
+    pub fn new(
+        src: u64,
+        dst: u64,
+        len: u64,
+        src_protocol: ProtocolKind,
+        dst_protocol: ProtocolKind,
+        bus_bytes: u64,
+        user_cap: Option<u64>,
+        coupled: bool,
+    ) -> Self {
+        let cap = user_cap.unwrap_or(u64::MAX).max(1);
+        Self {
+            rd: DirCursor {
+                rule: src_protocol.caps().burst,
+                addr: src,
+                remaining: len,
+                user_cap: cap,
+                bus: bus_bytes,
+            },
+            wr: DirCursor {
+                rule: dst_protocol.caps().burst,
+                addr: dst,
+                remaining: len,
+                user_cap: cap,
+                bus: bus_bytes,
+            },
+            coupled,
+        }
+    }
+
+    /// Whether all bursts in both directions have been emitted.
+    pub fn done(&self) -> bool {
+        self.rd.remaining == 0 && self.wr.remaining == 0
+    }
+
+    /// Current read cursor address (used for error reporting).
+    pub fn read_addr(&self) -> u64 {
+        self.rd.addr
+    }
+
+    /// Current write cursor address.
+    pub fn write_addr(&self) -> u64 {
+        self.wr.addr
+    }
+
+    /// True when the legalizer couples read/write boundaries.
+    pub fn is_coupled(&self) -> bool {
+        self.coupled
+    }
+
+    /// Read side exhausted?
+    pub fn read_done(&self) -> bool {
+        self.rd.remaining == 0
+    }
+
+    /// Write side exhausted?
+    pub fn write_done(&self) -> bool {
+        self.wr.remaining == 0
+    }
+
+    /// Emit the next read burst only (decoupled mode): the two
+    /// directions legalize independently, which is what lets the
+    /// transport layer keep reading while write bursts back-pressure.
+    pub fn step_read(&mut self) -> Option<u64> {
+        debug_assert!(!self.coupled, "coupled mode must step jointly");
+        if self.rd.remaining == 0 {
+            return None;
+        }
+        let n = self.rd.next_len();
+        self.rd.advance(n);
+        Some(n)
+    }
+
+    /// Emit the next write burst only (decoupled mode).
+    pub fn step_write(&mut self) -> Option<u64> {
+        debug_assert!(!self.coupled, "coupled mode must step jointly");
+        if self.wr.remaining == 0 {
+            return None;
+        }
+        let n = self.wr.next_len();
+        self.wr.advance(n);
+        Some(n)
+    }
+
+    /// Emit the next burst pair. Returns `None` when done.
+    pub fn step(&mut self) -> Option<LegalStep> {
+        if self.done() {
+            return None;
+        }
+        if self.coupled {
+            let mut n = self.rd.next_len().min(self.wr.next_len());
+            // The coupled minimum must stay legal on both sides.
+            n = self.wr.relegalize(self.rd.relegalize(n));
+            self.rd.advance(n);
+            self.wr.advance(n);
+            Some(LegalStep { read: n, write: n })
+        } else {
+            let r = if self.rd.remaining > 0 { self.rd.next_len() } else { 0 };
+            let w = if self.wr.remaining > 0 { self.wr.next_len() } else { 0 };
+            if r > 0 {
+                self.rd.advance(r);
+            }
+            if w > 0 {
+                self.wr.advance(w);
+            }
+            Some(LegalStep { read: r, write: w })
+        }
+    }
+
+    /// Convenience: run the state machine to completion, returning the
+    /// full burst lists `(read_lens, write_lens)`. Used by tests and by
+    /// baseline models that legalize in software.
+    pub fn split_all(mut self) -> (Vec<(u64, u64)>, Vec<(u64, u64)>) {
+        let mut rs = Vec::new();
+        let mut ws = Vec::new();
+        let (mut ra, mut wa) = (self.rd.addr, self.wr.addr);
+        while let Some(s) = self.step() {
+            if s.read > 0 {
+                rs.push((ra, s.read));
+                ra += s.read;
+            }
+            if s.write > 0 {
+                ws.push((wa, s.write));
+                wa += s.write;
+            }
+        }
+        (rs, ws)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::ProtocolKind as P;
+
+    fn lens(v: &[(u64, u64)]) -> Vec<u64> {
+        v.iter().map(|&(_, l)| l).collect()
+    }
+
+    fn check_invariants(bursts: &[(u64, u64)], base: u64, total: u64) {
+        // contiguous, non-overlapping, complete, never zero-length
+        let mut cur = base;
+        for &(a, l) in bursts {
+            assert_eq!(a, cur, "bursts must be contiguous");
+            assert!(l > 0, "no zero-length bursts");
+            cur = a + l;
+        }
+        assert_eq!(cur, base + total, "bursts must cover the transfer");
+    }
+
+    #[test]
+    fn axi_page_split() {
+        let (rs, ws) =
+            Legalizer::new(4096 - 64, 0, 256, P::Axi4, P::Axi4, 8, None, false).split_all();
+        check_invariants(&rs, 4096 - 64, 256);
+        check_invariants(&ws, 0, 256);
+        assert_eq!(lens(&rs), vec![64, 192], "must split at the 4 KiB page");
+        assert_eq!(lens(&ws), vec![256], "aligned write side stays whole");
+    }
+
+    #[test]
+    fn axi_beat_cap_narrow_bus() {
+        // 4-byte bus: 256 beats = 1 KiB < 4 KiB page → beat cap binds.
+        let (rs, _) = Legalizer::new(0, 0, 4096, P::Axi4, P::Axi4, 4, None, false).split_all();
+        check_invariants(&rs, 0, 4096);
+        assert_eq!(lens(&rs), vec![1024, 1024, 1024, 1024]);
+    }
+
+    #[test]
+    fn axi_beat_cap_unaligned() {
+        // Unaligned start: first burst must still be ≤ 256 beats.
+        let (rs, _) = Legalizer::new(2, 0, 4096, P::Axi4, P::Axi4, 4, None, false).split_all();
+        check_invariants(&rs, 2, 4096);
+        for &(a, l) in &rs {
+            let beats = (a + l).div_ceil(4) - a / 4;
+            assert!(beats <= 256, "burst at {a:#x} has {beats} beats");
+            // no page crossing
+            assert_eq!(a / 4096, (a + l - 1) / 4096);
+        }
+    }
+
+    #[test]
+    fn single_beat_protocols_decompose() {
+        for p in [P::Obi, P::Axi4Lite, P::TileLinkUl] {
+            let (rs, _) = Legalizer::new(3, 0, 17, p, P::Axi4, 4, None, false).split_all();
+            check_invariants(&rs, 3, 17);
+            assert_eq!(lens(&rs), vec![1, 4, 4, 4, 4], "{p}");
+        }
+    }
+
+    #[test]
+    fn tluh_power_of_two_natural_alignment() {
+        let (rs, _) = Legalizer::new(4, 0, 60, P::TileLinkUh, P::Axi4, 4, None, false).split_all();
+        check_invariants(&rs, 4, 60);
+        for &(a, l) in &rs {
+            assert!(l.is_power_of_two(), "len {l} at {a:#x}");
+            assert_eq!(a % l, 0, "burst at {a:#x} len {l} must be naturally aligned");
+        }
+        // 4..64: 4@4, 8@8, 16@16, 32@32 = 60 bytes in 4 bursts
+        assert_eq!(lens(&rs), vec![4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn user_cap_respected() {
+        let (rs, _) = Legalizer::new(0, 0, 256, P::Axi4, P::Axi4, 8, Some(64), false).split_all();
+        check_invariants(&rs, 0, 256);
+        assert!(lens(&rs).iter().all(|&l| l <= 64));
+    }
+
+    #[test]
+    fn unlimited_stays_whole() {
+        let (rs, ws) =
+            Legalizer::new(0, 0, 1 << 20, P::Axi4Stream, P::Axi4Stream, 8, None, false).split_all();
+        assert_eq!(lens(&rs), vec![1 << 20]);
+        assert_eq!(lens(&ws), vec![1 << 20]);
+    }
+
+    #[test]
+    fn coupled_mode_aligns_split_points() {
+        // src unaligned AXI (page splits at 4096), dst OBI single-beat:
+        // coupled bursts must be identical on both sides.
+        let mut lg = Legalizer::new(4090, 7, 100, P::Axi4, P::Obi, 4, None, true);
+        let mut covered = 0;
+        while let Some(s) = lg.step() {
+            assert_eq!(s.read, s.write);
+            assert!(s.read > 0);
+            covered += s.read;
+        }
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn init_source_is_unlimited() {
+        let (rs, ws) = Legalizer::new(0, 5, 4000, P::Init, P::Axi4, 8, None, false).split_all();
+        assert_eq!(lens(&rs), vec![4000], "init pattern source needs no splitting");
+        check_invariants(&ws, 5, 4000);
+    }
+}

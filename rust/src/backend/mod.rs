@@ -1,0 +1,1517 @@
+//! The iDMA **back-end** (paper §2.3, Figs. 3–5): in-order,
+//! one-dimensional, arbitrary-length transfers on the configured on-chip
+//! protocol ports.
+//!
+//! Composition (Fig. 3): an optional *transfer legalizer* reshapes 1D
+//! transfers into protocol-legal bursts; the mandatory *transport layer*
+//! moves the data through read managers → source shifter → *dataflow
+//! element* (with optional in-stream accelerator) → destination shifter →
+//! write managers; an optional *error handler* reacts to bus errors
+//! (continue / abort / replay).
+//!
+//! The cycle model honours the paper's contracts:
+//! * two cycles from descriptor acceptance to the first read request
+//!   (one without the legalizer) — §4.3;
+//! * at most one legalized burst per direction per cycle;
+//! * at most one data beat per direction per cycle on a port;
+//! * reads and writes fully decoupled through the dataflow element, with
+//!   `NAx` outstanding transactions tracked per direction;
+//! * no idle cycles between back-to-back transfers.
+
+mod accel;
+mod buffer;
+mod burst;
+mod legalizer;
+mod shifter;
+
+pub use accel::{BlockTranspose, BytewiseMap, InStreamAccel, RleCompress, RleDecompress};
+pub use buffer::StreamBuffer;
+pub use burst::{Burst, Completion};
+pub use legalizer::{max_legal_len, LegalStep, Legalizer};
+pub use shifter::{beat_capacity, beats, rotation};
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::error::{IdmaError, Result};
+use crate::mem::Endpoint;
+use crate::protocol::ProtocolKind;
+use crate::sim::stats::RunStats;
+use crate::sim::{Cycle, Fifo, XorShift64};
+use crate::transfer::{ErrorAction, InitPattern, Transfer1D};
+
+/// One protocol port of the back-end: a protocol plus the index of the
+/// memory endpoint it is attached to (into the endpoint slice passed to
+/// [`Backend::tick`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PortCfg {
+    /// Protocol spoken on this port.
+    pub protocol: ProtocolKind,
+    /// Endpoint index in the system's endpoint slice.
+    pub mem: usize,
+}
+
+/// Back-end configuration — the wrapper-module parameters of §3.6
+/// (address width, data width, outstanding transactions) plus the
+/// structural options of Fig. 3.
+#[derive(Debug, Clone)]
+pub struct BackendCfg {
+    /// Address width in bits (used by the area/timing models; the
+    /// simulator always computes on u64).
+    pub aw_bits: u32,
+    /// Data width in **bytes** (the bus moves up to this per beat).
+    pub dw_bytes: u64,
+    /// Outstanding read transactions tracked (NAx, read side).
+    pub nax_r: usize,
+    /// Outstanding write transactions tracked (NAx, write side).
+    pub nax_w: usize,
+    /// Dataflow-element buffer depth in beats (the "small FIFO").
+    pub buffer_beats: usize,
+    /// Instantiate the hardware transfer legalizer (without it, latency
+    /// drops to one cycle and software must guarantee legal transfers).
+    pub legalizer: bool,
+    /// Reject zero-length transfers (Fig. 4 option) instead of completing
+    /// them as no-ops.
+    pub reject_zero_length: bool,
+    /// Instantiate the error handler. Enables burst replay and couples
+    /// read/write burst boundaries so replays are range-aligned.
+    pub error_handling: bool,
+    /// Maximum replays of a single burst before the handler falls back to
+    /// abort (guards against hard faults under `ErrorAction::Replay`).
+    pub max_replays: u32,
+    /// Protocol ports (at least one; the paper's multi-protocol engines
+    /// have several).
+    pub ports: Vec<PortCfg>,
+    /// Depth of the descriptor input FIFO.
+    pub desc_depth: usize,
+    /// Owner tag used on shared endpoints.
+    pub owner: u32,
+}
+
+impl Default for BackendCfg {
+    /// The paper's *base configuration*: 32-bit address and data width,
+    /// two outstanding transactions (§4, Fig. 12).
+    fn default() -> Self {
+        Self {
+            aw_bits: 32,
+            dw_bytes: 4,
+            nax_r: 2,
+            nax_w: 2,
+            buffer_beats: 8,
+            legalizer: true,
+            reject_zero_length: false,
+            error_handling: false,
+            max_replays: 8,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            desc_depth: 2,
+            owner: 0,
+        }
+    }
+}
+
+impl BackendCfg {
+    /// First port speaking `p`, if any.
+    pub fn port_for(&self, p: ProtocolKind) -> Option<usize> {
+        self.ports.iter().position(|c| c.protocol == p)
+    }
+
+    /// Buffer capacity in bytes.
+    pub fn buffer_bytes(&self) -> usize {
+        self.buffer_beats * self.dw_bytes as usize
+    }
+}
+
+#[derive(Debug)]
+struct PortRt {
+    /// Next cycle the read-request channel is free.
+    r_slot: Cycle,
+    /// Next cycle the write-request channel is free (aliases `r_slot`
+    /// for protocols without split request channels).
+    w_slot: Cycle,
+}
+
+/// Pattern generator state for an in-flight Init transfer.
+#[derive(Debug)]
+struct InitGen {
+    seq: u64,
+    tid: u64,
+    remaining: u64,
+    counter: u8,
+    rng: Option<XorShift64>,
+    constant: Option<u8>,
+}
+
+impl InitGen {
+    fn new(seq: u64, tid: u64, len: u64, pattern: InitPattern) -> Self {
+        match pattern {
+            InitPattern::Constant(v) => {
+                Self { seq, tid, remaining: len, counter: 0, rng: None, constant: Some(v) }
+            }
+            InitPattern::Incrementing(start) => {
+                Self { seq, tid, remaining: len, counter: start, rng: None, constant: None }
+            }
+            InitPattern::Pseudorandom(seed) => Self {
+                seq,
+                tid,
+                remaining: len,
+                counter: 0,
+                rng: Some(XorShift64::new(seed)),
+                constant: None,
+            },
+        }
+    }
+
+    fn chunk(&mut self, n: u64) -> Vec<u8> {
+        let n = n.min(self.remaining) as usize;
+        let mut out = vec![0u8; n];
+        if let Some(c) = self.constant {
+            out.fill(c);
+        } else if let Some(rng) = self.rng.as_mut() {
+            rng.fill(&mut out);
+        } else {
+            for b in &mut out {
+                *b = self.counter;
+                self.counter = self.counter.wrapping_add(1);
+            }
+        }
+        self.remaining -= n as u64;
+        out
+    }
+}
+
+/// Per-transfer bookkeeping until completion.
+#[derive(Debug, Default)]
+struct Track {
+    errors: u32,
+    aborted: bool,
+    action: ErrorAction,
+    init: Option<InitPattern>,
+}
+
+/// Active transfer in the legalizer stage.
+struct ActiveTransfer {
+    t: Transfer1D,
+    lg: Legalizer,
+    src_port: Option<usize>,
+    dst_port: usize,
+    /// Deferred write-side legalizer (length-changing in-stream accel).
+    wlg: Option<Legalizer>,
+    defer_write: bool,
+    staging: Vec<u8>,
+    read_done: bool,
+}
+
+/// Write-burst progress.
+#[derive(Debug)]
+struct WriteProgress {
+    burst: Burst,
+    sent: u64,
+    /// Copy of the sent bytes (error handling: source for replays).
+    retained: Vec<u8>,
+    /// True when beats come from `retained` (write-error replay) rather
+    /// than the dataflow buffer.
+    replaying: bool,
+}
+
+/// A pending bus-error report (the paper's handler passes the legalized
+/// burst base address to the front-end).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ErrorReport {
+    /// Transfer the faulting burst belongs to.
+    pub tid: u64,
+    /// Legalized burst base address.
+    pub addr: u64,
+    /// Direction of the fault.
+    pub is_read: bool,
+    /// Action that was applied.
+    pub action: ErrorAction,
+}
+
+/// The iDMA back-end engine.
+pub struct Backend {
+    /// Static configuration.
+    pub cfg: BackendCfg,
+    desc_q: Fifo<Transfer1D>,
+    cur: Option<ActiveTransfer>,
+    bypass: Option<(Option<Burst>, Burst)>,
+    rq: Fifo<Burst>,
+    wq: Fifo<Burst>,
+    replay_r: VecDeque<Burst>,
+    replay_w: VecDeque<(Burst, Vec<u8>)>,
+    issued_reads: VecDeque<Burst>,
+    issued_writes: VecDeque<WriteProgress>,
+    cancelled_w: Vec<u64>,
+    buffer: StreamBuffer,
+    accel: Option<Box<dyn InStreamAccel>>,
+    init: Option<InitGen>,
+    wcur: Option<WriteProgress>,
+    ports_rt: Vec<PortRt>,
+    seq_r: u64,
+    seq_w: u64,
+    replay_counts: HashMap<u64, u32>,
+    /// Error-handler rewind: drain (and discard) all in-flight reads
+    /// before re-issuing from the faulting burst.
+    rewind: bool,
+    /// Aborted transfers whose in-flight beats are still draining
+    /// (tombstones: their late beats must keep being discarded).
+    aborted_tids: std::collections::HashSet<u64>,
+    track: HashMap<u64, Track>,
+    completions: Vec<Completion>,
+    error_log: Vec<ErrorReport>,
+    /// Reusable write-beat scratch (avoids one allocation per beat on
+    /// the hot path — EXPERIMENTS.md §Perf).
+    wscratch: Vec<u8>,
+    /// Aggregate statistics.
+    pub stats: RunStats,
+    started: bool,
+    submitted: u64,
+    completed: u64,
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Backend")
+            .field("cfg", &self.cfg)
+            .field("submitted", &self.submitted)
+            .field("completed", &self.completed)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Backend {
+    /// Build a back-end from a configuration.
+    pub fn new(cfg: BackendCfg) -> Result<Self> {
+        if cfg.ports.is_empty() {
+            return Err(IdmaError::Config("back-end needs at least one port".into()));
+        }
+        if !cfg.dw_bytes.is_power_of_two() {
+            return Err(IdmaError::Config(format!("data width {} not a power of two", cfg.dw_bytes)));
+        }
+        if cfg.nax_r == 0 || cfg.nax_w == 0 {
+            return Err(IdmaError::Config("NAx must be at least 1".into()));
+        }
+        let ports_rt = cfg.ports.iter().map(|_| PortRt { r_slot: 0, w_slot: 0 }).collect();
+        // Structural minimum of two beats: a misaligned stream can hold
+        // a full read beat plus a partial write residue at once (the
+        // RTL's source/destination shifters imply the same extra stage).
+        let buffer = StreamBuffer::new(cfg.buffer_bytes().max(2 * cfg.dw_bytes as usize));
+        Ok(Self {
+            desc_q: Fifo::new(cfg.desc_depth.max(1)),
+            rq: Fifo::new(cfg.nax_r.max(2)),
+            wq: Fifo::new(cfg.nax_w.max(2)),
+            replay_r: VecDeque::new(),
+            replay_w: VecDeque::new(),
+            issued_reads: VecDeque::new(),
+            issued_writes: VecDeque::new(),
+            cancelled_w: Vec::new(),
+            buffer,
+            accel: None,
+            init: None,
+            cur: None,
+            bypass: None,
+            wcur: None,
+            ports_rt,
+            seq_r: 0,
+            seq_w: 0,
+            replay_counts: HashMap::new(),
+            rewind: false,
+            aborted_tids: std::collections::HashSet::new(),
+            track: HashMap::new(),
+            completions: Vec::new(),
+            error_log: Vec::new(),
+            wscratch: Vec::with_capacity(cfg.dw_bytes as usize),
+            stats: RunStats::default(),
+            started: false,
+            submitted: 0,
+            completed: 0,
+            cfg,
+        })
+    }
+
+    /// Install an in-stream accelerator (replaces any previous one).
+    pub fn set_accel(&mut self, a: Box<dyn InStreamAccel>) -> Result<()> {
+        if a.needs_full_buffer() && self.cfg.error_handling {
+            return Err(IdmaError::Config(
+                "full-buffer accelerators are incompatible with burst replay".into(),
+            ));
+        }
+        self.accel = Some(a);
+        Ok(())
+    }
+
+    /// Whether the descriptor input FIFO has space this cycle.
+    pub fn can_submit(&self) -> bool {
+        self.desc_q.can_push()
+    }
+
+    /// Ready/valid input: offer a 1D transfer descriptor. Returns `false`
+    /// when the descriptor FIFO is full (back pressure).
+    pub fn try_submit(&mut self, now: Cycle, t: Transfer1D) -> bool {
+        if !self.desc_q.can_push() {
+            return false;
+        }
+        self.validate(&t).expect("illegal transfer submitted; validate() first");
+        if !self.started {
+            self.stats.start = now;
+            self.started = true;
+        }
+        self.submitted += 1;
+        self.desc_q.push(now, t)
+    }
+
+    /// Validate a descriptor against the engine configuration.
+    pub fn validate(&self, t: &Transfer1D) -> Result<()> {
+        let dst = t.dst_protocol;
+        if !dst.caps().can_write {
+            return Err(IdmaError::ProtocolViolation {
+                protocol: dst.caps().kind.name(),
+                reason: "destination protocol cannot write".into(),
+            });
+        }
+        if self.cfg.port_for(dst).is_none() {
+            return Err(IdmaError::Config(format!("no port speaks {dst}")));
+        }
+        if t.src_protocol == ProtocolKind::Init {
+            if t.opts.init.is_none() {
+                return Err(IdmaError::IllegalTransfer("Init source requires a pattern".into()));
+            }
+        } else {
+            if !t.src_protocol.caps().can_read {
+                return Err(IdmaError::ProtocolViolation {
+                    protocol: t.src_protocol.caps().kind.name(),
+                    reason: "source protocol cannot read".into(),
+                });
+            }
+            if self.cfg.port_for(t.src_protocol).is_none() {
+                return Err(IdmaError::Config(format!("no port speaks {}", t.src_protocol)));
+            }
+        }
+        if t.len == 0 && self.cfg.reject_zero_length {
+            return Err(IdmaError::IllegalTransfer("zero-length transfer rejected".into()));
+        }
+        Ok(())
+    }
+
+    /// Number of transfers accepted so far.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Number of transfers completed so far.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// True while any transfer is in flight.
+    pub fn busy(&self) -> bool {
+        self.completed < self.submitted
+    }
+
+    /// Drain the completion queue.
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Drain the error-report log (what the front-end would be told).
+    pub fn take_error_reports(&mut self) -> Vec<ErrorReport> {
+        std::mem::take(&mut self.error_log)
+    }
+
+    /// Progress fingerprint for watchdogs.
+    pub fn fingerprint(&self) -> u64 {
+        self.stats.read.payload_bytes ^ (self.stats.write.payload_bytes << 1) ^ (self.completed << 40)
+    }
+
+    /// Advance the engine by one cycle. `mems` is the system's endpoint
+    /// slice; ports index into it via [`PortCfg::mem`].
+    pub fn tick(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        // Stage order matters for the latency contract: the legalizer
+        // output becomes issueable in the *next* tick via the burst
+        // FIFOs, except for the no-legalizer bypass which issues in the
+        // same tick it converts.
+        self.retire_writes(now, mems);
+        self.write_stage(now, mems);
+        self.read_beat_stage(now, mems);
+        self.legalize_stage(now);
+        self.init_stage(now);
+        self.read_issue_stage(now, mems);
+    }
+
+    // ----------------------------------------------------------- stages
+
+    fn retire_writes(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        let Some(front) = self.issued_writes.front() else { return };
+        let mem = self.cfg.ports[front.burst.port].mem;
+        let owner = self.cfg.owner;
+        // Only retire our own responses on shared endpoints.
+        let ep = &mut mems[mem];
+        if ep.write_resp_owner(now) != Some(owner) {
+            return; // nothing due, or another engine's response is ahead
+        }
+        let Some(resp) = ep.pop_write_resp(now) else { return };
+        let wp = self.issued_writes.pop_front().unwrap();
+        if resp.error {
+            self.stats.bus_errors += 1;
+            self.handle_write_error(now, wp);
+        } else {
+            self.finish_write_burst(now, &wp.burst);
+        }
+    }
+
+    fn finish_write_burst(&mut self, now: Cycle, b: &Burst) {
+        if b.last && self.track.contains_key(&b.tid) {
+            self.complete_transfer(now, b.tid, false);
+        }
+    }
+
+    fn complete_transfer(&mut self, now: Cycle, tid: u64, aborted: bool) {
+        let Some(tr) = self.track.remove(&tid) else {
+            return; // already completed (e.g. aborted while in flight)
+        };
+        self.completions.push(Completion {
+            tid,
+            at: now,
+            aborted: aborted || tr.aborted,
+            errors: tr.errors,
+        });
+        self.completed += 1;
+        self.stats.transfers_done += 1;
+        self.stats.end = self.stats.end.max(now);
+    }
+
+    fn handle_write_error(&mut self, now: Cycle, wp: WriteProgress) {
+        let tid = wp.burst.tid;
+        if let Some(t) = self.track.get_mut(&tid) {
+            t.errors += 1;
+        }
+        let action = self.error_action_for(&wp.burst);
+        self.error_log.push(ErrorReport { tid, addr: wp.burst.addr, is_read: false, action });
+        match action {
+            ErrorAction::Replay => {
+                self.stats.replays += 1;
+                self.replay_w.push_back((wp.burst, wp.retained));
+            }
+            ErrorAction::Continue => self.finish_write_burst(now, &wp.burst),
+            ErrorAction::Abort => self.abort_transfer(now, tid),
+        }
+    }
+
+    fn error_action_for(&mut self, b: &Burst) -> ErrorAction {
+        if !self.cfg.error_handling {
+            return ErrorAction::Continue;
+        }
+        let configured = self.track.get(&b.tid).map(|t| t.action).unwrap_or(ErrorAction::Continue);
+        if configured == ErrorAction::Replay {
+            let count = self.replay_counts.entry(b.seq).or_insert(0);
+            *count += 1;
+            if *count > self.cfg.max_replays {
+                return ErrorAction::Abort;
+            }
+        }
+        configured
+    }
+
+    fn abort_transfer(&mut self, now: Cycle, tid: u64) {
+        if let Some(t) = self.track.get_mut(&tid) {
+            t.aborted = true;
+        }
+        // Tombstone until every in-flight beat of this transfer drained.
+        self.aborted_tids.insert(tid);
+        // Flush every queued burst of this transfer.
+        self.rq.retain(|b| b.tid != tid);
+        self.wq.retain(|b| b.tid != tid);
+        self.replay_r.retain(|b| b.tid != tid);
+        self.replay_w.retain(|(b, _)| b.tid != tid);
+        if let Some(cur) = &self.cur {
+            if cur.t.id == tid {
+                self.cur = None;
+            }
+        }
+        if let Some(wp) = &self.wcur {
+            if wp.burst.tid == tid {
+                self.wcur = None;
+            }
+        }
+        if let Some(ig) = &self.init {
+            let _ = ig;
+        }
+        // Discard every buffered byte belonging to this transfer —
+        // orphaned chunks must never be consumed by later transfers.
+        self.buffer.drop_tid(tid);
+        // In-flight reads of this tid will be drained and discarded by
+        // the read-beat stage (it checks `track[tid].aborted`).
+        self.complete_transfer(now, tid, true);
+    }
+
+    fn write_stage(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        // Acquire the next write burst if idle.
+        if self.wcur.is_none() {
+            let next = if let Some((b, data)) = self.replay_w.pop_front() {
+                let replaying = !data.is_empty();
+                Some(WriteProgress { burst: b, sent: 0, retained: data, replaying })
+            } else if let Some(&b) = self.wq.peek(now) {
+                // Skip bursts cancelled by a Continue'd read error.
+                if let Some(pos) = self.cancelled_w.iter().position(|&s| s == b.seq) {
+                    self.cancelled_w.swap_remove(pos);
+                    let b = self.wq.pop(now).unwrap();
+                    // Drop this burst's bytes if any arrived.
+                    self.finish_write_burst(now, &b);
+                    return;
+                }
+                // Only start once some data is available (protocol-legal
+                // back pressure: never hold the W channel without data).
+                let needed = b.len.min(self.cfg.dw_bytes) as usize;
+                if self.buffer.len() >= needed || self.track_aborted(b.tid) {
+                    self.wq.pop(now).map(|b| WriteProgress {
+                        burst: b,
+                        sent: 0,
+                        retained: Vec::new(),
+                        replaying: false,
+                    })
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+            if let Some(mut wp) = next {
+                if self.track_aborted(wp.burst.tid) {
+                    return;
+                }
+                // Issue the write request (AW / per-beat request).
+                let port = wp.burst.port;
+                let caps = self.cfg.ports[port].protocol.caps();
+                let slot = if caps.split_req_channels {
+                    self.ports_rt[port].w_slot
+                } else {
+                    self.ports_rt[port].r_slot.max(self.ports_rt[port].w_slot)
+                };
+                if slot > now || self.issued_writes.len() >= self.cfg.nax_w {
+                    // Request channel busy or NAx exhausted: retry next
+                    // cycle (the replay queue doubles as the retry slot).
+                    self.replay_w.push_front((wp.burst, std::mem::take(&mut wp.retained)));
+                    return;
+                }
+                let mem = self.cfg.ports[port].mem;
+                if !mems[mem].try_write_req(now, wp.burst.addr, wp.burst.len, self.cfg.owner) {
+                    self.replay_w.push_front((wp.burst, std::mem::take(&mut wp.retained)));
+                    return;
+                }
+                let slot_end = now + caps.req_cycles;
+                if caps.split_req_channels {
+                    self.ports_rt[port].w_slot = slot_end;
+                } else {
+                    self.ports_rt[port].r_slot = slot_end;
+                    self.ports_rt[port].w_slot = slot_end;
+                }
+                self.stats.write.requests += 1;
+                self.wcur = Some(wp);
+            }
+        }
+        // Stream one data beat.
+        let Some(wp) = self.wcur.as_mut() else { return };
+        let port = wp.burst.port;
+        let mem = self.cfg.ports[port].mem;
+        let owner = self.cfg.owner;
+        let replaying = wp.replaying;
+        let ep = &mut mems[mem];
+        if ep.write_beat_owner(now) != Some(owner) {
+            return;
+        }
+        let Some(cap) = ep.write_beat_capacity() else { return };
+        let cap = cap.min(wp.burst.len - wp.sent);
+        self.wscratch.clear();
+        if replaying {
+            // Replay path: beats come from the retained copy.
+            let off = wp.sent as usize;
+            self.wscratch.extend_from_slice(&wp.retained[off..off + cap as usize]);
+        } else {
+            if (self.buffer.len() as u64) < cap {
+                return; // wait for data (never strobe-pad mid-burst)
+            }
+            self.buffer.pop_into(cap as usize, &mut self.wscratch);
+        }
+        let data = &self.wscratch;
+        if ep.push_write_beat(now, data) {
+            wp.sent += data.len() as u64;
+            self.stats.write.beat(data.len() as u64);
+            if !replaying && self.cfg.error_handling {
+                wp.retained.extend_from_slice(data);
+            }
+            if wp.sent == wp.burst.len {
+                let wp = self.wcur.take().unwrap();
+                self.issued_writes.push_back(wp);
+            }
+        }
+    }
+
+    fn track_aborted(&self, tid: u64) -> bool {
+        self.aborted_tids.contains(&tid)
+            || self.track.get(&tid).map(|t| t.aborted).unwrap_or(false)
+    }
+
+    fn read_beat_stage(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        let Some(front) = self.issued_reads.front().copied() else {
+            self.rewind = false;
+            return;
+        };
+        let mem = self.cfg.ports[front.port].mem;
+        let owner = self.cfg.owner;
+        let full_buffer = self.accel.as_ref().map(|a| a.needs_full_buffer()).unwrap_or(false);
+        if mems[mem].read_beat_owner(now) != Some(owner) {
+            return;
+        }
+        // Exact back pressure: reserve space for the beat actually
+        // delivered (narrow edge beats must not deadlock a one-beat
+        // buffer). Rewind drains are discarded and need no space.
+        if !self.rewind && !full_buffer {
+            match mems[mem].peek_read_beat_len(now) {
+                Some(n) if self.buffer.can_push(n as usize) => {}
+                _ => return, // no beat, or legal back pressure
+            }
+        }
+        let spare = self.buffer.take_spare().unwrap_or_default();
+        let Some(beat) = mems[mem].take_read_beat_into(now, spare) else { return };
+        debug_assert_eq!(beat.owner, owner);
+        self.stats.read.beat(beat.data.len() as u64);
+        if self.rewind {
+            // Drain-and-discard: these bursts are already queued for
+            // re-issue behind the faulting one.
+            if beat.last {
+                self.issued_reads.pop_front();
+                if self.issued_reads.is_empty() {
+                    self.rewind = false;
+                }
+            }
+            return;
+        }
+        let aborted = self.track_aborted(front.tid);
+        if beat.error {
+            if beat.last {
+                self.issued_reads.pop_front();
+                self.stats.bus_errors += 1;
+                if let Some(t) = self.track.get_mut(&front.tid) {
+                    t.errors += 1;
+                }
+                let action = self.error_action_for(&front);
+                self.error_log.push(ErrorReport {
+                    tid: front.tid,
+                    addr: front.addr,
+                    is_read: true,
+                    action,
+                });
+                match action {
+                    ErrorAction::Replay => {
+                        self.stats.replays += 1;
+                        self.buffer.drop_from_seq(front.seq);
+                        // Re-issue the faulting burst AND every younger
+                        // in-flight burst (their data would land out of
+                        // order otherwise); drain the in-flight ones.
+                        let mut nq = VecDeque::with_capacity(
+                            1 + self.issued_reads.len() + self.replay_r.len(),
+                        );
+                        nq.push_back(front);
+                        nq.extend(self.issued_reads.iter().copied());
+                        nq.extend(self.replay_r.drain(..));
+                        self.replay_r = nq;
+                        self.rewind = !self.issued_reads.is_empty();
+                    }
+                    ErrorAction::Continue => {
+                        // Skip this burst; cancel the range-matched write
+                        // burst (coupled mode guarantees it exists).
+                        self.cancelled_w.push(front.seq);
+                    }
+                    ErrorAction::Abort => self.abort_transfer(now, front.tid),
+                }
+            }
+            return;
+        }
+        if aborted {
+            if beat.last {
+                self.issued_reads.pop_front();
+                if !self.issued_reads.iter().any(|b| b.tid == front.tid) {
+                    self.aborted_tids.remove(&front.tid); // fully drained
+                }
+            }
+            return; // drain and discard
+        }
+        // Push payload into the dataflow element (through the streaming
+        // accelerator if present) or into the full-buffer staging area.
+        if full_buffer {
+            if let Some(cur) = self.cur.as_mut() {
+                cur.staging.extend_from_slice(&beat.data);
+            }
+            if beat.last {
+                self.issued_reads.pop_front();
+                if let Some(cur) = self.cur.as_mut() {
+                    if front.last {
+                        cur.read_done = true;
+                    }
+                }
+            }
+            return;
+        }
+        let data = match self.accel.as_mut() {
+            Some(a) => {
+                let n = beat.data.len();
+                let out = a.process(beat.data);
+                assert_eq!(out.len(), n, "streaming accelerators must preserve length");
+                out
+            }
+            None => beat.data,
+        };
+        self.buffer.push(front.seq, front.tid, data);
+        if beat.last {
+            self.issued_reads.pop_front();
+        }
+    }
+
+    fn legalize_stage(&mut self, now: Cycle) {
+        // Full-buffer accel post-processing: once the read side finished,
+        // run the accelerator and set up the deferred write legalizer.
+        if let Some(cur) = self.cur.as_mut() {
+            if cur.defer_write && cur.read_done && cur.wlg.is_none() {
+                let payload = std::mem::take(&mut cur.staging);
+                let processed = self.accel.as_mut().expect("defer implies accel").process(payload);
+                let out_len = processed.len() as u64;
+                // SRAM-buffer configuration: the dataflow element holds
+                // the whole (processed) transfer.
+                self.buffer = StreamBuffer::new((out_len as usize).max(self.cfg.buffer_bytes()));
+                self.buffer.push(self.seq_w, cur.t.id, processed);
+                cur.wlg = Some(Legalizer::new(
+                    cur.t.src,
+                    cur.t.dst,
+                    out_len,
+                    ProtocolKind::Init, // read side unused
+                    cur.t.dst_protocol,
+                    self.cfg.dw_bytes,
+                    cur.t.opts.max_burst,
+                    false,
+                ));
+            }
+            // Emit deferred write bursts, one per cycle.
+            if let Some(wlg) = cur.wlg.as_mut() {
+                if self.wq.can_push() {
+                    let addr = wlg.write_addr();
+                    if let Some(step) = wlg.step() {
+                        if step.write > 0 {
+                            let last = wlg.done();
+                            let b = Burst {
+                                seq: self.seq_w,
+                                tid: cur.t.id,
+                                addr,
+                                len: step.write,
+                                port: cur.dst_port,
+                                protocol: self.cfg.ports[cur.dst_port].protocol,
+                                last,
+                            };
+                            self.seq_w += 1;
+                            self.wq.push(now, b);
+                            if last {
+                                self.cur = None;
+                            }
+                        }
+                    }
+                }
+                // While a deferred write is active nothing else legalizes.
+                return;
+            }
+        }
+
+        // Regular path: emit one burst pair per cycle, then load the next
+        // descriptor. A freshly loaded descriptor emits its first burst
+        // in the *same* cycle (the legalizer's single register stage),
+        // giving the §4.3 two-cycle contract; but never two burst pairs
+        // in one cycle.
+        let emitted = self.emit_step(now);
+        if self.cur.is_none() && self.bypass.is_none() {
+            if let Some(t) = self.desc_q.pop(now) {
+                self.load_transfer(now, t);
+                if !emitted {
+                    self.emit_step(now);
+                }
+            }
+        }
+    }
+
+    /// Emit up to one legalized burst per direction from the active
+    /// transfer. In decoupled mode (the default) the two directions
+    /// advance independently — a full write queue must never starve
+    /// read-burst emission, or the transport deadlocks waiting for data.
+    /// Returns whether anything was emitted; clears `cur` when the
+    /// transfer is fully legalized.
+    fn emit_step(&mut self, now: Cycle) -> bool {
+        let Some(cur) = self.cur.as_mut() else { return false };
+        let mut emitted = false;
+        if cur.lg.is_coupled() {
+            if !cur.lg.done() && self.rq.can_push() && self.wq.can_push() {
+                let ra = cur.lg.read_addr();
+                let wa = cur.lg.write_addr();
+                if let Some(step) = cur.lg.step() {
+                    emitted = true;
+                    let done = cur.lg.done();
+                    if step.read > 0 {
+                        let b = Burst {
+                            seq: self.seq_r,
+                            tid: cur.t.id,
+                            addr: ra,
+                            len: step.read,
+                            port: cur.src_port.unwrap_or(usize::MAX),
+                            protocol: cur.t.src_protocol,
+                            last: done || cur.lg.read_done(),
+                        };
+                        self.seq_r += 1;
+                        self.rq.push(now, b);
+                        self.stats.bursts_read += 1;
+                    }
+                    if step.write > 0 && !cur.defer_write {
+                        let b = Burst {
+                            seq: self.seq_w,
+                            tid: cur.t.id,
+                            addr: wa,
+                            len: step.write,
+                            port: cur.dst_port,
+                            protocol: cur.t.dst_protocol,
+                            last: done || cur.lg.write_done(),
+                        };
+                        self.seq_w += 1;
+                        self.wq.push(now, b);
+                        self.stats.bursts_write += 1;
+                    }
+                }
+            }
+        } else {
+            // Decoupled: each direction emits whenever its queue has room.
+            if !cur.lg.read_done() && self.rq.can_push() {
+                let ra = cur.lg.read_addr();
+                if let Some(n) = cur.lg.step_read() {
+                    emitted = true;
+                    let b = Burst {
+                        seq: self.seq_r,
+                        tid: cur.t.id,
+                        addr: ra,
+                        len: n,
+                        port: cur.src_port.unwrap_or(usize::MAX),
+                        protocol: cur.t.src_protocol,
+                        last: cur.lg.read_done(),
+                    };
+                    self.seq_r += 1;
+                    self.rq.push(now, b);
+                    self.stats.bursts_read += 1;
+                }
+            }
+            if !cur.lg.write_done() && !cur.defer_write && self.wq.can_push() {
+                let wa = cur.lg.write_addr();
+                if let Some(n) = cur.lg.step_write() {
+                    emitted = true;
+                    let b = Burst {
+                        seq: self.seq_w,
+                        tid: cur.t.id,
+                        addr: wa,
+                        len: n,
+                        port: cur.dst_port,
+                        protocol: cur.t.dst_protocol,
+                        last: cur.lg.write_done(),
+                    };
+                    self.seq_w += 1;
+                    self.wq.push(now, b);
+                    self.stats.bursts_write += 1;
+                }
+            } else if cur.defer_write && !cur.lg.write_done() {
+                // Deferred-write mode discards the write-side cursor
+                // (the post-accel legalizer regenerates it).
+                while cur.lg.step_write().is_some() {}
+            }
+        }
+        if cur.lg.done() && !cur.defer_write {
+            self.cur = None;
+        }
+        emitted
+    }
+
+    fn load_transfer(&mut self, now: Cycle, t: Transfer1D) {
+        self.track.insert(t.id, Track { action: t.opts.on_error, init: t.opts.init, ..Default::default() });
+        if t.len == 0 {
+            // Zero-length: completes as a no-op (the reject option is
+            // enforced at submit time).
+            self.complete_transfer(now, t.id, false);
+            return;
+        }
+        let src_port = if t.src_protocol == ProtocolKind::Init {
+            None
+        } else {
+            self.cfg.port_for(t.src_protocol)
+        };
+        let dst_port = self.cfg.port_for(t.dst_protocol).expect("validated at submit");
+        let full_buffer = self.accel.as_ref().map(|a| a.needs_full_buffer()).unwrap_or(false);
+
+        if !self.cfg.legalizer {
+            // Bypass: the transfer IS the burst (software guaranteed
+            // legality). Issueable in this same tick → 1 cycle latency.
+            let rb = src_port.map(|p| Burst {
+                seq: self.seq_r,
+                tid: t.id,
+                addr: t.src,
+                len: t.len,
+                port: p,
+                protocol: t.src_protocol,
+                last: true,
+            });
+            if rb.is_some() {
+                self.seq_r += 1;
+            }
+            let wb = Burst {
+                seq: self.seq_w,
+                tid: t.id,
+                addr: t.dst,
+                len: t.len,
+                port: dst_port,
+                protocol: t.dst_protocol,
+                last: true,
+            };
+            self.seq_w += 1;
+            self.stats.bursts_read += rb.is_some() as u64;
+            self.stats.bursts_write += 1;
+            if t.src_protocol == ProtocolKind::Init {
+                self.init = Some(InitGen::new(
+                    wb.seq,
+                    t.id,
+                    t.len,
+                    t.opts.init.expect("validated"),
+                ));
+            }
+            self.bypass = Some((rb, wb));
+            return;
+        }
+
+        let lg = Legalizer::new(
+            t.src,
+            t.dst,
+            t.len,
+            t.src_protocol,
+            t.dst_protocol,
+            self.cfg.dw_bytes,
+            t.opts.max_burst,
+            self.cfg.error_handling,
+        );
+        self.cur = Some(ActiveTransfer {
+            lg,
+            src_port,
+            dst_port,
+            wlg: None,
+            defer_write: full_buffer,
+            staging: Vec::new(),
+            read_done: t.src_protocol == ProtocolKind::Init && full_buffer,
+            t,
+        });
+    }
+
+    fn init_stage(&mut self, now: Cycle) {
+        let Some(ig) = self.init.as_mut() else { return };
+        if ig.remaining == 0 {
+            self.init = None;
+            return;
+        }
+        let n = self.cfg.dw_bytes.min(ig.remaining);
+        if !self.buffer.can_push(n as usize) {
+            return;
+        }
+        let (seq, tid) = (ig.seq, ig.tid);
+        let chunk = ig.chunk(n);
+        let done = ig.remaining == 0;
+        self.buffer.push(seq, tid, chunk);
+        let _ = now;
+        if done {
+            self.init = None;
+        }
+    }
+
+    fn read_issue_stage(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        // Bypass slot issues immediately (no-legalizer latency contract).
+        if self.bypass.is_some() && self.wq.can_push() {
+            let (rb, wb) = self.bypass.take().unwrap();
+            if let Some(b) = rb {
+                // Route through the replay queue (highest priority) so
+                // the issue logic below handles credits uniformly.
+                self.replay_r.push_front(b);
+            }
+            self.wq.push(now, wb);
+        }
+
+        if self.rewind || self.issued_reads.len() >= self.cfg.nax_r {
+            return; // rewind: drain all in-flight reads before re-issuing
+        }
+        // Priority: replays, then fresh bursts.
+        let from_replay = !self.replay_r.is_empty();
+        let next = if from_replay { self.replay_r.front().copied() } else { self.rq.peek(now).copied() };
+        let Some(b) = next else { return };
+        if self.track_aborted(b.tid) {
+            if from_replay {
+                self.replay_r.pop_front();
+            } else {
+                self.rq.pop(now);
+            }
+            return;
+        }
+        // Init "reads" convert into the pattern generator — only once
+        // every older in-flight read burst has drained, and blocking
+        // younger memory reads while active: the byte stream through
+        // the dataflow element must stay in burst order.
+        if b.protocol == ProtocolKind::Init {
+            if self.init.is_none() && self.issued_reads.is_empty() {
+                if from_replay {
+                    self.replay_r.pop_front();
+                } else {
+                    self.rq.pop(now);
+                }
+                let pattern = self
+                    .track
+                    .get(&b.tid)
+                    .and_then(|t| t.init)
+                    .unwrap_or(InitPattern::Constant(0));
+                self.init = Some(InitGen::new(b.seq, b.tid, b.len, pattern));
+            }
+            return;
+        }
+        if self.init.is_some() {
+            return; // pattern generator active: keep the stream in order
+        }
+        // In-order stream merge rule: do not interleave beats of bursts
+        // from different ports (switching is free once drained).
+        if let Some(back) = self.issued_reads.back() {
+            if back.port != b.port {
+                return;
+            }
+        }
+        let port = b.port;
+        let caps = self.cfg.ports[port].protocol.caps();
+        let slot = if caps.split_req_channels {
+            self.ports_rt[port].r_slot
+        } else {
+            self.ports_rt[port].r_slot.max(self.ports_rt[port].w_slot)
+        };
+        if slot > now {
+            return;
+        }
+        let mem = self.cfg.ports[port].mem;
+        if !mems[mem].try_read_req(now, b.addr, b.len, self.cfg.owner) {
+            return;
+        }
+        let slot_end = now + caps.req_cycles;
+        if caps.split_req_channels {
+            self.ports_rt[port].r_slot = slot_end;
+        } else {
+            self.ports_rt[port].r_slot = slot_end;
+            self.ports_rt[port].w_slot = slot_end;
+        }
+        self.stats.read.requests += 1;
+        if from_replay {
+            self.replay_r.pop_front();
+        } else {
+            self.rq.pop(now);
+        }
+        self.issued_reads.push_back(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{ErrorInjector, MemModel};
+    use crate::sim::Watchdog;
+
+    /// Drive a backend over endpoints until all transfers complete.
+    fn run(be: &mut Backend, mems: &mut [Endpoint], max_cycles: u64) -> u64 {
+        let mut wd = Watchdog::new(10_000);
+        for now in 0..max_cycles {
+            be.tick(now, mems);
+            if !be.busy() {
+                return now;
+            }
+            assert!(!wd.check(now, be.fingerprint()), "deadlock at cycle {now}");
+        }
+        panic!("did not finish in {max_cycles} cycles");
+    }
+
+    fn axi_backend(dw: u64, nax: usize) -> Backend {
+        Backend::new(BackendCfg {
+            dw_bytes: dw,
+            nax_r: nax,
+            nax_w: nax,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn sram(dw: u64) -> Endpoint {
+        Endpoint::new(MemModel::sram(dw))
+    }
+
+    #[test]
+    fn simple_copy_byte_exact() {
+        let mut be = axi_backend(4, 4);
+        let mut m = [sram(4)];
+        let src: Vec<u8> = (0..=255).collect();
+        m[0].data.write(0x1000, &src);
+        assert!(be.try_submit(0, Transfer1D::copy(1, 0x1000, 0x8000, 256, ProtocolKind::Axi4)));
+        run(&mut be, &mut m, 100_000);
+        assert_eq!(m[0].data.read_vec(0x8000, 256), src);
+        let c = be.take_completions();
+        assert_eq!(c.len(), 1);
+        assert!(!c[0].aborted);
+    }
+
+    #[test]
+    fn unaligned_copy_byte_exact_all_offsets() {
+        // The shifter path: every src/dst offset combination must be exact.
+        for so in 0..4u64 {
+            for do_ in 0..4u64 {
+                let mut be = axi_backend(4, 4);
+                let mut m = [sram(4)];
+                let src: Vec<u8> = (0..61).map(|i| (i * 7 + 3) as u8).collect();
+                m[0].data.write(0x100 + so, &src);
+                let t = Transfer1D::copy(1, 0x100 + so, 0x900 + do_, 61, ProtocolKind::Axi4);
+                assert!(be.try_submit(0, t));
+                run(&mut be, &mut m, 100_000);
+                assert_eq!(
+                    m[0].data.read_vec(0x900 + do_, 61),
+                    src,
+                    "src offset {so}, dst offset {do_}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn latency_contract_two_cycles_with_legalizer() {
+        let mut be = axi_backend(4, 4);
+        let mut m = [sram(4)];
+        // Submit at cycle 5 → first read request must be issued at cycle 7.
+        assert!(be.try_submit(5, Transfer1D::copy(1, 0, 0x100, 64, ProtocolKind::Axi4)));
+        for now in 6..100 {
+            be.tick(now, &mut m);
+            if be.stats.read.requests > 0 {
+                assert_eq!(now, 7, "read request must be issued exactly 2 cycles after submit");
+                return;
+            }
+        }
+        panic!("no read request issued");
+    }
+
+    #[test]
+    fn latency_contract_one_cycle_without_legalizer() {
+        let mut be = Backend::new(BackendCfg {
+            legalizer: false,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        })
+        .unwrap();
+        let mut m = [sram(4)];
+        assert!(be.try_submit(5, Transfer1D::copy(1, 0, 0x100, 16, ProtocolKind::Axi4)));
+        for now in 6..100 {
+            be.tick(now, &mut m);
+            if be.stats.read.requests > 0 {
+                assert_eq!(now, 6, "read request must be issued 1 cycle after submit");
+                return;
+            }
+        }
+        panic!("no read request issued");
+    }
+
+    #[test]
+    fn init_pattern_constant() {
+        let mut be = axi_backend(4, 4);
+        let mut m = [sram(4)];
+        let t = Transfer1D::init(1, 0x200, 32, InitPattern::Constant(0xAB), ProtocolKind::Axi4);
+        assert!(be.try_submit(0, t));
+        run(&mut be, &mut m, 100_000);
+        assert_eq!(m[0].data.read_vec(0x200, 32), vec![0xAB; 32]);
+    }
+
+    #[test]
+    fn init_pattern_incrementing() {
+        let mut be = axi_backend(8, 4);
+        let mut m = [sram(8)];
+        let t = Transfer1D::init(1, 0x203, 40, InitPattern::Incrementing(5), ProtocolKind::Axi4);
+        assert!(be.try_submit(0, t));
+        run(&mut be, &mut m, 100_000);
+        let expect: Vec<u8> = (0..40).map(|i| (5 + i) as u8).collect();
+        assert_eq!(m[0].data.read_vec(0x203, 40), expect);
+    }
+
+    #[test]
+    fn init_pattern_pseudorandom_deterministic() {
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            let mut be = axi_backend(4, 4);
+            let mut m = [sram(4)];
+            let t = Transfer1D::init(1, 0, 64, InitPattern::Pseudorandom(77), ProtocolKind::Axi4);
+            assert!(be.try_submit(0, t));
+            run(&mut be, &mut m, 100_000);
+            out.push(m[0].data.read_vec(0, 64));
+        }
+        assert_eq!(out[0], out[1]);
+        assert!(out[0].iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn cross_protocol_axi_to_obi() {
+        let mut be = Backend::new(BackendCfg {
+            ports: vec![
+                PortCfg { protocol: ProtocolKind::Axi4, mem: 0 },
+                PortCfg { protocol: ProtocolKind::Obi, mem: 1 },
+            ],
+            nax_r: 8,
+            nax_w: 8,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut m = [sram(4), Endpoint::new(MemModel::tcdm(4))];
+        let src: Vec<u8> = (0..100).map(|i| i as u8 ^ 0x5A).collect();
+        m[0].data.write(0x40, &src);
+        let mut t = Transfer1D::copy(9, 0x40, 0x10, 100, ProtocolKind::Axi4);
+        t.dst_protocol = ProtocolKind::Obi;
+        assert!(be.try_submit(0, t));
+        run(&mut be, &mut m, 100_000);
+        assert_eq!(m[1].data.read_vec(0x10, 100), src);
+    }
+
+    #[test]
+    fn back_to_back_transfers_no_idle() {
+        // Aligned bus-sized stream of transfers: the engine must keep the
+        // write channel saturated once primed (paper: "no idle time
+        // between transactions").
+        let mut be = axi_backend(4, 16);
+        let mut m = [sram(4)];
+        let n = 64u64;
+        for i in 0..n {
+            m[0].data.write_u32(i * 4, i as u32);
+        }
+        for i in 0..n {
+            // one bus word per transfer
+            let t = Transfer1D::copy(i, i * 4, 0x4000 + i * 4, 4, ProtocolKind::Axi4);
+            let mut now = 0;
+            while !be.try_submit(now, t) {
+                be.tick(now, &mut m);
+                now += 1;
+            }
+        }
+        // drive to completion
+        let mut now = 0;
+        while be.busy() {
+            be.tick(now, &mut m);
+            now += 1;
+            assert!(now < 10_000);
+        }
+        let util = be.stats.bus_utilization(4);
+        assert!(util > 0.85, "bus utilization {util} too low for bus-sized transfers");
+    }
+
+    #[test]
+    fn utilization_increases_with_outstanding() {
+        // Fig. 14 mechanism: deeper NAx hides more latency.
+        let mut utils = Vec::new();
+        for nax in [1usize, 4, 16] {
+            let mut be = axi_backend(4, nax);
+            let mut m = [Endpoint::new(MemModel::custom("deep", 50, 64, 4))];
+            for i in 0..64u64 {
+                let t = Transfer1D::copy(i, i * 16, 0x8000 + i * 16, 16, ProtocolKind::Axi4);
+                let mut now = 0;
+                while !be.try_submit(now, t) {
+                    be.tick(now, &mut m);
+                    now += 1;
+                }
+            }
+            let mut now = 0;
+            while be.busy() {
+                be.tick(now, &mut m);
+                now += 1;
+                assert!(now < 100_000);
+            }
+            utils.push(be.stats.bus_utilization(4));
+        }
+        assert!(utils[0] < utils[1] && utils[1] < utils[2], "{utils:?}");
+    }
+
+    #[test]
+    fn error_replay_recovers_transfer() {
+        let mut be = Backend::new(BackendCfg {
+            error_handling: true,
+            nax_r: 4,
+            nax_w: 4,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        })
+        .unwrap();
+        let mut m = [sram(4)];
+        let src: Vec<u8> = (0..200).map(|i| i as u8).collect();
+        m[0].data.write(0x1000, &src);
+        // Transient fault: the first two read attempts of bursts touching
+        // 0x1040 fail, then the fault clears (replay succeeds).
+        m[0].inject = Some(ErrorInjector::transient(0x1040, 0x1041, 2));
+        let mut t = Transfer1D::copy(3, 0x1000, 0x8000, 200, ProtocolKind::Axi4);
+        t.opts.on_error = ErrorAction::Replay;
+        t.opts.max_burst = Some(32); // several bursts → rewind path exercised
+        assert!(be.try_submit(0, t));
+        run(&mut be, &mut m, 100_000);
+        let c = be.take_completions();
+        assert_eq!(c.len(), 1);
+        assert!(!c[0].aborted);
+        assert!(c[0].errors >= 1);
+        assert!(be.stats.replays >= 1);
+        assert_eq!(m[0].data.read_vec(0x8000, 200), src, "replay must restore byte exactness");
+    }
+
+    #[test]
+    fn error_abort_on_exhausted_replays() {
+        let mut be = Backend::new(BackendCfg {
+            error_handling: true,
+            max_replays: 3,
+            nax_r: 4,
+            nax_w: 4,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        })
+        .unwrap();
+        let mut m = [sram(4)];
+        m[0].inject = Some(ErrorInjector { ranges: vec![(0x50, 0x51)], ..Default::default() });
+        let mut t = Transfer1D::copy(3, 0x40, 0x8000, 64, ProtocolKind::Axi4);
+        t.opts.on_error = ErrorAction::Replay;
+        assert!(be.try_submit(0, t));
+        run(&mut be, &mut m, 200_000);
+        let c = be.take_completions();
+        assert_eq!(c.len(), 1);
+        assert!(c[0].aborted, "permanent fault + replay cap must abort");
+    }
+
+    #[test]
+    fn error_continue_skips_faulting_burst() {
+        let mut be = Backend::new(BackendCfg {
+            error_handling: true,
+            nax_r: 4,
+            nax_w: 4,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        })
+        .unwrap();
+        let mut m = [sram(4)];
+        let src: Vec<u8> = (1..=100).collect();
+        m[0].data.write(0x0, &src);
+        m[0].inject = Some(ErrorInjector { ranges: vec![(0x10, 0x11)], ..Default::default() });
+        let mut t = Transfer1D::copy(3, 0x0, 0x8000, 100, ProtocolKind::Axi4);
+        t.opts.on_error = ErrorAction::Continue;
+        t.opts.max_burst = Some(16); // bursts: [0,16) [16,32) ... — only [16,32) faults
+        assert!(be.try_submit(0, t));
+        run(&mut be, &mut m, 100_000);
+        let c = be.take_completions();
+        assert_eq!(c.len(), 1);
+        assert!(!c[0].aborted);
+        assert!(c[0].errors >= 1);
+        // Bytes outside the skipped burst must be intact.
+        let out = m[0].data.read_vec(0x8000, 100);
+        assert_eq!(&out[..16], &src[..16], "head before faulting burst intact");
+        assert_eq!(&out[32..], &src[32..], "tail after faulting burst intact");
+    }
+
+    #[test]
+    fn streaming_accel_applies_bytewise() {
+        let mut be = axi_backend(4, 4);
+        be.set_accel(Box::new(BytewiseMap::new("invert", |b| !b))).unwrap();
+        let mut m = [sram(4)];
+        let src: Vec<u8> = (0..64).map(|i| i as u8).collect();
+        m[0].data.write(0, &src);
+        assert!(be.try_submit(0, Transfer1D::copy(1, 0, 0x100, 64, ProtocolKind::Axi4)));
+        run(&mut be, &mut m, 100_000);
+        let expect: Vec<u8> = src.iter().map(|&b| !b).collect();
+        assert_eq!(m[0].data.read_vec(0x100, 64), expect);
+    }
+
+    #[test]
+    fn full_buffer_accel_transpose() {
+        let mut be = axi_backend(4, 4);
+        be.set_accel(Box::new(BlockTranspose { rows: 4, cols: 8, elem: 1 })).unwrap();
+        let mut m = [sram(4)];
+        let src: Vec<u8> = (0..32).collect();
+        m[0].data.write(0, &src);
+        assert!(be.try_submit(0, Transfer1D::copy(1, 0, 0x100, 32, ProtocolKind::Axi4)));
+        run(&mut be, &mut m, 100_000);
+        let out = m[0].data.read_vec(0x100, 32);
+        for i in 0..4 {
+            for j in 0..8 {
+                assert_eq!(out[j * 4 + i], src[i * 8 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_length_completes_as_noop() {
+        let mut be = axi_backend(4, 4);
+        let mut m = [sram(4)];
+        assert!(be.try_submit(0, Transfer1D::copy(1, 0, 0x100, 0, ProtocolKind::Axi4)));
+        run(&mut be, &mut m, 1_000);
+        assert_eq!(be.take_completions().len(), 1);
+    }
+
+    #[test]
+    fn zero_length_rejected_when_configured() {
+        let be = Backend::new(BackendCfg {
+            reject_zero_length: true,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        })
+        .unwrap();
+        let t = Transfer1D::copy(1, 0, 0x100, 0, ProtocolKind::Axi4);
+        assert!(be.validate(&t).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_protocol_port() {
+        let be = axi_backend(4, 2);
+        let mut t = Transfer1D::copy(1, 0, 0x100, 8, ProtocolKind::Axi4);
+        t.dst_protocol = ProtocolKind::Obi;
+        assert!(be.validate(&t).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_init_destination() {
+        let be = axi_backend(4, 2);
+        let mut t = Transfer1D::copy(1, 0, 0x100, 8, ProtocolKind::Axi4);
+        t.dst_protocol = ProtocolKind::Init;
+        assert!(be.validate(&t).is_err());
+    }
+
+    #[test]
+    fn large_transfer_multi_burst() {
+        let mut be = axi_backend(8, 8);
+        let mut m = [sram(8)];
+        let len = 64 * 1024u64;
+        let mut src = vec![0u8; len as usize];
+        let mut rng = XorShift64::new(3);
+        rng.fill(&mut src);
+        m[0].data.write(0x1_0000, &src);
+        assert!(be.try_submit(0, Transfer1D::copy(1, 0x1_0000, 0x10_0000, len, ProtocolKind::Axi4)));
+        run(&mut be, &mut m, 1_000_000);
+        assert_eq!(m[0].data.read_vec(0x10_0000, len as usize), src);
+        assert!(be.stats.bursts_read >= len / 4096, "4 KiB pages → ≥16 bursts");
+        // Near-perfect utilization for a large aligned transfer.
+        let util = be.stats.bus_utilization(8);
+        assert!(util > 0.95, "utilization {util}");
+    }
+
+    #[test]
+    fn user_burst_cap_respected_in_flight() {
+        let mut be = axi_backend(4, 8);
+        let mut m = [sram(4)];
+        let mut t = Transfer1D::copy(1, 0, 0x8000, 1024, ProtocolKind::Axi4);
+        t.opts.max_burst = Some(64);
+        assert!(be.try_submit(0, t));
+        run(&mut be, &mut m, 100_000);
+        assert!(be.stats.bursts_read >= 16);
+    }
+
+    #[test]
+    fn decoupled_counters_track_nax() {
+        let be = Backend::new(BackendCfg { nax_r: 0, ..Default::default() });
+        assert!(be.is_err(), "NAx=0 must be rejected");
+    }
+}

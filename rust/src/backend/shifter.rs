@@ -1,0 +1,69 @@
+//! Shifter arithmetic (paper Fig. 5: *source shifter* / *destination
+//! shifter*).
+//!
+//! In RTL, the shifters rotate the read-aligned byte lanes into
+//! write-aligned lanes around the dataflow element. In this byte-exact
+//! model the same work appears as *beat window* arithmetic: a beat
+//! delivers only the payload bytes between the cursor and the next bus
+//! boundary, so realignment falls out of re-chunking the byte stream at
+//! destination boundaries. These helpers centralize that arithmetic; the
+//! area/timing cost of the barrel shifters lives in the area model.
+
+/// Payload capacity of the beat starting at `cursor` on a `bus`-byte bus,
+/// limited by the end of the burst (`end`, exclusive).
+pub fn beat_capacity(cursor: u64, end: u64, bus: u64) -> u64 {
+    debug_assert!(cursor < end);
+    let window_end = (cursor / bus + 1) * bus;
+    window_end.min(end) - cursor
+}
+
+/// Number of data beats a burst `[addr, addr+len)` occupies on a
+/// `bus`-byte bus (first/last beats may be narrow).
+pub fn beats(addr: u64, len: u64, bus: u64) -> u64 {
+    if len == 0 {
+        return 0;
+    }
+    (addr + len).div_ceil(bus) - addr / bus
+}
+
+/// Source-to-destination lane rotation in byte lanes (the barrel-shifter
+/// distance the RTL would apply): how many lanes the stream must rotate
+/// when re-aligning from `src` to `dst` on a `bus`-byte bus.
+pub fn rotation(src: u64, dst: u64, bus: u64) -> u64 {
+    ((dst % bus) + bus - (src % bus)) % bus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_aligned() {
+        assert_eq!(beat_capacity(0, 64, 8), 8);
+        assert_eq!(beat_capacity(8, 64, 8), 8);
+    }
+
+    #[test]
+    fn capacity_unaligned_head_tail() {
+        assert_eq!(beat_capacity(3, 64, 8), 5); // head beat
+        assert_eq!(beat_capacity(56, 61, 8), 5); // tail beat
+        assert_eq!(beat_capacity(62, 63, 8), 1);
+    }
+
+    #[test]
+    fn beats_counts_partial_windows() {
+        assert_eq!(beats(0, 64, 8), 8);
+        assert_eq!(beats(1, 64, 8), 9); // unaligned adds one beat
+        assert_eq!(beats(7, 2, 8), 2); // straddles one boundary
+        assert_eq!(beats(0, 1, 8), 1);
+        assert_eq!(beats(0, 0, 8), 0);
+    }
+
+    #[test]
+    fn rotation_wraps() {
+        assert_eq!(rotation(0, 0, 8), 0);
+        assert_eq!(rotation(3, 5, 8), 2);
+        assert_eq!(rotation(5, 3, 8), 6);
+        assert_eq!(rotation(7, 7, 8), 0);
+    }
+}

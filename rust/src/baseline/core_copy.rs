@@ -1,0 +1,79 @@
+//! The no-DMA baseline: processing cores copy data themselves with
+//! word-sized accesses (MemPool §3.4, Manticore §3.5 baselines).
+//!
+//! On a wide interconnect each narrow core access still occupies a full
+//! bus slot, so 32-bit cores on a 512-bit bus utilize at most 1/16 of
+//! the wide interconnect — the exact mechanism behind MemPool's 15.8×.
+
+/// Core-driven copy model.
+#[derive(Debug, Clone)]
+pub struct CoreCopy {
+    /// Bytes per core access (word size).
+    pub word_bytes: u64,
+    /// Wide-interconnect bus width in bytes.
+    pub bus_bytes: u64,
+    /// Whether cores can fully pipeline accesses (ideal outstanding
+    /// support, the paper's generous baseline assumption).
+    pub pipelined: bool,
+    /// Memory latency (per access when not pipelined).
+    pub latency: u64,
+}
+
+impl CoreCopy {
+    /// MemPool's baseline: 32-bit cores on the 512-bit AXI interconnect.
+    pub fn mempool() -> Self {
+        Self { word_bytes: 4, bus_bytes: 64, pipelined: true, latency: 20 }
+    }
+
+    /// Cycles for the cores to copy `bytes` (reads + writes both consume
+    /// bus slots; a read-write pair moves one word per two slots, but
+    /// reads and writes use separate channels on AXI, so one word per
+    /// slot-pair cycle).
+    pub fn copy_cycles(&self, bytes: u64) -> u64 {
+        let accesses = bytes.div_ceil(self.word_bytes);
+        if self.pipelined {
+            // one access occupies one bus beat slot per direction
+            accesses
+        } else {
+            accesses * (self.latency + 1)
+        }
+    }
+
+    /// Utilization of the wide bus while cores copy.
+    pub fn utilization(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.copy_cycles(bytes) * self.bus_bytes) as f64
+    }
+
+    /// Slowdown factor versus an ideal wide-bus copy engine.
+    pub fn slowdown_vs_wide(&self) -> f64 {
+        self.bus_bytes as f64 / self.word_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mempool_sixteenth_utilization() {
+        // §3.4: "the cores can only utilize one sixteenth of the wide
+        // AXI interconnect".
+        let c = CoreCopy::mempool();
+        let u = c.utilization(512 * 1024);
+        assert!((u - 1.0 / 16.0).abs() < 1e-6, "{u}");
+        assert_eq!(c.slowdown_vs_wide(), 16.0);
+    }
+
+    #[test]
+    fn unpipelined_is_latency_bound() {
+        let c = CoreCopy { pipelined: false, ..CoreCopy::mempool() };
+        assert_eq!(c.copy_cycles(4), 21);
+    }
+
+    #[test]
+    fn copy_cycles_rounds_up() {
+        let c = CoreCopy::mempool();
+        assert_eq!(c.copy_cycles(5), 2);
+        assert_eq!(c.copy_cycles(8), 2);
+    }
+}

@@ -1,0 +1,109 @@
+//! Behavioural model of **MCHAN** (Rossi et al. [11]) — the PULP cluster
+//! DMA that iDMA replaces in §3.1.
+//!
+//! MCHAN is a capable, decoupled engine; the deltas that produce the
+//! paper's 7.9 → 8.3 MAC/cycle improvement are control-plane-side:
+//!
+//! * a *shared* command queue arbitrated between the eight cores (the
+//!   per-core iDMA `reg_32_3d` front-ends are contention-free),
+//! * per-command programming via multiple queue pushes,
+//! * 2D hardware only: 3D transfers are issued as software loops of 2D
+//!   commands (iDMA's `tensor_ND` does them in one command).
+
+use crate::sim::XorShift64;
+
+/// MCHAN control-plane cost model.
+#[derive(Debug, Clone)]
+pub struct Mchan {
+    /// Cycles per command-queue push (uncontended).
+    pub push_cycles: u64,
+    /// Queue pushes per 2D command (len, src, dst, strides/reps).
+    pub pushes_per_cmd: u64,
+    /// Mean extra stall when several cores contend for the queue.
+    pub contention_cycles: u64,
+    /// Hardware transfer dimensions (2 for MCHAN).
+    pub hw_dims: u32,
+    rng: XorShift64,
+}
+
+impl Default for Mchan {
+    fn default() -> Self {
+        Self {
+            push_cycles: 2,
+            pushes_per_cmd: 5,
+            contention_cycles: 9,
+            hw_dims: 2,
+            rng: XorShift64::new(0x3C4A),
+        }
+    }
+}
+
+impl Mchan {
+    /// Core cycles to program one transfer of `dims` dimensions from a
+    /// cluster with `active_cores` concurrently issuing cores.
+    pub fn program_cycles(&mut self, dims: u32, active_cores: u32) -> u64 {
+        // 3D+ transfers decompose into per-slice 2D commands in software;
+        // the caller passes the slice count via `dims` handling below.
+        let cmds = if dims <= self.hw_dims { 1 } else { 1 }; // per-slice handled by caller
+        let contention = if active_cores > 1 {
+            self.contention_cycles * (active_cores as u64 - 1) / 4
+                + self.rng.below(self.contention_cycles)
+        } else {
+            0
+        };
+        cmds * (self.pushes_per_cmd * self.push_cycles) + contention
+    }
+
+    /// Number of hardware commands a transfer with `outer_reps` third-
+    /// dimension repetitions needs (2D in hardware → one per slice).
+    pub fn commands_for(&self, dims: u32, outer_reps: u64) -> u64 {
+        if dims <= self.hw_dims {
+            1
+        } else {
+            outer_reps.max(1)
+        }
+    }
+
+    /// DMAE area relative to the iDMA PULP configuration (§3.1: iDMA
+    /// achieves a 10 % reduction at matched queue depths).
+    pub fn area_ratio_vs_idma() -> f64 {
+        1.0 / 0.9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn programming_cost_exceeds_idma() {
+        // iDMA reg_32_3d: ~10 register ops ≈ 10-12 core cycles,
+        // contention-free. MCHAN with contention must cost more.
+        let mut m = Mchan::default();
+        let mut total = 0;
+        for _ in 0..100 {
+            total += m.program_cycles(2, 8);
+        }
+        let avg = total as f64 / 100.0;
+        assert!(avg > 12.0, "MCHAN contended programming avg {avg}");
+    }
+
+    #[test]
+    fn uncontended_is_cheap() {
+        let mut m = Mchan::default();
+        assert_eq!(m.program_cycles(2, 1), 10);
+    }
+
+    #[test]
+    fn three_d_needs_per_slice_commands() {
+        let m = Mchan::default();
+        assert_eq!(m.commands_for(3, 16), 16, "3D = 16 software-issued 2D slices");
+        assert_eq!(m.commands_for(2, 16), 1);
+    }
+
+    #[test]
+    fn area_penalty_ten_percent() {
+        let r = Mchan::area_ratio_vs_idma();
+        assert!((0.9 * r - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! State-of-the-art baselines the paper compares against (§3, Table 5):
+//! Xilinx AXI DMA v7.1 (Cheshire, Fig. 8), MCHAN (PULP-open, §3.1) and
+//! no-DMA core-driven copies (MemPool §3.4, Manticore §3.5).
+
+mod core_copy;
+mod mchan;
+mod xilinx;
+
+pub use core_copy::CoreCopy;
+pub use mchan::Mchan;
+pub use xilinx::XilinxAxiDma;

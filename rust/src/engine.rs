@@ -1,0 +1,407 @@
+//! Engine composition (paper Fig. 1 and §3.6): at least one front-end,
+//! optional chained mid-ends, at least one back-end — plus the *wrapper
+//! module* abstraction that exposes only the three critical parameters
+//! (address width, data width, outstanding transactions) and sensible
+//! defaults for everything else.
+//!
+//! [`IdmaEngine`] owns the mid-end chain and the back-end, moves jobs
+//! down the chain with ready/valid semantics (one hand-off per boundary
+//! per cycle), assigns backend-level transfer IDs, and aggregates 1D
+//! completions back into front-end job completions.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::backend::{Backend, BackendCfg, Completion, PortCfg};
+use crate::error::Result;
+use crate::mem::Endpoint;
+use crate::midend::{MidEnd, NdJob};
+use crate::protocol::ProtocolKind;
+use crate::sim::Cycle;
+
+/// Per-job accounting: how many 1D transfers were spawned and retired.
+#[derive(Debug, Default)]
+struct JobAcct {
+    submitted: u64,
+    retired: u64,
+    /// All 1D transfers of this job have reached the back-end.
+    sealed: bool,
+    aborted: bool,
+    errors: u32,
+}
+
+/// A completed front-end job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobDone {
+    /// Front-end job ID.
+    pub job: u64,
+    /// Completion cycle.
+    pub at: Cycle,
+    /// Whether any part was aborted.
+    pub aborted: bool,
+    /// Total bus errors over all 1D parts.
+    pub errors: u32,
+}
+
+/// A composed iDMA engine: mid-end chain + back-end.
+pub struct IdmaEngine {
+    /// Chained mid-ends, front-end side first (may be empty).
+    pub mids: Vec<Box<dyn MidEnd>>,
+    /// The back-end.
+    pub backend: Backend,
+    tid_next: u64,
+    tid2job: HashMap<u64, u64>,
+    jobs: HashMap<u64, JobAcct>,
+    order: VecDeque<u64>,
+    done: Vec<JobDone>,
+    input_hold: Option<NdJob>,
+}
+
+impl IdmaEngine {
+    /// Compose an engine from mid-ends and a back-end.
+    pub fn new(mids: Vec<Box<dyn MidEnd>>, backend: Backend) -> Self {
+        Self {
+            mids,
+            backend,
+            tid_next: 0,
+            tid2job: HashMap::new(),
+            jobs: HashMap::new(),
+            order: VecDeque::new(),
+            done: Vec::new(),
+            input_hold: None,
+        }
+    }
+
+    /// Launch-path latency added by the configured mid-end chain (§4.3).
+    pub fn midend_latency(&self) -> u64 {
+        self.mids.iter().map(|m| m.added_latency()).sum()
+    }
+
+    /// Ready/valid input from the front-end side.
+    pub fn can_accept(&self) -> bool {
+        self.input_hold.is_none()
+            && match self.mids.first() {
+                Some(m) => m.can_accept(),
+                None => self.backend.can_submit(),
+            }
+    }
+
+    /// Offer a job. Returns `false` on back pressure.
+    pub fn submit(&mut self, now: Cycle, j: NdJob) -> bool {
+        if !self.can_accept() {
+            return false;
+        }
+        self.register_job(j.job);
+        match self.mids.first_mut() {
+            Some(m) => m.accept(now, j),
+            None => {
+                assert!(j.nd.dims.is_empty(), "ND job needs a tensor mid-end in the chain");
+                self.push_backend(now, j)
+            }
+        }
+    }
+
+    fn register_job(&mut self, job: u64) {
+        // A new job seals every older unsealed job (jobs flow in order
+        // through the linear chain).
+        self.jobs.entry(job).or_default();
+        if self.order.back() != Some(&job) {
+            self.order.push_back(job);
+        }
+    }
+
+    fn push_backend(&mut self, now: Cycle, j: NdJob) -> bool {
+        debug_assert!(j.nd.dims.is_empty());
+        // Jobs born inside the chain (rt_3D autonomous launches) enter
+        // the accounting here rather than via submit().
+        if !self.jobs.contains_key(&j.job) {
+            self.order.push_back(j.job);
+        }
+        let mut t = j.nd.inner;
+        self.tid_next += 1;
+        t.id = self.tid_next;
+        if !self.backend.try_submit(now, t) {
+            self.tid_next -= 1;
+            return false;
+        }
+        self.tid2job.insert(t.id, j.job);
+        let acct = self.jobs.entry(j.job).or_default();
+        acct.submitted += 1;
+        // Seal all *older* jobs: their expansion is complete, since the
+        // chain preserves job order.
+        for &older in self.order.iter() {
+            if older == j.job {
+                break;
+            }
+            if let Some(a) = self.jobs.get_mut(&older) {
+                a.sealed = true;
+            }
+        }
+        true
+    }
+
+    /// Advance the engine one cycle: tick the back-end and the chain and
+    /// move jobs across every ready/valid boundary.
+    pub fn tick(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        self.backend.tick(now, mems);
+        // Tick mid-ends and move jobs downstream (last mid-end feeds the
+        // back-end; stage i feeds stage i+1).
+        for m in self.mids.iter_mut() {
+            m.tick(now);
+        }
+        // Hold slot between last mid-end and back-end (retry on stall).
+        if let Some(j) = self.input_hold.take() {
+            if !self.push_backend(now, j.clone()) {
+                self.input_hold = Some(j);
+            }
+        }
+        if self.input_hold.is_none() {
+            if let Some(last) = self.mids.last_mut() {
+                if last.outputs() == 1 {
+                    if let Some(j) = last.pop(now) {
+                        if !self.push_backend(now, j.clone()) {
+                            self.input_hold = Some(j);
+                        }
+                    }
+                }
+            }
+        }
+        // Inter-mid-end hand-offs, downstream first.
+        for i in (0..self.mids.len().saturating_sub(1)).rev() {
+            let (a, b) = self.mids.split_at_mut(i + 1);
+            let up = a.last_mut().unwrap();
+            let down = b.first_mut().unwrap();
+            if up.outputs() == 1 && down.can_accept() {
+                if let Some(j) = up.pop(now) {
+                    let ok = down.accept(now, j);
+                    debug_assert!(ok);
+                }
+            }
+        }
+        // Collect back-end completions.
+        for c in self.backend.take_completions() {
+            self.retire(now, c);
+        }
+        // Seal everything when the chain has fully drained.
+        if self.chain_idle() {
+            for a in self.jobs.values_mut() {
+                a.sealed = true;
+            }
+        }
+        self.finish_jobs(now);
+    }
+
+    fn chain_idle(&self) -> bool {
+        self.input_hold.is_none() && self.mids.iter().all(|m| !m.busy())
+    }
+
+    fn retire(&mut self, _now: Cycle, c: Completion) {
+        let job = self.tid2job.remove(&c.tid).expect("unknown tid retired");
+        let a = self.jobs.get_mut(&job).expect("job acct");
+        a.retired += 1;
+        a.errors += c.errors;
+        a.aborted |= c.aborted;
+    }
+
+    fn finish_jobs(&mut self, now: Cycle) {
+        while let Some(&job) = self.order.front() {
+            let Some(a) = self.jobs.get(&job) else {
+                self.order.pop_front();
+                continue;
+            };
+            if a.sealed && a.retired == a.submitted && a.submitted > 0 {
+                let a = self.jobs.remove(&job).unwrap();
+                self.order.pop_front();
+                self.done.push(JobDone { job, at: now, aborted: a.aborted, errors: a.errors });
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Drain completed front-end jobs.
+    pub fn take_done(&mut self) -> Vec<JobDone> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// True while any job is in flight anywhere in the engine.
+    pub fn busy(&self) -> bool {
+        !self.jobs.is_empty() || !self.chain_idle() || self.backend.busy()
+    }
+
+    /// Progress fingerprint for watchdogs.
+    pub fn fingerprint(&self) -> u64 {
+        self.backend.fingerprint() ^ (self.done.len() as u64) << 50
+    }
+}
+
+/// The §3.6 wrapper: build a typical engine from the three critical
+/// parameters plus a protocol-port list and an optional tensor dimension
+/// count.
+pub struct EngineBuilder {
+    aw: u32,
+    dw: u64,
+    nax: usize,
+    ports: Vec<PortCfg>,
+    tensor_dims: usize,
+    zero_latency_tensor: bool,
+    error_handling: bool,
+    owner: u32,
+}
+
+impl EngineBuilder {
+    /// Start from AW (bits), DW (bytes) and NAx — the three §3.6 user
+    /// parameters.
+    pub fn new(aw: u32, dw: u64, nax: usize) -> Self {
+        Self {
+            aw,
+            dw,
+            nax,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            tensor_dims: 0,
+            zero_latency_tensor: true,
+            error_handling: false,
+            owner: 0,
+        }
+    }
+
+    /// Replace the port list.
+    pub fn ports(mut self, ports: Vec<PortCfg>) -> Self {
+        self.ports = ports;
+        self
+    }
+
+    /// Add a tensor_ND mid-end supporting `n` total dimensions.
+    pub fn tensor(mut self, n: usize) -> Self {
+        self.tensor_dims = n;
+        self
+    }
+
+    /// Configure the tensor mid-end's added latency (§4.3: zero or one).
+    pub fn tensor_latency_one(mut self) -> Self {
+        self.zero_latency_tensor = false;
+        self
+    }
+
+    /// Instantiate the error handler.
+    pub fn error_handling(mut self) -> Self {
+        self.error_handling = true;
+        self
+    }
+
+    /// Owner tag for shared endpoints.
+    pub fn owner(mut self, o: u32) -> Self {
+        self.owner = o;
+        self
+    }
+
+    /// Build the engine.
+    pub fn build(self) -> Result<IdmaEngine> {
+        let be = Backend::new(BackendCfg {
+            aw_bits: self.aw,
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            error_handling: self.error_handling,
+            ports: self.ports,
+            owner: self.owner,
+            ..Default::default()
+        })?;
+        let mut mids: Vec<Box<dyn MidEnd>> = Vec::new();
+        if self.tensor_dims > 1 {
+            mids.push(Box::new(crate::midend::TensorNd::new(
+                self.tensor_dims - 1,
+                self.zero_latency_tensor,
+            )));
+        }
+        Ok(IdmaEngine::new(mids, be))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::MemModel;
+    use crate::sim::Watchdog;
+    use crate::transfer::{NdTransfer, Transfer1D};
+
+    fn run_engine(e: &mut IdmaEngine, mems: &mut [Endpoint], max: u64) -> u64 {
+        let mut wd = Watchdog::new(10_000);
+        for now in 0..max {
+            e.tick(now, mems);
+            if !e.busy() {
+                return now;
+            }
+            assert!(!wd.check(now, e.fingerprint()), "deadlock at {now}");
+        }
+        panic!("engine did not drain in {max} cycles");
+    }
+
+    #[test]
+    fn wrapper_builds_and_copies() {
+        let mut e = EngineBuilder::new(32, 4, 4).build().unwrap();
+        let mut m = [Endpoint::new(MemModel::sram(4))];
+        let src: Vec<u8> = (0..99).collect();
+        m[0].data.write(0x10, &src);
+        let t = Transfer1D::copy(0, 0x10, 0x900, 99, ProtocolKind::Axi4);
+        assert!(e.submit(0, NdJob::new(1, NdTransfer::d1(t))));
+        run_engine(&mut e, &mut m, 10_000);
+        assert_eq!(m[0].data.read_vec(0x900, 99), src);
+        let done = e.take_done();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].job, 1);
+        assert!(!done[0].aborted);
+    }
+
+    #[test]
+    fn tensor_chain_moves_2d() {
+        let mut e = EngineBuilder::new(32, 4, 8).tensor(3).build().unwrap();
+        let mut m = [Endpoint::new(MemModel::sram(4))];
+        // 4 rows of 16 bytes, src row stride 64, dst packed
+        let mut expect = Vec::new();
+        for r in 0..4u64 {
+            let row: Vec<u8> = (0..16).map(|i| (r * 16 + i) as u8).collect();
+            m[0].data.write(0x1000 + r * 64, &row);
+            expect.extend_from_slice(&row);
+        }
+        let inner = Transfer1D::copy(0, 0x1000, 0x8000, 16, ProtocolKind::Axi4);
+        let nd = NdTransfer::d2(inner, 64, 16, 4);
+        assert!(e.submit(0, NdJob::new(9, nd)));
+        run_engine(&mut e, &mut m, 10_000);
+        assert_eq!(m[0].data.read_vec(0x8000, 64), expect);
+        let done = e.take_done();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].job, 9);
+    }
+
+    #[test]
+    fn multiple_jobs_complete_in_order() {
+        let mut e = EngineBuilder::new(32, 4, 8).tensor(2).build().unwrap();
+        let mut m = [Endpoint::new(MemModel::sram(4))];
+        m[0].data.write(0, &[7u8; 4096]);
+        let mut now = 0u64;
+        for job in 1..=5u64 {
+            let t = Transfer1D::copy(0, job * 128, 0x4000 + job * 128, 64, ProtocolKind::Axi4);
+            let nd = NdTransfer::d1(t);
+            while !e.submit(now, NdJob::new(job, nd.clone())) {
+                e.tick(now, &mut m);
+                now += 1;
+            }
+        }
+        while e.busy() {
+            e.tick(now, &mut m);
+            now += 1;
+            assert!(now < 100_000);
+        }
+        let done = e.take_done();
+        assert_eq!(done.iter().map(|d| d.job).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn midend_latency_accounting() {
+        let e = EngineBuilder::new(32, 4, 2).tensor(3).build().unwrap();
+        assert_eq!(e.midend_latency(), 0, "zero-latency tensor_ND default");
+        let e2 = EngineBuilder::new(32, 4, 2).tensor(3).tensor_latency_one().build().unwrap();
+        assert_eq!(e2.midend_latency(), 1);
+    }
+}

@@ -1,0 +1,44 @@
+//! Error types for the iDMA library.
+
+use thiserror::Error;
+
+/// Top-level error type for iDMA operations.
+#[derive(Debug, Error)]
+pub enum IdmaError {
+    /// A transfer descriptor violates a structural constraint
+    /// (e.g. zero-length where the legalizer is configured to reject it).
+    #[error("illegal transfer: {0}")]
+    IllegalTransfer(String),
+
+    /// A protocol port was used in a way its capability table forbids
+    /// (e.g. writes on an AXI4-Stream read-only port, Init as destination).
+    #[error("protocol violation on {protocol}: {reason}")]
+    ProtocolViolation {
+        /// The offending protocol.
+        protocol: &'static str,
+        /// Human-readable violation description.
+        reason: String,
+    },
+
+    /// A bus error reported by the memory system (the error handler's input).
+    #[error("bus error at address {addr:#x}")]
+    BusError {
+        /// Faulting (legalized burst base) address.
+        addr: u64,
+    },
+
+    /// Engine configuration is inconsistent (e.g. no back-end ports).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// Artifact loading / PJRT runtime failures.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Simulation failed to converge / deadlocked (watchdog tripped).
+    #[error("simulation watchdog: no progress after {0} cycles")]
+    Watchdog(u64),
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, IdmaError>;

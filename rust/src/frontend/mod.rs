@@ -1,0 +1,20 @@
+//! iDMA **front-ends** (paper §2.1, Table 1): the control-plane binding
+//! between the PEs and the engine.
+//!
+//! | paper id       | type                              |
+//! |----------------|-----------------------------------|
+//! | `reg_32`/`reg_64` (+`_2d`/`_3d`/`_rt_3d`) | [`RegFrontend`] |
+//! | `desc_64`      | [`DescFrontend`]                  |
+//! | `inst_64`      | [`InstFrontend`]                  |
+//!
+//! Front-ends emit [`NdJob`]s into the mid-end chain and observe
+//! completions to update their status interface (the `status` register /
+//! completed-descriptor writeback / `dmstat` value).
+
+mod desc;
+mod inst;
+mod reg;
+
+pub use desc::{write_descriptor, DescFlags, DescFrontend, DESC_SIZE};
+pub use inst::{decode, encode, Decoded, InstFrontend, Opcode};
+pub use reg::{RegFrontend, RegVariant};

@@ -1,0 +1,347 @@
+//! Register-based front-ends (`reg_32`, `reg_32_2d`, `reg_32_3d`,
+//! `reg_64`, `reg_64_2d`, `reg_32_rt_3d` — paper Table 1).
+//!
+//! Core-private, memory-mapped register files: each PE owns one, which
+//! eliminates race conditions while programming the engine (§2.1). After
+//! configuring a transfer's shape, reading `transfer_id` launches it and
+//! returns an incrementing unique ID; the ID last completed is available
+//! in `status`, enabling transfer-level synchronization.
+
+use crate::midend::NdJob;
+use crate::protocol::ProtocolKind;
+use crate::sim::{Cycle, Fifo};
+use crate::transfer::{NdDim, NdTransfer, Transfer1D, TransferOpts};
+
+/// Front-end variant: word width and hardware-supported dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegVariant {
+    /// Register word width in bits (32 or 64).
+    pub word_bits: u32,
+    /// Hardware tensor dimensions configurable through this layout
+    /// (1 = plain, 2 = `_2d`, 3 = `_3d`).
+    pub dims: u32,
+    /// Real-time extension (`reg_32_rt_3d`): exposes the rt_3D mid-end's
+    /// period/count registers.
+    pub rt: bool,
+}
+
+impl RegVariant {
+    /// `reg_32`
+    pub const R32: Self = Self { word_bits: 32, dims: 1, rt: false };
+    /// `reg_32_2d`
+    pub const R32_2D: Self = Self { word_bits: 32, dims: 2, rt: false };
+    /// `reg_32_3d`
+    pub const R32_3D: Self = Self { word_bits: 32, dims: 3, rt: false };
+    /// `reg_64`
+    pub const R64: Self = Self { word_bits: 64, dims: 1, rt: false };
+    /// `reg_64_2d`
+    pub const R64_2D: Self = Self { word_bits: 64, dims: 2, rt: false };
+    /// `reg_32_rt_3d`
+    pub const R32_RT_3D: Self = Self { word_bits: 32, dims: 3, rt: true };
+
+    /// Table 1 identifier.
+    pub fn name(&self) -> &'static str {
+        match (self.word_bits, self.dims, self.rt) {
+            (32, 1, false) => "reg_32",
+            (32, 2, false) => "reg_32_2d",
+            (32, 3, false) => "reg_32_3d",
+            (64, 1, false) => "reg_64",
+            (64, 2, false) => "reg_64_2d",
+            (32, 3, true) => "reg_32_rt_3d",
+            _ => "reg_custom",
+        }
+    }
+
+    /// Register writes a core must perform to configure an `n`-dim
+    /// transfer (addresses + length + per-dimension stride/rep fields).
+    /// Addresses above 32 bits cost two writes on 32-bit layouts.
+    pub fn writes_for(&self, n_dims: u32) -> u64 {
+        let addr_words = if self.word_bits == 32 { 1 } else { 1 };
+        // src + dst + len
+        let base = 2 * addr_words + 1;
+        // each extra dimension: src_stride + dst_stride + num_repetitions
+        let extra = 3 * (n_dims.saturating_sub(1)) as u64;
+        base + extra
+    }
+}
+
+/// Register offsets (byte offsets in the core-private window).
+pub mod regs {
+    /// Source address.
+    pub const SRC: u64 = 0x00;
+    /// Destination address.
+    pub const DST: u64 = 0x08;
+    /// Transfer length in bytes.
+    pub const LEN: u64 = 0x10;
+    /// Configuration (decouple, protocols, error action).
+    pub const CONF: u64 = 0x18;
+    /// Last-completed transfer ID (read-only).
+    pub const STATUS: u64 = 0x20;
+    /// Reading launches the configured transfer and returns its ID.
+    pub const TRANSFER_ID: u64 = 0x28;
+    /// Dimension `d` (1-based): src_stride at `DIMS + (d-1)*0x18`,
+    /// dst_stride at `+0x8`, reps at `+0x10`.
+    pub const DIMS: u64 = 0x30;
+}
+
+/// A core-private register-file front-end.
+#[derive(Debug)]
+pub struct RegFrontend {
+    /// Variant (layout) of this front-end.
+    pub variant: RegVariant,
+    src: u64,
+    dst: u64,
+    len: u64,
+    conf: u64,
+    dims: [NdDim; 3],
+    next_id: u64,
+    last_completed: u64,
+    out: Fifo<NdJob>,
+    /// Total register writes observed (core-side cost accounting).
+    pub reg_writes: u64,
+    /// Total launches.
+    pub launches: u64,
+    default_src_protocol: ProtocolKind,
+    default_dst_protocol: ProtocolKind,
+}
+
+impl RegFrontend {
+    /// Create a front-end; `id_base` namespaces transfer IDs per core.
+    pub fn new(variant: RegVariant, id_base: u64) -> Self {
+        Self {
+            variant,
+            src: 0,
+            dst: 0,
+            len: 0,
+            conf: 0,
+            dims: [NdDim { src_stride: 0, dst_stride: 0, reps: 1 }; 3],
+            next_id: id_base,
+            last_completed: 0,
+            out: Fifo::new(2),
+            reg_writes: 0,
+            launches: 0,
+            default_src_protocol: ProtocolKind::Axi4,
+            default_dst_protocol: ProtocolKind::Axi4,
+        }
+    }
+
+    /// Set the protocols encoded by `CONF = 0` (system integration picks
+    /// sensible defaults, e.g. AXI→OBI in PULP clusters).
+    pub fn set_default_protocols(&mut self, src: ProtocolKind, dst: ProtocolKind) {
+        self.default_src_protocol = src;
+        self.default_dst_protocol = dst;
+    }
+
+    /// Memory-mapped register write.
+    pub fn write_reg(&mut self, _now: Cycle, offset: u64, value: u64) {
+        self.reg_writes += 1;
+        match offset {
+            regs::SRC => self.src = value,
+            regs::DST => self.dst = value,
+            regs::LEN => self.len = value,
+            regs::CONF => self.conf = value,
+            o if o >= regs::DIMS => {
+                let d = ((o - regs::DIMS) / 0x18) as usize;
+                assert!(
+                    d < self.variant.dims as usize - 1 && d < 3,
+                    "dimension register {d} not present in {}",
+                    self.variant.name()
+                );
+                match (o - regs::DIMS) % 0x18 {
+                    0x00 => self.dims[d].src_stride = value as i64,
+                    0x08 => self.dims[d].dst_stride = value as i64,
+                    0x10 => self.dims[d].reps = value,
+                    _ => panic!("unaligned dim register write at {o:#x}"),
+                }
+            }
+            _ => panic!("write to unknown/read-only register {offset:#x}"),
+        }
+    }
+
+    /// Memory-mapped register read. Reading `TRANSFER_ID` launches the
+    /// configured transfer.
+    pub fn read_reg(&mut self, now: Cycle, offset: u64) -> u64 {
+        match offset {
+            regs::STATUS => self.last_completed,
+            regs::TRANSFER_ID => self.launch(now).unwrap_or(0),
+            regs::SRC => self.src,
+            regs::DST => self.dst,
+            regs::LEN => self.len,
+            regs::CONF => self.conf,
+            _ => 0,
+        }
+    }
+
+    /// Launch with the current configuration (the `TRANSFER_ID` read).
+    /// Returns `None` when the job queue is full (the core must retry —
+    /// hardware stalls the read response instead).
+    pub fn launch(&mut self, now: Cycle) -> Option<u64> {
+        if !self.out.can_push() {
+            return None;
+        }
+        self.next_id += 1;
+        let id = self.next_id;
+        let inner = Transfer1D {
+            id,
+            src: self.src,
+            dst: self.dst,
+            len: self.len,
+            src_protocol: self.decode_protocol(self.conf & 0xF, self.default_src_protocol),
+            dst_protocol: self.decode_protocol((self.conf >> 4) & 0xF, self.default_dst_protocol),
+            opts: TransferOpts::default(),
+        };
+        let mut nd = NdTransfer::d1(inner);
+        for d in 0..(self.variant.dims as usize - 1) {
+            if self.dims[d].reps > 1 {
+                nd.dims.push(self.dims[d]);
+            }
+        }
+        self.launches += 1;
+        self.out.push(now, NdJob::new(id, nd));
+        Some(id)
+    }
+
+    fn decode_protocol(&self, code: u64, default: ProtocolKind) -> ProtocolKind {
+        match code {
+            0 => default,
+            c => ProtocolKind::ALL.get(c as usize - 1).copied().unwrap_or(default),
+        }
+    }
+
+    /// Convenience: program and launch an up-to-3D transfer, returning
+    /// `(id, register_operations)` — the op count feeds the core-cost
+    /// models (each op is one core store/load to the register window).
+    pub fn launch_nd(&mut self, now: Cycle, nd: &NdTransfer) -> (Option<u64>, u64) {
+        assert!(nd.dims.len() < self.variant.dims as usize || nd.dims.is_empty());
+        self.write_reg(now, regs::SRC, nd.inner.src);
+        self.write_reg(now, regs::DST, nd.inner.dst);
+        self.write_reg(now, regs::LEN, nd.inner.len);
+        let mut ops = 3;
+        for (i, d) in nd.dims.iter().enumerate() {
+            let base = regs::DIMS + i as u64 * 0x18;
+            self.write_reg(now, base, d.src_stride as u64);
+            self.write_reg(now, base + 0x8, d.dst_stride as u64);
+            self.write_reg(now, base + 0x10, d.reps);
+            ops += 3;
+        }
+        // clear stale higher dims
+        for i in nd.dims.len()..(self.variant.dims as usize).saturating_sub(1) {
+            let base = regs::DIMS + i as u64 * 0x18;
+            self.write_reg(now, base + 0x10, 1);
+            ops += 1;
+        }
+        let id = self.launch(now);
+        ops += 1; // the TRANSFER_ID read
+        // 32-bit layouts need two stores per 64-bit address field.
+        if self.variant.word_bits == 32 {
+            ops += 2; // src/dst high halves
+        }
+        (id, ops)
+    }
+
+    /// Pop the next job towards the mid-end chain.
+    pub fn pop(&mut self, now: Cycle) -> Option<NdJob> {
+        self.out.pop(now)
+    }
+
+    /// True while launched jobs wait in the output queue.
+    pub fn busy(&self) -> bool {
+        !self.out.is_empty()
+    }
+
+    /// Engine callback: job `id` completed.
+    pub fn notify_complete(&mut self, id: u64) {
+        if id > self.last_completed {
+            self.last_completed = id;
+        }
+    }
+
+    /// `status` register value (last completed ID).
+    pub fn status(&self) -> u64 {
+        self.last_completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_via_transfer_id_read() {
+        let mut fe = RegFrontend::new(RegVariant::R32, 0);
+        fe.write_reg(0, regs::SRC, 0x1000);
+        fe.write_reg(0, regs::DST, 0x2000);
+        fe.write_reg(0, regs::LEN, 64);
+        let id = fe.read_reg(0, regs::TRANSFER_ID);
+        assert_eq!(id, 1);
+        let j = fe.pop(1).expect("job emitted");
+        assert_eq!(j.job, 1);
+        assert_eq!(j.nd.inner.src, 0x1000);
+        assert_eq!(j.nd.inner.len, 64);
+        assert!(j.nd.dims.is_empty());
+    }
+
+    #[test]
+    fn ids_increment_and_status_tracks() {
+        let mut fe = RegFrontend::new(RegVariant::R32, 100);
+        fe.write_reg(0, regs::LEN, 4);
+        let a = fe.launch(0).unwrap();
+        let _ = fe.pop(1);
+        let b = fe.launch(1).unwrap();
+        assert_eq!(b, a + 1);
+        assert_eq!(fe.status(), 0);
+        fe.notify_complete(a);
+        assert_eq!(fe.read_reg(2, regs::STATUS), a);
+    }
+
+    #[test]
+    fn three_d_configuration() {
+        let mut fe = RegFrontend::new(RegVariant::R32_3D, 0);
+        fe.write_reg(0, regs::SRC, 0x100);
+        fe.write_reg(0, regs::DST, 0x200);
+        fe.write_reg(0, regs::LEN, 8);
+        fe.write_reg(0, regs::DIMS, 64);
+        fe.write_reg(0, regs::DIMS + 0x8, 8);
+        fe.write_reg(0, regs::DIMS + 0x10, 4);
+        fe.write_reg(0, regs::DIMS + 0x18, 4096);
+        fe.write_reg(0, regs::DIMS + 0x20, 32);
+        fe.write_reg(0, regs::DIMS + 0x28, 2);
+        fe.launch(0).unwrap();
+        let j = fe.pop(1).unwrap();
+        assert_eq!(j.nd.dims.len(), 2);
+        assert_eq!(j.nd.num_inner(), 8);
+        assert_eq!(j.nd.total_bytes(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension register")]
+    fn dim_regs_absent_in_1d_variant() {
+        let mut fe = RegFrontend::new(RegVariant::R32, 0);
+        fe.write_reg(0, regs::DIMS, 64);
+    }
+
+    #[test]
+    fn launch_nd_counts_ops() {
+        let mut fe = RegFrontend::new(RegVariant::R32_3D, 0);
+        let inner = Transfer1D::copy(0, 0, 0x100, 16, ProtocolKind::Axi4);
+        let nd = NdTransfer::d2(inner, 64, 16, 4);
+        let (id, ops) = fe.launch_nd(0, &nd);
+        assert!(id.is_some());
+        // 3 base + 3 dim + 1 cleared rep + 1 launch + 2 high halves
+        assert_eq!(ops, 10);
+        // 2D via reg_64_2d is cheaper
+        let mut fe64 = RegFrontend::new(RegVariant::R64_2D, 0);
+        let (_, ops64) = fe64.launch_nd(0, &nd);
+        assert_eq!(ops64, 7);
+    }
+
+    #[test]
+    fn backpressure_returns_none() {
+        let mut fe = RegFrontend::new(RegVariant::R32, 0);
+        fe.write_reg(0, regs::LEN, 4);
+        assert!(fe.launch(0).is_some());
+        assert!(fe.launch(0).is_some());
+        assert!(fe.launch(0).is_none(), "queue depth 2 exhausted");
+        assert!(fe.busy());
+    }
+}

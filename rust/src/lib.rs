@@ -1,0 +1,28 @@
+//! # iDMA — a modular, parametric DMA engine architecture (reproduction)
+//!
+//! Cycle-level software reproduction of *"A High-performance,
+//! Energy-efficient Modular DMA Engine Architecture"* (Benz et al., 2023):
+//! the iDMA engine (front-ends / mid-ends / back-ends), the five system
+//! integration case studies, the SoA baselines, and the paper's area,
+//! timing and latency models — plus the JAX/Pallas compute side of the
+//! case-study workloads, AOT-compiled and executed from Rust over PJRT.
+//!
+//! See `DESIGN.md` for the full inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod backend;
+pub mod baseline;
+pub mod engine;
+pub mod error;
+pub mod frontend;
+pub mod midend;
+pub mod model;
+pub mod mem;
+pub mod protocol;
+pub mod runtime;
+pub mod sim;
+pub mod systems;
+pub mod transfer;
+pub mod workloads;
+
+pub use error::{IdmaError, Result};

@@ -1,0 +1,173 @@
+//! `idma` CLI — the leader entry point: run case-study systems, print
+//! model characterizations, or execute ad-hoc copies on a simulated
+//! memory system.
+//!
+//! Dependency-free argument parsing (this environment is offline; no
+//! clap). Subcommands:
+//!
+//! ```text
+//! idma systems                         run all five case studies
+//! idma pulp | cheshire | mempool | controlpulp | manticore
+//! idma model --aw 32 --dw 8 --nax 16   area/timing/latency of a config
+//! idma copy --len 65536 --dw 8         standalone copy + utilization
+//! idma artifacts                       list AOT artifacts
+//! ```
+
+use idma::backend::{Backend, BackendCfg, PortCfg};
+use idma::mem::{Endpoint, MemModel};
+use idma::model::{backend_latency, synthesize_area, synthesize_fmax_ghz};
+use idma::protocol::ProtocolKind;
+use idma::systems::{cheshire, control_pulp, manticore, mempool, pulp_open};
+use idma::transfer::Transfer1D;
+
+fn flag(args: &[String], name: &str, default: u64) -> u64 {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_model(args: &[String]) {
+    let aw = flag(args, "--aw", 32) as u32;
+    let dw = flag(args, "--dw", 4);
+    let nax = flag(args, "--nax", 2) as usize;
+    let cfg = BackendCfg {
+        aw_bits: aw,
+        dw_bytes: dw,
+        nax_r: nax,
+        nax_w: nax,
+        ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+        ..Default::default()
+    };
+    let b = synthesize_area(&cfg);
+    println!("configuration: AW={aw}b DW={}b NAx={nax} (AXI4)", dw * 8);
+    for i in &b.items {
+        println!("  {:<40} {:>8.0} GE", i.name, i.ge);
+    }
+    println!("  {:<40} {:>8.0} GE", "TOTAL", b.total());
+    println!(
+        "fmax: {:.2} GHz | launch latency: {} cycles",
+        synthesize_fmax_ghz(&cfg),
+        backend_latency(&cfg)
+    );
+}
+
+fn cmd_copy(args: &[String]) {
+    let len = flag(args, "--len", 65536);
+    let dw = flag(args, "--dw", 8);
+    let nax = flag(args, "--nax", 16) as usize;
+    let latency = flag(args, "--latency", 3);
+    let mut be = Backend::new(BackendCfg {
+        dw_bytes: dw,
+        nax_r: nax,
+        nax_w: nax,
+        ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+        ..Default::default()
+    })
+    .unwrap();
+    let mut mems = [Endpoint::new(MemModel::custom("mem", latency, nax.max(8), dw))];
+    let mut src = vec![0u8; len as usize];
+    idma::sim::XorShift64::new(1).fill(&mut src);
+    mems[0].data.write(0, &src);
+    assert!(be.try_submit(0, Transfer1D::copy(1, 0, 0x100_0000, len, ProtocolKind::Axi4)));
+    let mut now = 0;
+    while be.busy() {
+        be.tick(now, &mut mems);
+        now += 1;
+    }
+    assert_eq!(mems[0].data.read_vec(0x100_0000, len as usize), src);
+    println!(
+        "copied {len} B in {now} cycles — utilization {:.3} (byte-exact)",
+        be.stats.bus_utilization(dw)
+    );
+}
+
+fn cmd_systems() {
+    println!("== §3.1 PULP-open ==");
+    let p = pulp_open::PulpOpen::default();
+    println!("8 KiB copy: {} cycles (paper 1107)", p.copy_8kib());
+    let r = p.mobilenet_paper_model(pulp_open::DmaKind::Idma);
+    let rm = p.mobilenet_paper_model(pulp_open::DmaKind::Mchan);
+    println!(
+        "MobileNetV1: {:.2} vs {:.2} MAC/cycle (paper 8.3 vs 7.9)",
+        r.mac_per_cycle, rm.mac_per_cycle
+    );
+
+    println!("\n== §3.2 ControlPULP ==");
+    let r = control_pulp::ControlPulp::default().run_hyperperiod();
+    println!("saved {} cycles/period (paper ≈2200); launches {}", r.saved, r.launches);
+
+    println!("\n== §3.3 Cheshire ==");
+    let c = cheshire::Cheshire::default();
+    let pt = c.point(64, 64);
+    println!(
+        "64 B: iDMA {:.3} vs Xilinx {:.3} → {:.1}× (paper ≈6×)",
+        pt.idma,
+        pt.xilinx,
+        pt.idma / pt.xilinx
+    );
+
+    println!("\n== §3.4 MemPool ==");
+    let r = mempool::MemPool::default().copy_experiment(512 * 1024);
+    println!("512 KiB: util {:.3}, speedup {:.1}× (paper 0.99 / 15.8×)", r.utilization, r.speedup);
+
+    println!("\n== §3.5 Manticore ==");
+    for p in manticore::Manticore::default().fig11() {
+        println!("  {:>5} {:>14}: {:.2}x", p.workload, p.tile, p.speedup);
+    }
+}
+
+fn cmd_artifacts() {
+    match idma::runtime::Runtime::open_default() {
+        Ok(rt) => {
+            let mut names = rt.names().into_iter().map(String::from).collect::<Vec<_>>();
+            names.sort();
+            for n in names {
+                println!("{n}");
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("model") => cmd_model(&args),
+        Some("copy") => cmd_copy(&args),
+        Some("systems") => cmd_systems(),
+        Some("pulp") => {
+            let p = pulp_open::PulpOpen::default();
+            println!("8 KiB copy: {} cycles", p.copy_8kib());
+        }
+        Some("cheshire") => {
+            for p in cheshire::Cheshire::default().fig8() {
+                println!(
+                    "{:>8} B: idma {:.3} xilinx {:.3} limit {:.3}",
+                    p.len, p.idma, p.xilinx, p.limit
+                );
+            }
+        }
+        Some("mempool") => {
+            let r = mempool::MemPool::default().copy_experiment(512 * 1024);
+            println!("util {:.3} speedup {:.1}x", r.utilization, r.speedup);
+        }
+        Some("controlpulp") => {
+            let r = control_pulp::ControlPulp::default().run_hyperperiod();
+            println!("saved {} cycles/period", r.saved);
+        }
+        Some("manticore") => {
+            for p in manticore::Manticore::default().fig11() {
+                println!("{:>5} {:>14}: {:.2}x", p.workload, p.tile, p.speedup);
+            }
+        }
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            println!(
+                "usage: idma <systems|pulp|cheshire|mempool|controlpulp|manticore|model|copy|artifacts> [flags]"
+            );
+            println!("see `rust/src/main.rs` docs for flags");
+        }
+    }
+}

@@ -1,0 +1,501 @@
+//! Timed memory endpoint: a [`MemModel`] + a [`SparseMemory`] + in-flight
+//! transaction state.
+//!
+//! The endpoint is *pull-driven* by protocol managers: they issue burst
+//! requests (subject to the outstanding-transaction limit), then pull read
+//! data beats / push write data beats, at most one beat per cycle per
+//! direction. Read responses arrive in order, `latency` cycles after the
+//! request was accepted, and bursts stream back-to-back when requests were
+//! pipelined — modelling a fully pipelined memory controller.
+//!
+//! Optional *error injection* (for the §2.3 error handler) and *port
+//! contention* (a deterministic per-cycle steal probability modelling
+//! other agents on the interconnect, e.g. instruction fetches in
+//! PULP-open §3.1) are built in.
+
+use std::collections::VecDeque;
+
+use super::{MemModel, SparseMemory};
+use crate::sim::Cycle;
+
+/// A transient fault: bursts overlapping the range fail `remaining`
+/// times, then succeed (exercises the error handler's replay path).
+#[derive(Debug, Clone, Copy)]
+pub struct TransientFault {
+    /// Range start (inclusive).
+    pub start: u64,
+    /// Range end (exclusive).
+    pub end: u64,
+    /// Failures left before the fault clears.
+    pub remaining: u32,
+}
+
+/// Deterministic error injector: bursts touching a configured range (or
+/// hashed to fall under the random probability) fail.
+#[derive(Debug, Clone, Default)]
+pub struct ErrorInjector {
+    /// Permanently faulting address ranges `[start, end)`.
+    pub ranges: Vec<(u64, u64)>,
+    /// Transient faults (self-clearing after N hits).
+    pub transient: Vec<TransientFault>,
+    /// Probability any burst faults (deterministic hash of address+seed).
+    pub random_p: f64,
+    /// Seed for the hash.
+    pub seed: u64,
+}
+
+impl ErrorInjector {
+    /// Fault a range for exactly `n` accesses.
+    pub fn transient(start: u64, end: u64, n: u32) -> Self {
+        Self { transient: vec![TransientFault { start, end, remaining: n }], ..Default::default() }
+    }
+
+    /// Whether a burst `[addr, addr+len)` faults (mutates transient state).
+    pub fn faults(&mut self, addr: u64, len: u64) -> bool {
+        if self.ranges.iter().any(|&(s, e)| addr < e && addr + len > s) {
+            return true;
+        }
+        for t in &mut self.transient {
+            if t.remaining > 0 && addr < t.end && addr + len > t.start {
+                t.remaining -= 1;
+                return true;
+            }
+        }
+        if self.random_p > 0.0 {
+            // SplitMix64-style hash for a stable pseudo-random decision.
+            let mut z = addr ^ self.seed.rotate_left(17);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^= z >> 31;
+            return (z >> 11) as f64 / (1u64 << 53) as f64 / 2.0f64.powi(0) < self.random_p;
+        }
+        false
+    }
+}
+
+/// One read data beat delivered by the endpoint.
+#[derive(Debug, Clone)]
+pub struct ReadBeat {
+    /// Payload bytes of this beat (≤ port width; first/last beats of an
+    /// unaligned burst are narrow).
+    pub data: Vec<u8>,
+    /// Address of the first payload byte.
+    pub addr: u64,
+    /// Last beat of the burst.
+    pub last: bool,
+    /// Burst-level error flag (reported with every beat; handlers act on
+    /// `last`).
+    pub error: bool,
+    /// Requester tag (for shared endpoints).
+    pub owner: u32,
+}
+
+/// A retired write response (AXI `B`, OBI/TileLink response).
+#[derive(Debug, Clone, Copy)]
+pub struct WriteResp {
+    /// Burst base address.
+    pub addr: u64,
+    /// Error flag.
+    pub error: bool,
+    /// Requester tag.
+    pub owner: u32,
+}
+
+#[derive(Debug, Clone)]
+struct InflightRead {
+    ready_at: Cycle,
+    end: u64,
+    cursor: u64,
+    error: bool,
+    owner: u32,
+}
+
+#[derive(Debug, Clone)]
+struct InflightWrite {
+    addr: u64,
+    end: u64,
+    cursor: u64,
+    error: bool,
+    owner: u32,
+}
+
+/// A timed, single-ported memory endpoint.
+#[derive(Debug, Clone)]
+pub struct Endpoint {
+    /// Timing parameters.
+    pub model: MemModel,
+    /// Backing store (shared data visible to all ports mapped onto it).
+    pub data: SparseMemory,
+    /// Error injection configuration.
+    pub inject: Option<ErrorInjector>,
+    /// Per-cycle probability that another agent steals the port
+    /// (contention model); deterministic in the cycle number.
+    pub contention: f64,
+    contention_seed: u64,
+
+    inflight_r: VecDeque<InflightRead>,
+    writes: VecDeque<InflightWrite>,
+    write_resps: VecDeque<(Cycle, WriteResp)>,
+    outstanding_w: usize,
+    next_r_slot: Cycle,
+    next_w_slot: Cycle,
+    /// Total beats delivered/accepted (stats).
+    pub read_beats: u64,
+    /// Total write beats accepted (stats).
+    pub write_beats: u64,
+}
+
+impl Endpoint {
+    /// Create an endpoint with zeroed memory.
+    pub fn new(model: MemModel) -> Self {
+        Self {
+            model,
+            data: SparseMemory::new(),
+            inject: None,
+            contention: 0.0,
+            contention_seed: 0x1D3A_C0FF_EE00_1234,
+            inflight_r: VecDeque::new(),
+            writes: VecDeque::new(),
+            write_resps: VecDeque::new(),
+            outstanding_w: 0,
+            next_r_slot: 0,
+            next_w_slot: 0,
+            read_beats: 0,
+            write_beats: 0,
+        }
+    }
+
+    /// Configure port contention (probability a data-beat slot is stolen
+    /// by other agents in any given cycle).
+    pub fn with_contention(mut self, p: f64, seed: u64) -> Self {
+        self.contention = p;
+        self.contention_seed = seed;
+        self
+    }
+
+    fn stolen(&self, now: Cycle, salt: u64) -> bool {
+        if self.contention <= 0.0 {
+            return false;
+        }
+        let mut z = now ^ self.contention_seed.rotate_left(23) ^ salt.rotate_left(48);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        ((z >> 11) as f64 / (1u64 << 53) as f64) < self.contention
+    }
+
+    // ------------------------------------------------------------- reads
+
+    /// Number of read transactions currently in flight.
+    pub fn outstanding_reads(&self) -> usize {
+        self.inflight_r.len()
+    }
+
+    /// Whether a read request would be accepted this cycle.
+    pub fn can_accept_read(&self) -> bool {
+        self.inflight_r.len() < self.model.max_outstanding_r
+    }
+
+    /// Issue a read burst `[addr, addr+len)`. Returns `false` when the
+    /// outstanding limit is reached.
+    pub fn try_read_req(&mut self, now: Cycle, addr: u64, len: u64, owner: u32) -> bool {
+        if !self.can_accept_read() {
+            return false;
+        }
+        let error = self.inject.as_mut().map(|i| i.faults(addr, len)).unwrap_or(false);
+        self.inflight_r.push_back(InflightRead {
+            ready_at: now + self.model.latency,
+            end: addr + len,
+            cursor: addr,
+            error,
+            owner,
+        });
+        true
+    }
+
+    /// Owner of the read beat available this cycle, if any.
+    pub fn read_beat_owner(&self, now: Cycle) -> Option<u32> {
+        if self.next_r_slot > now || self.stolen(now, 0x5EAD) {
+            return None;
+        }
+        self.inflight_r.front().filter(|b| b.ready_at <= now).map(|b| b.owner)
+    }
+
+    /// Payload size of the beat that [`Self::take_read_beat`] would
+    /// deliver this cycle (lets narrow consumers apply exact back
+    /// pressure instead of worst-case bus-width reservations).
+    pub fn peek_read_beat_len(&self, now: Cycle) -> Option<u64> {
+        if self.next_r_slot > now || self.stolen(now, 0x5EAD) {
+            return None;
+        }
+        let b = self.inflight_r.front()?;
+        if b.ready_at > now {
+            return None;
+        }
+        let width = self.model.width;
+        let window_end = (b.cursor / width + 1) * width;
+        Some(window_end.min(b.end) - b.cursor)
+    }
+
+    /// Pull the read data beat available this cycle. Callers must check
+    /// [`Self::read_beat_owner`] first; at most one beat per cycle.
+    pub fn take_read_beat(&mut self, now: Cycle) -> Option<ReadBeat> {
+        self.take_read_beat_into(now, Vec::new())
+    }
+
+    /// [`Self::take_read_beat`] reusing a recycled allocation for the
+    /// beat payload (hot path: zero allocations per cycle).
+    pub fn take_read_beat_into(&mut self, now: Cycle, mut data: Vec<u8>) -> Option<ReadBeat> {
+        if self.next_r_slot > now || self.stolen(now, 0x5EAD) {
+            return None;
+        }
+        let b = self.inflight_r.front_mut()?;
+        if b.ready_at > now {
+            return None;
+        }
+        // Beat window: up to the next bus-width boundary.
+        let width = self.model.width;
+        let window_end = (b.cursor / width + 1) * width;
+        let end = window_end.min(b.end);
+        let n = (end - b.cursor) as usize;
+        data.clear();
+        data.resize(n, 0);
+        self.data.read(b.cursor, &mut data);
+        if b.error {
+            // Faulting reads return garbage (zeros here) — data must not
+            // be trusted; the error flag travels with the beat.
+            data.fill(0);
+        }
+        let beat = ReadBeat { data, addr: b.cursor, last: end == b.end, error: b.error, owner: b.owner };
+        b.cursor = end;
+        if beat.last {
+            self.inflight_r.pop_front();
+        }
+        self.next_r_slot = now + 1;
+        self.read_beats += 1;
+        Some(beat)
+    }
+
+    // ------------------------------------------------------------ writes
+
+    /// Number of write transactions currently in flight (AW accepted,
+    /// response not yet retired).
+    pub fn outstanding_writes(&self) -> usize {
+        self.outstanding_w
+    }
+
+    /// Whether a write request would be accepted this cycle.
+    pub fn can_accept_write(&self) -> bool {
+        self.outstanding_w < self.model.max_outstanding_w
+    }
+
+    /// Issue a write burst request (AXI AW). Data beats follow in order.
+    pub fn try_write_req(&mut self, now: Cycle, addr: u64, len: u64, owner: u32) -> bool {
+        let _ = now;
+        if !self.can_accept_write() {
+            return false;
+        }
+        let error = self.inject.as_mut().map(|i| i.faults(addr, len)).unwrap_or(false);
+        self.writes.push_back(InflightWrite { addr, end: addr + len, cursor: addr, error, owner });
+        self.outstanding_w += 1;
+        true
+    }
+
+    /// Owner of the write burst whose next data beat would be accepted.
+    pub fn write_beat_owner(&self, now: Cycle) -> Option<u32> {
+        if self.next_w_slot > now || self.stolen(now, 0x3417E) {
+            return None;
+        }
+        self.writes.front().map(|w| w.owner)
+    }
+
+    /// Max bytes the next write beat may carry (up to the bus boundary).
+    pub fn write_beat_capacity(&self) -> Option<u64> {
+        let w = self.writes.front()?;
+        let width = self.model.width;
+        let window_end = (w.cursor / width + 1) * width;
+        Some(window_end.min(w.end) - w.cursor)
+    }
+
+    /// Push one write data beat (`data.len()` must not exceed
+    /// [`Self::write_beat_capacity`]). Returns `false` if no beat slot is
+    /// available this cycle.
+    pub fn push_write_beat(&mut self, now: Cycle, data: &[u8]) -> bool {
+        if self.next_w_slot > now || self.stolen(now, 0x3417E) {
+            return false;
+        }
+        let resp_lat = self.model.write_resp_latency;
+        let Some(w) = self.writes.front_mut() else { return false };
+        let width = self.model.width;
+        let window_end = (w.cursor / width + 1) * width;
+        let cap = window_end.min(w.end) - w.cursor;
+        assert!(
+            data.len() as u64 <= cap,
+            "write beat of {} bytes exceeds beat capacity {}",
+            data.len(),
+            cap
+        );
+        let (cursor, error) = (w.cursor, w.error);
+        if !error {
+            // Faulting writes are swallowed (endpoint reports the error).
+            self.data.write(cursor, data);
+        }
+        let w = self.writes.front_mut().unwrap();
+        w.cursor += data.len() as u64;
+        if w.cursor >= w.end {
+            let resp = WriteResp { addr: w.addr, error: w.error, owner: w.owner };
+            self.writes.pop_front();
+            self.write_resps.push_back((now + resp_lat, resp));
+        }
+        self.next_w_slot = now + 1;
+        self.write_beats += 1;
+        true
+    }
+
+    /// Owner of the write response due this cycle, if any (shared
+    /// endpoints: engines only pop their own responses).
+    pub fn write_resp_owner(&self, now: Cycle) -> Option<u32> {
+        match self.write_resps.front() {
+            Some((due, r)) if *due <= now => Some(r.owner),
+            _ => None,
+        }
+    }
+
+    /// Retire a write response if one is due.
+    pub fn pop_write_resp(&mut self, now: Cycle) -> Option<WriteResp> {
+        match self.write_resps.front() {
+            Some((due, _)) if *due <= now => {
+                self.outstanding_w -= 1;
+                self.write_resps.pop_front().map(|(_, r)| r)
+            }
+            _ => None,
+        }
+    }
+
+    /// True when no transaction state is held (quiescent).
+    pub fn idle(&self) -> bool {
+        self.inflight_r.is_empty() && self.writes.is_empty() && self.write_resps.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(latency: u64, width: u64) -> Endpoint {
+        Endpoint::new(MemModel::custom("t", latency, 8, width))
+    }
+
+    #[test]
+    fn read_latency_honored() {
+        let mut e = ep(5, 4);
+        e.data.write(0, &[1, 2, 3, 4]);
+        assert!(e.try_read_req(10, 0, 4, 0));
+        for c in 10..15 {
+            assert!(e.take_read_beat(c).is_none(), "cycle {c}");
+        }
+        let b = e.take_read_beat(15).expect("beat at latency");
+        assert_eq!(b.data, vec![1, 2, 3, 4]);
+        assert!(b.last);
+    }
+
+    #[test]
+    fn one_beat_per_cycle() {
+        let mut e = ep(1, 4);
+        e.data.write(0, &[0xAA; 8]);
+        assert!(e.try_read_req(0, 0, 8, 0));
+        assert!(e.take_read_beat(1).is_some());
+        assert!(e.take_read_beat(1).is_none(), "second beat same cycle");
+        assert!(e.take_read_beat(2).is_some());
+    }
+
+    #[test]
+    fn unaligned_read_beats_are_narrow() {
+        let mut e = ep(0, 4);
+        e.data.write(0, &(0u8..16).collect::<Vec<_>>());
+        assert!(e.try_read_req(0, 3, 6, 0)); // bytes 3..9 on a 4B bus
+        let b1 = e.take_read_beat(0).unwrap();
+        assert_eq!(b1.data, vec![3]); // up to boundary 4
+        let b2 = e.take_read_beat(1).unwrap();
+        assert_eq!(b2.data, vec![4, 5, 6, 7]);
+        let b3 = e.take_read_beat(2).unwrap();
+        assert_eq!(b3.data, vec![8]);
+        assert!(b3.last);
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn outstanding_limit_enforced() {
+        let mut e = Endpoint::new(MemModel::custom("t", 10, 2, 4));
+        assert!(e.try_read_req(0, 0, 4, 0));
+        assert!(e.try_read_req(0, 4, 4, 0));
+        assert!(!e.try_read_req(0, 8, 4, 0), "third must be refused");
+        // drain one
+        let _ = e.take_read_beat(10).unwrap();
+        assert!(e.try_read_req(10, 8, 4, 0));
+    }
+
+    #[test]
+    fn pipelined_bursts_stream_back_to_back() {
+        let mut e = ep(10, 4);
+        e.data.write(0, &[7u8; 32]);
+        assert!(e.try_read_req(0, 0, 16, 0));
+        assert!(e.try_read_req(1, 16, 16, 0));
+        // burst 1 beats at cycles 10..13, burst 2 beats at 14..17 (no gap)
+        let mut beats = 0;
+        for c in 10..18 {
+            if e.take_read_beat(c).is_some() {
+                beats += 1;
+            }
+        }
+        assert_eq!(beats, 8, "8 beats over 8 cycles: perfect pipelining");
+    }
+
+    #[test]
+    fn write_roundtrip_with_resp() {
+        let mut e = ep(3, 4);
+        assert!(e.try_write_req(0, 8, 8, 0));
+        assert!(e.push_write_beat(0, &[1, 2, 3, 4]));
+        assert!(!e.push_write_beat(0, &[5, 6, 7, 8]), "one beat/cycle");
+        assert!(e.push_write_beat(1, &[5, 6, 7, 8]));
+        assert!(e.pop_write_resp(3).is_none());
+        let r = e.pop_write_resp(4).expect("resp after resp latency");
+        assert!(!r.error);
+        assert_eq!(e.data.read_vec(8, 8), vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn unaligned_write_capacity() {
+        let mut e = ep(0, 4);
+        assert!(e.try_write_req(0, 2, 6, 0));
+        assert_eq!(e.write_beat_capacity(), Some(2)); // 2..4
+        assert!(e.push_write_beat(0, &[0xA, 0xB]));
+        assert_eq!(e.write_beat_capacity(), Some(4)); // 4..8
+    }
+
+    #[test]
+    fn error_injection_on_range() {
+        let mut e = ep(1, 4);
+        e.inject = Some(ErrorInjector { ranges: vec![(100, 200)], ..Default::default() });
+        assert!(e.try_read_req(0, 96, 8, 0)); // overlaps 100
+        let b = e.take_read_beat(1).unwrap();
+        assert!(b.error);
+        // writes to faulting range are swallowed
+        assert!(e.try_write_req(0, 100, 4, 0));
+        assert!(e.push_write_beat(2, &[1, 2, 3, 4]));
+        let r = e.pop_write_resp(5).unwrap();
+        assert!(r.error);
+        assert_eq!(e.data.read_vec(100, 4), vec![0, 0, 0, 0], "faulting write swallowed");
+    }
+
+    #[test]
+    fn contention_steals_slots() {
+        let mut e = ep(1, 4).with_contention(1.0, 42);
+        e.data.write(0, &[1; 4]);
+        assert!(e.try_read_req(0, 0, 4, 0));
+        for c in 1..50 {
+            assert!(e.take_read_beat(c).is_none(), "contention=1.0 must block");
+        }
+    }
+}

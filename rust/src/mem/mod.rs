@@ -1,0 +1,10 @@
+//! Memory-system substrate: sparse byte storage, timing models and timed
+//! endpoints (paper §4.4's SRAM / RPC-DRAM / HBM systems, plus TCDM).
+
+mod endpoint;
+mod model;
+mod sparse;
+
+pub use endpoint::{Endpoint, ErrorInjector, ReadBeat, TransientFault, WriteResp};
+pub use model::MemModel;
+pub use sparse::{SparseMemory, PAGE_SIZE};

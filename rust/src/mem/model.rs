@@ -1,0 +1,103 @@
+//! Memory-system timing models (paper §4.4).
+//!
+//! A memory system is characterized — exactly as the paper does — by its
+//! access latency and the number of outstanding transfers it can track,
+//! plus the port data width. The three presets are the paper's §4.4
+//! evaluation systems.
+
+/// Timing parameters of a memory endpoint.
+#[derive(Debug, Clone)]
+pub struct MemModel {
+    /// Human-readable name for reports.
+    pub name: String,
+    /// Cycles from read-request acceptance to the first read data beat.
+    pub latency: u64,
+    /// Cycles from the last write data beat to the write response.
+    pub write_resp_latency: u64,
+    /// Maximum outstanding read transactions the endpoint tracks.
+    pub max_outstanding_r: usize,
+    /// Maximum outstanding write transactions the endpoint tracks.
+    pub max_outstanding_w: usize,
+    /// Port data width in bytes (one beat carries up to this many bytes).
+    pub width: u64,
+}
+
+impl MemModel {
+    /// L2-class SRAM as in PULP-open: 3 cycles latency, 8 outstanding.
+    pub fn sram(width: u64) -> Self {
+        Self {
+            name: "SRAM".into(),
+            latency: 3,
+            write_resp_latency: 3,
+            max_outstanding_r: 8,
+            max_outstanding_w: 8,
+            width,
+        }
+    }
+
+    /// Single-cycle tightly-coupled data memory (PULP TCDM).
+    pub fn tcdm(width: u64) -> Self {
+        Self {
+            name: "TCDM".into(),
+            latency: 1,
+            write_resp_latency: 1,
+            max_outstanding_r: 2,
+            max_outstanding_w: 2,
+            width,
+        }
+    }
+
+    /// Reduced-pin-count DRAM behind its open-source AXI controller at
+    /// 933 MHz: ~13 cycles latency, 16 outstanding (paper §4.4).
+    pub fn rpc_dram(width: u64) -> Self {
+        Self {
+            name: "RPC-DRAM".into(),
+            latency: 13,
+            write_resp_latency: 13,
+            max_outstanding_r: 16,
+            max_outstanding_w: 16,
+            width,
+        }
+    }
+
+    /// Industry-grade HBM interface: ~100 cycles latency, >64 outstanding
+    /// (paper §4.4).
+    pub fn hbm(width: u64) -> Self {
+        Self {
+            name: "HBM".into(),
+            latency: 100,
+            write_resp_latency: 20,
+            max_outstanding_r: 96,
+            max_outstanding_w: 96,
+            width,
+        }
+    }
+
+    /// Fully custom model.
+    pub fn custom(name: &str, latency: u64, outstanding: usize, width: u64) -> Self {
+        Self {
+            name: name.into(),
+            latency,
+            write_resp_latency: latency,
+            max_outstanding_r: outstanding,
+            max_outstanding_w: outstanding,
+            width,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_section_4_4() {
+        let s = MemModel::sram(4);
+        assert_eq!((s.latency, s.max_outstanding_r), (3, 8));
+        let r = MemModel::rpc_dram(4);
+        assert_eq!((r.latency, r.max_outstanding_r), (13, 16));
+        let h = MemModel::hbm(4);
+        assert_eq!(h.latency, 100);
+        assert!(h.max_outstanding_r > 64);
+    }
+}

@@ -1,0 +1,218 @@
+//! Sparse byte-addressable memory backing store.
+//!
+//! Every simulated transfer moves *real bytes* through one of these, so
+//! all benchmarks double as end-to-end correctness checks. Pages are
+//! allocated lazily; unwritten bytes read as zero (like zero-initialized
+//! SRAM/DRAM models in RTL testbenches).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Page size of the backing store (matches the AXI 4 KiB page, but this
+/// is purely an implementation detail of the store).
+pub const PAGE_SIZE: u64 = 4096;
+
+/// Trivial multiplicative hasher for page numbers — the page map sits on
+/// the per-beat hot path, where SipHash is measurable overhead
+/// (EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct PageHasher(u64);
+
+impl Hasher for PageHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01B3);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+}
+
+/// Lazily-allocated sparse memory over the full 64-bit address space.
+#[derive(Debug, Default, Clone)]
+pub struct SparseMemory {
+    pages: HashMap<u64, Box<[u8; PAGE_SIZE as usize]>, BuildHasherDefault<PageHasher>>,
+}
+
+impl SparseMemory {
+    /// Create an empty memory.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read `buf.len()` bytes starting at `addr`.
+    pub fn read(&self, addr: u64, buf: &mut [u8]) {
+        let mut a = addr;
+        let mut off = 0usize;
+        while off < buf.len() {
+            let page = a / PAGE_SIZE;
+            let in_page = (a % PAGE_SIZE) as usize;
+            let n = ((PAGE_SIZE as usize - in_page).min(buf.len() - off)) as usize;
+            match self.pages.get(&page) {
+                Some(p) => buf[off..off + n].copy_from_slice(&p[in_page..in_page + n]),
+                None => buf[off..off + n].fill(0),
+            }
+            a += n as u64;
+            off += n;
+        }
+    }
+
+    /// Write `buf` starting at `addr`.
+    pub fn write(&mut self, addr: u64, buf: &[u8]) {
+        let mut a = addr;
+        let mut off = 0usize;
+        while off < buf.len() {
+            let page = a / PAGE_SIZE;
+            let in_page = (a % PAGE_SIZE) as usize;
+            let n = ((PAGE_SIZE as usize - in_page).min(buf.len() - off)) as usize;
+            let p = self.pages.entry(page).or_insert_with(|| Box::new([0u8; PAGE_SIZE as usize]));
+            p[in_page..in_page + n].copy_from_slice(&buf[off..off + n]);
+            a += n as u64;
+            off += n;
+        }
+    }
+
+    /// Convenience: read a vector of `len` bytes.
+    pub fn read_vec(&self, addr: u64, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.read(addr, &mut v);
+        v
+    }
+
+    /// Read a single byte.
+    pub fn read_u8(&self, addr: u64) -> u8 {
+        let mut b = [0u8; 1];
+        self.read(addr, &mut b);
+        b[0]
+    }
+
+    /// Read a little-endian u32.
+    pub fn read_u32(&self, addr: u64) -> u32 {
+        let mut b = [0u8; 4];
+        self.read(addr, &mut b);
+        u32::from_le_bytes(b)
+    }
+
+    /// Read a little-endian u64.
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        let mut b = [0u8; 8];
+        self.read(addr, &mut b);
+        u64::from_le_bytes(b)
+    }
+
+    /// Write a little-endian u32.
+    pub fn write_u32(&mut self, addr: u64, v: u32) {
+        self.write(addr, &v.to_le_bytes());
+    }
+
+    /// Write a little-endian u64.
+    pub fn write_u64(&mut self, addr: u64, v: u64) {
+        self.write(addr, &v.to_le_bytes());
+    }
+
+    /// Write an `f32` slice (little-endian), returning the byte length.
+    pub fn write_f32s(&mut self, addr: u64, vs: &[f32]) -> u64 {
+        let mut bytes = Vec::with_capacity(vs.len() * 4);
+        for v in vs {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(addr, &bytes);
+        bytes.len() as u64
+    }
+
+    /// Read an `f32` slice.
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
+        let bytes = self.read_vec(addr, n * 4);
+        bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    }
+
+    /// Write an `f64` slice (little-endian).
+    pub fn write_f64s(&mut self, addr: u64, vs: &[f64]) -> u64 {
+        let mut bytes = Vec::with_capacity(vs.len() * 8);
+        for v in vs {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(addr, &bytes);
+        bytes.len() as u64
+    }
+
+    /// Read an `f64` slice.
+    pub fn read_f64s(&self, addr: u64, n: usize) -> Vec<f64> {
+        let bytes = self.read_vec(addr, n * 8);
+        bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect()
+    }
+
+    /// Number of pages currently allocated.
+    pub fn allocated_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwritten_reads_zero() {
+        let m = SparseMemory::new();
+        assert_eq!(m.read_vec(0xDEAD_BEEF, 8), vec![0; 8]);
+    }
+
+    #[test]
+    fn roundtrip_within_page() {
+        let mut m = SparseMemory::new();
+        m.write(100, &[1, 2, 3, 4]);
+        assert_eq!(m.read_vec(100, 4), vec![1, 2, 3, 4]);
+        assert_eq!(m.read_u8(102), 3);
+    }
+
+    #[test]
+    fn roundtrip_across_pages() {
+        let mut m = SparseMemory::new();
+        let data: Vec<u8> = (0..=255).collect();
+        let addr = PAGE_SIZE - 100; // crosses a page boundary
+        m.write(addr, &data);
+        assert_eq!(m.read_vec(addr, 256), data);
+        assert_eq!(m.allocated_pages(), 2);
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let mut m = SparseMemory::new();
+        m.write_u32(0, 0xAABB_CCDD);
+        m.write_u64(8, 0x1122_3344_5566_7788);
+        assert_eq!(m.read_u32(0), 0xAABB_CCDD);
+        assert_eq!(m.read_u64(8), 0x1122_3344_5566_7788);
+    }
+
+    #[test]
+    fn float_helpers_roundtrip() {
+        let mut m = SparseMemory::new();
+        let xs = vec![1.5f32, -2.25, 3.0];
+        m.write_f32s(0x100, &xs);
+        assert_eq!(m.read_f32s(0x100, 3), xs);
+        let ys = vec![1.5f64, -2.25, 3.0e17];
+        m.write_f64s(0x200, &ys);
+        assert_eq!(m.read_f64s(0x200, 3), ys);
+    }
+
+    #[test]
+    fn partial_overwrite() {
+        let mut m = SparseMemory::new();
+        m.write(0, &[0xFF; 16]);
+        m.write(4, &[0u8, 1, 2, 3]);
+        let v = m.read_vec(0, 16);
+        assert_eq!(&v[0..4], &[0xFF; 4]);
+        assert_eq!(&v[4..8], &[0, 1, 2, 3]);
+        assert_eq!(&v[8..16], &[0xFF; 8]);
+    }
+}

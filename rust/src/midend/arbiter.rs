@@ -1,0 +1,137 @@
+//! Round-robin arbitration mid-end: funnels multiple front-ends into one
+//! mid-end chain (the PULP-open integration connects the per-core
+//! `reg_32_3d` front-ends through such an arbiter, §3.1).
+
+use super::{MidEnd, NdJob};
+use crate::sim::{Cycle, Fifo};
+
+/// N-input, 1-output round-robin arbiter.
+#[derive(Debug)]
+pub struct RoundRobinArbiter {
+    inq: Vec<Fifo<NdJob>>,
+    rr: usize,
+    out: Fifo<NdJob>,
+}
+
+impl RoundRobinArbiter {
+    /// Create an arbiter with `n` input ports.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        Self { inq: (0..n).map(|_| Fifo::new(1)).collect(), rr: 0, out: Fifo::new(2) }
+    }
+
+    /// Number of input ports.
+    pub fn inputs(&self) -> usize {
+        self.inq.len()
+    }
+
+    /// Whether input `port` can accept a job this cycle.
+    pub fn can_accept_port(&self, port: usize) -> bool {
+        self.inq[port].can_push()
+    }
+
+    /// Offer a job on input `port`.
+    pub fn accept_port(&mut self, now: Cycle, port: usize, j: NdJob) -> bool {
+        self.inq[port].push(now, j)
+    }
+}
+
+impl MidEnd for RoundRobinArbiter {
+    fn name(&self) -> &'static str {
+        "rr_arbiter"
+    }
+
+    fn can_accept(&self) -> bool {
+        self.inq[0].can_push()
+    }
+
+    fn accept(&mut self, now: Cycle, j: NdJob) -> bool {
+        self.accept_port(now, 0, j)
+    }
+
+    fn tick(&mut self, now: Cycle) {
+        if !self.out.can_push() {
+            return;
+        }
+        // Grant one input per cycle, round-robin from the last grant.
+        let n = self.inq.len();
+        for k in 0..n {
+            let p = (self.rr + k) % n;
+            if let Some(j) = self.inq[p].pop(now) {
+                self.out.push(now, j);
+                self.rr = (p + 1) % n;
+                return;
+            }
+        }
+    }
+
+    fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.pop(now)
+    }
+
+    fn peek_port(&self, now: Cycle, port: usize) -> Option<&NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.out.is_empty() || self.inq.iter().any(|q| !q.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::ProtocolKind;
+    use crate::transfer::{NdTransfer, Transfer1D};
+
+    fn j(id: u64) -> NdJob {
+        NdJob::new(id, NdTransfer::d1(Transfer1D::copy(id, 0, 0, 4, ProtocolKind::Obi)))
+    }
+
+    #[test]
+    fn fair_round_robin_under_contention() {
+        let mut a = RoundRobinArbiter::new(4);
+        let mut got = Vec::new();
+        let mut now = 0u64;
+        // every port continuously offers
+        let mut next_id = [0u64, 100, 200, 300];
+        for _ in 0..40 {
+            for p in 0..4 {
+                if a.can_accept_port(p) {
+                    a.accept_port(now, p, j(next_id[p]));
+                    next_id[p] += 1;
+                }
+            }
+            a.tick(now);
+            if let Some(o) = a.pop(now) {
+                got.push(o.job);
+            }
+            now += 1;
+        }
+        // all four sources served nearly equally
+        for base in [0u64, 100, 200, 300] {
+            let n = got.iter().filter(|&&g| g / 100 == base / 100).count();
+            assert!(n >= 8, "source {base} starved: {n} grants of {}", got.len());
+        }
+    }
+
+    #[test]
+    fn single_source_full_throughput() {
+        let mut a = RoundRobinArbiter::new(4);
+        let mut got = 0;
+        let mut sent = 0u64;
+        for now in 0..50 {
+            if a.can_accept_port(2) && sent < 20 {
+                a.accept_port(now, 2, j(sent));
+                sent += 1;
+            }
+            a.tick(now);
+            if a.pop(now).is_some() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 20, "an uncontended source must not be throttled");
+    }
+}

@@ -1,0 +1,91 @@
+//! iDMA **mid-ends** (paper §2.2, Table 2): transfer acceleration between
+//! front-end and back-end.
+//!
+//! Mid-ends consume bundles of mid-end configuration plus a transfer
+//! descriptor ([`NdJob`]), strip their configuration, and emit modified
+//! descriptors. All boundaries are ready/valid and pipelined; each
+//! mid-end adds one cycle of latency (`tensor_ND` can be configured to
+//! zero — §4.3).
+//!
+//! | paper id    | type                  |
+//! |-------------|-----------------------|
+//! | `tensor_2D` | [`Tensor2D`]          |
+//! | `tensor_ND` | [`TensorNd`]          |
+//! | `mp_split`  | [`MpSplit`]           |
+//! | `mp_dist`   | [`MpDist`]            |
+//! | `rt_3D`     | [`Rt3D`]              |
+//! | (arbiter)   | [`RoundRobinArbiter`] |
+
+mod arbiter;
+mod mp_dist;
+mod mp_split;
+mod rt3d;
+mod tensor;
+
+pub use arbiter::RoundRobinArbiter;
+pub use mp_dist::{DistSide, MpDist};
+pub use mp_split::{MpSplit, SplitSide};
+pub use rt3d::{Rt3D, Rt3DConfig};
+pub use tensor::{Tensor2D, TensorNd};
+
+use crate::sim::Cycle;
+use crate::transfer::NdTransfer;
+
+/// A transfer descriptor travelling the mid-end chain, tagged with the
+/// front-end-level job it belongs to (several 1D descriptors may share a
+/// job after tensor expansion).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NdJob {
+    /// Front-end job identifier (the transfer ID handed to the PE).
+    pub job: u64,
+    /// The (possibly still multi-dimensional) transfer.
+    pub nd: NdTransfer,
+}
+
+impl NdJob {
+    /// Wrap a transfer into a job.
+    pub fn new(job: u64, nd: NdTransfer) -> Self {
+        Self { job, nd }
+    }
+}
+
+/// Common interface of all mid-ends. Multi-output mid-ends ([`MpDist`])
+/// report `outputs() > 1` and are popped per port.
+pub trait MidEnd {
+    /// Table 2 identifier.
+    fn name(&self) -> &'static str;
+
+    /// Ready/valid in: whether an [`NdJob`] would be accepted this cycle.
+    fn can_accept(&self) -> bool;
+
+    /// Offer a job. Returns `false` when back-pressured.
+    fn accept(&mut self, now: Cycle, j: NdJob) -> bool;
+
+    /// Advance internal state by one cycle (autonomous mid-ends).
+    fn tick(&mut self, _now: Cycle) {}
+
+    /// Number of output ports (1 for all but `mp_dist`).
+    fn outputs(&self) -> usize {
+        1
+    }
+
+    /// Pop an output job from `port`.
+    fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob>;
+
+    /// Pop from port 0 (the common single-output case).
+    fn pop(&mut self, now: Cycle) -> Option<NdJob> {
+        self.pop_port(now, 0)
+    }
+
+    /// Peek output `port` without consuming.
+    fn peek_port(&self, now: Cycle, port: usize) -> Option<&NdJob>;
+
+    /// True while jobs are buffered or being expanded.
+    fn busy(&self) -> bool;
+
+    /// Cycles of latency this mid-end adds to the launch path (§4.3:
+    /// one per mid-end; zero for the zero-latency tensor_ND config).
+    fn added_latency(&self) -> u64 {
+        1
+    }
+}

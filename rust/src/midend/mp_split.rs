@@ -1,0 +1,181 @@
+//! `mp_split` (paper §2.2): splits linear transfers along a parametric
+//! address boundary, guaranteeing no resulting transfer crosses it —
+//! required before distributing transfers over multiple back-ends whose
+//! memory regions interleave at that boundary (MemPool, §3.4).
+
+use super::{MidEnd, NdJob};
+use crate::sim::{Cycle, Fifo};
+use crate::transfer::NdTransfer;
+
+/// Which address of the transfer the boundary applies to (in MemPool the
+/// distributed side is the L1 scratchpad, which may be either end).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitSide {
+    /// Split so no piece crosses a boundary on the source address.
+    Src,
+    /// Split so no piece crosses a boundary on the destination address.
+    Dst,
+}
+
+/// The `mp_split` mid-end.
+#[derive(Debug)]
+pub struct MpSplit {
+    boundary: u64,
+    side: SplitSide,
+    inq: Fifo<NdJob>,
+    active: Option<NdJob>,
+    out: Fifo<NdJob>,
+}
+
+impl MpSplit {
+    /// Split at multiples of `boundary` (must be a power of two) on the
+    /// given side.
+    pub fn new(boundary: u64, side: SplitSide) -> Self {
+        assert!(boundary.is_power_of_two(), "split boundary must be a power of two");
+        Self { boundary, side, inq: Fifo::new(2), active: None, out: Fifo::new(2) }
+    }
+
+    /// The configured boundary.
+    pub fn boundary(&self) -> u64 {
+        self.boundary
+    }
+
+    fn pump(&mut self, now: Cycle) {
+        if self.active.is_none() {
+            self.active = self.inq.pop(now);
+            if let Some(j) = &self.active {
+                assert!(j.nd.dims.is_empty(), "mp_split accepts linear transfers only");
+            }
+        }
+        let Some(j) = self.active.as_mut() else { return };
+        if !self.out.can_push() {
+            return;
+        }
+        let t = &mut j.nd.inner;
+        let key = match self.side {
+            SplitSide::Src => t.src,
+            SplitSide::Dst => t.dst,
+        };
+        let next_boundary = (key / self.boundary + 1) * self.boundary;
+        let piece = (next_boundary - key).min(t.len);
+        let mut out_t = *t;
+        out_t.len = piece;
+        let job = j.job;
+        t.src += piece;
+        t.dst += piece;
+        t.len -= piece;
+        let done = t.len == 0;
+        self.out.push(now, NdJob::new(job, NdTransfer::d1(out_t)));
+        if done {
+            self.active = None;
+        }
+    }
+}
+
+impl MidEnd for MpSplit {
+    fn name(&self) -> &'static str {
+        "mp_split"
+    }
+
+    fn can_accept(&self) -> bool {
+        self.inq.can_push()
+    }
+
+    fn accept(&mut self, now: Cycle, j: NdJob) -> bool {
+        if !j.nd.dims.is_empty() {
+            return false;
+        }
+        self.inq.push(now, j)
+    }
+
+    fn tick(&mut self, now: Cycle) {
+        self.pump(now);
+    }
+
+    fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.pop(now)
+    }
+
+    fn peek_port(&self, now: Cycle, port: usize) -> Option<&NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.inq.is_empty() || self.active.is_some() || !self.out.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::ProtocolKind;
+    use crate::transfer::Transfer1D;
+
+    fn split_all(boundary: u64, side: SplitSide, src: u64, dst: u64, len: u64) -> Vec<Transfer1D> {
+        let mut me = MpSplit::new(boundary, side);
+        let j = NdJob::new(1, NdTransfer::d1(Transfer1D::copy(0, src, dst, len, ProtocolKind::Axi4)));
+        let mut offered = Some(j);
+        let mut out = Vec::new();
+        for now in 0..10_000 {
+            me.tick(now);
+            if let Some(jj) = offered.take() {
+                if !me.accept(now, jj.clone()) {
+                    offered = Some(jj);
+                }
+            }
+            if let Some(o) = me.pop(now) {
+                out.push(o.nd.inner);
+            }
+            if offered.is_none() && !me.busy() {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn no_piece_crosses_boundary() {
+        for &(src, len) in &[(0u64, 4096u64), (100, 1000), (1020, 16), (4095, 2), (0, 1)] {
+            let pieces = split_all(1024, SplitSide::Dst, 0x5_0000 + src, src, len);
+            let mut covered = 0;
+            for p in &pieces {
+                // piece stays within one 1024-aligned window on dst
+                assert_eq!(p.dst / 1024, (p.dst + p.len - 1) / 1024, "{p:?}");
+                covered += p.len;
+            }
+            assert_eq!(covered, len);
+            // contiguous reconstruction
+            for w in pieces.windows(2) {
+                assert_eq!(w[0].dst + w[0].len, w[1].dst);
+                assert_eq!(w[0].src + w[0].len, w[1].src);
+            }
+        }
+    }
+
+    #[test]
+    fn src_side_split() {
+        let pieces = split_all(256, SplitSide::Src, 200, 0x9000, 300);
+        assert_eq!(pieces.len(), 2); // [200,256) then [256,500)
+        assert_eq!(pieces[0].len, 56);
+        assert_eq!(pieces[1].len, 244);
+        assert_eq!(pieces[0].dst, 0x9000);
+        assert_eq!(pieces[1].dst, 0x9000 + 56);
+    }
+
+    #[test]
+    fn aligned_transfer_within_boundary_stays_whole() {
+        let pieces = split_all(4096, SplitSide::Dst, 0, 4096, 4096);
+        assert_eq!(pieces.len(), 1);
+        assert_eq!(pieces[0].len, 4096);
+    }
+
+    #[test]
+    fn rejects_nd_jobs() {
+        let mut me = MpSplit::new(64, SplitSide::Dst);
+        let inner = Transfer1D::copy(0, 0, 0, 8, ProtocolKind::Axi4);
+        let j = NdJob::new(0, NdTransfer::d2(inner, 8, 8, 2));
+        assert!(!me.accept(0, j));
+    }
+}

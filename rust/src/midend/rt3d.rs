@@ -1,0 +1,215 @@
+//! `rt_3D` (paper §2.2, §3.2): the real-time mid-end. Once programmed
+//! through the front-end, it autonomously launches a repeated 3D
+//! transfer every period — e.g. reading out PVT sensor arrays in
+//! ControlPULP — without involving any PE. A bypass path lets the core
+//! dispatch unrelated transfers through the same front- and back-end.
+
+use super::{MidEnd, NdJob};
+use crate::sim::{Cycle, Fifo};
+use crate::transfer::NdTransfer;
+
+/// Programming of the repeated 3D task (written via the `reg_32_rt_3d`
+/// front-end).
+#[derive(Debug, Clone)]
+pub struct Rt3DConfig {
+    /// The 3D transfer template launched every period.
+    pub template: NdTransfer,
+    /// Launch period in cycles.
+    pub period: u64,
+    /// Number of launches (`None` = run until disabled).
+    pub count: Option<u64>,
+    /// First launch cycle offset.
+    pub phase: u64,
+}
+
+/// The `rt_3D` mid-end.
+#[derive(Debug)]
+pub struct Rt3D {
+    cfg: Option<Rt3DConfig>,
+    enabled: bool,
+    next_launch: Cycle,
+    launched: u64,
+    /// Monotonically growing job ids for autonomous launches (tagged with
+    /// a high bit so they never collide with front-end jobs).
+    next_job: u64,
+    bypass: Fifo<NdJob>,
+    out: Fifo<NdJob>,
+    /// Launches that could not be queued because of back pressure
+    /// (missed deadlines — a real-time health metric).
+    pub overruns: u64,
+}
+
+/// Job-id tag for autonomous rt_3D launches.
+pub const RT_JOB_BIT: u64 = 1 << 63;
+
+impl Rt3D {
+    /// Create an unprogrammed rt_3D mid-end (pure bypass).
+    pub fn new() -> Self {
+        Self {
+            cfg: None,
+            enabled: false,
+            next_launch: 0,
+            launched: 0,
+            next_job: 0,
+            bypass: Fifo::new(2),
+            out: Fifo::new(4),
+            overruns: 0,
+        }
+    }
+
+    /// Program the repeated task and arm it.
+    pub fn program(&mut self, now: Cycle, cfg: Rt3DConfig) {
+        self.next_launch = now + cfg.phase;
+        self.launched = 0;
+        self.cfg = Some(cfg);
+        self.enabled = true;
+    }
+
+    /// Disarm the repeated task (bypass continues to work).
+    pub fn disable(&mut self) {
+        self.enabled = false;
+    }
+
+    /// Number of autonomous launches so far.
+    pub fn launched(&self) -> u64 {
+        self.launched
+    }
+}
+
+impl Default for Rt3D {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MidEnd for Rt3D {
+    fn name(&self) -> &'static str {
+        "rt_3D"
+    }
+
+    fn can_accept(&self) -> bool {
+        self.bypass.can_push()
+    }
+
+    fn accept(&mut self, now: Cycle, j: NdJob) -> bool {
+        self.bypass.push(now, j)
+    }
+
+    fn tick(&mut self, now: Cycle) {
+        // Autonomous launch has priority over bypass traffic.
+        if self.enabled {
+            if let Some(cfg) = &self.cfg {
+                let due = now >= self.next_launch
+                    && cfg.count.map(|c| self.launched < c).unwrap_or(true);
+                if due {
+                    if self.out.can_push() {
+                        let job = RT_JOB_BIT | self.next_job;
+                        self.next_job += 1;
+                        self.launched += 1;
+                        self.out.push(now, NdJob::new(job, cfg.template.clone()));
+                        self.next_launch += cfg.period;
+                    } else if now > self.next_launch + cfg.period {
+                        // A whole period elapsed without queue space.
+                        self.overruns += 1;
+                        self.next_launch += cfg.period;
+                    }
+                }
+            }
+        }
+        // Forward bypass traffic when no launch is contending.
+        if self.out.can_push() {
+            if let Some(j) = self.bypass.pop(now) {
+                self.out.push(now, j);
+            }
+        }
+    }
+
+    fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.pop(now)
+    }
+
+    fn peek_port(&self, now: Cycle, port: usize) -> Option<&NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.bypass.is_empty() || !self.out.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::ProtocolKind;
+    use crate::transfer::{NdDim, Transfer1D};
+
+    fn template() -> NdTransfer {
+        let inner = Transfer1D::copy(0, 0x4000_0000, 0x100, 8, ProtocolKind::Axi4);
+        let mut nd = NdTransfer::d2(inner, 64, 8, 4);
+        nd.dims.push(NdDim { src_stride: 4096, dst_stride: 32, reps: 2 });
+        nd
+    }
+
+    #[test]
+    fn launches_periodically() {
+        let mut rt = Rt3D::new();
+        rt.program(0, Rt3DConfig { template: template(), period: 100, count: Some(3), phase: 10 });
+        let mut launch_cycles = Vec::new();
+        for now in 0..500 {
+            rt.tick(now);
+            if let Some(j) = rt.pop(now) {
+                assert!(j.job & RT_JOB_BIT != 0);
+                assert_eq!(j.nd, template());
+                launch_cycles.push(now);
+            }
+        }
+        assert_eq!(launch_cycles.len(), 3);
+        assert_eq!(launch_cycles[1] - launch_cycles[0], 100);
+        assert_eq!(launch_cycles[2] - launch_cycles[1], 100);
+    }
+
+    #[test]
+    fn bypass_passes_unrelated_transfers() {
+        let mut rt = Rt3D::new();
+        let j = NdJob::new(5, template());
+        assert!(rt.accept(0, j.clone()));
+        rt.tick(1);
+        let got = rt.pop(2).expect("bypass forwards");
+        assert_eq!(got.job, 5);
+    }
+
+    #[test]
+    fn disable_stops_launches() {
+        let mut rt = Rt3D::new();
+        rt.program(0, Rt3DConfig { template: template(), period: 10, count: None, phase: 0 });
+        let mut n = 0;
+        for now in 0..50 {
+            rt.tick(now);
+            if rt.pop(now).is_some() {
+                n += 1;
+            }
+        }
+        assert!(n >= 4);
+        rt.disable();
+        for now in 50..100 {
+            rt.tick(now);
+            assert!(rt.pop(now).is_none());
+        }
+    }
+
+    #[test]
+    fn infinite_count_keeps_launching() {
+        let mut rt = Rt3D::new();
+        rt.program(0, Rt3DConfig { template: template(), period: 7, count: None, phase: 0 });
+        let mut n = 0;
+        for now in 0..70 {
+            rt.tick(now);
+            if rt.pop(now).is_some() {
+                n += 1;
+            }
+        }
+        assert_eq!(n, 10);
+    }
+}

@@ -1,0 +1,455 @@
+//! Area characterization (paper §4.1, Table 4, Fig. 12).
+//!
+//! Two layers, exactly as the paper:
+//!
+//! 1. [`synthesize_area`] — the *synthesis stand-in*: a structural
+//!    gate-cost database calibrated so that the paper's Table 4
+//!    decomposition is reproduced at its anchor configuration (32-b
+//!    address/data width, GF12LP+ @ 1 GHz). This plays the role of the
+//!    Synopsys DC runs we cannot perform (see DESIGN.md §Substitutions);
+//!    it includes deterministic "synthesis noise" and a routing
+//!    congestion term so the fitted linear models have realistic,
+//!    non-zero error.
+//! 2. [`AreaModel`] — the paper's contribution: linear models fitted via
+//!    non-negative least squares over a sweep of synthesized
+//!    configurations, predicting back-end area within the paper's <9 %
+//!    bound.
+
+use crate::backend::BackendCfg;
+use crate::protocol::ProtocolKind;
+
+use super::linalg::Mat;
+use super::nnls::{mean_relative_error, nnls};
+
+/// One named area contribution in gate equivalents.
+#[derive(Debug, Clone)]
+pub struct AreaItem {
+    /// Component name (Table 4 row / column).
+    pub name: String,
+    /// Gate equivalents.
+    pub ge: f64,
+}
+
+/// Area decomposition of one back-end configuration.
+#[derive(Debug, Clone)]
+pub struct AreaBreakdown {
+    /// Per-component contributions.
+    pub items: Vec<AreaItem>,
+}
+
+impl AreaBreakdown {
+    /// Total GE.
+    pub fn total(&self) -> f64 {
+        self.items.iter().map(|i| i.ge).sum()
+    }
+}
+
+/// Per-protocol anchor constants (GE at AW=32 b, DW=32 b, NAx=16),
+/// straight from Table 4. Tuple fields: (read, write) where applicable.
+struct ProtoAnchors {
+    decouple: f64,
+    leg_state: f64,
+    page_split: (f64, f64),
+    pow2_split: (f64, f64),
+    manager: (f64, f64),
+    shifter: f64,
+}
+
+fn anchors(p: ProtocolKind) -> ProtoAnchors {
+    use ProtocolKind::*;
+    match p {
+        Axi4 => ProtoAnchors {
+            decouple: 1400.0,
+            leg_state: 710.0,
+            page_split: (95.0, 105.0),
+            pow2_split: (0.0, 0.0),
+            manager: (190.0, 30.0),
+            shifter: 250.0,
+        },
+        Axi4Lite => ProtoAnchors {
+            decouple: 310.0,
+            leg_state: 200.0,
+            page_split: (7.0, 8.0),
+            pow2_split: (0.0, 0.0),
+            manager: (60.0, 60.0),
+            shifter: 75.0,
+        },
+        Axi4Stream => ProtoAnchors {
+            decouple: 310.0,
+            leg_state: 180.0,
+            page_split: (0.0, 0.0),
+            pow2_split: (0.0, 0.0),
+            manager: (60.0, 60.0),
+            shifter: 180.0,
+        },
+        Obi => ProtoAnchors {
+            decouple: 310.0,
+            leg_state: 180.0,
+            page_split: (5.0, 5.0),
+            pow2_split: (0.0, 0.0),
+            manager: (60.0, 35.0),
+            shifter: 170.0,
+        },
+        TileLinkUl | TileLinkUh => ProtoAnchors {
+            decouple: 310.0,
+            leg_state: 215.0,
+            page_split: (0.0, 0.0),
+            pow2_split: (20.0, 20.0),
+            manager: (230.0, 150.0),
+            shifter: 65.0,
+        },
+        Init => ProtoAnchors {
+            decouple: 0.0,
+            leg_state: 21.0,
+            page_split: (0.0, 0.0),
+            pow2_split: (0.0, 0.0),
+            manager: (55.0, 0.0),
+            shifter: 0.0,
+        },
+    }
+}
+
+/// Anchor parameters of Table 4.
+const ANCHOR_AW: f64 = 32.0;
+const ANCHOR_DW: f64 = 32.0;
+const ANCHOR_NAX: f64 = 16.0;
+
+/// Deterministic ±2 % "synthesis noise" (placement/synthesis run
+/// variation), stable per configuration.
+fn noise(cfg: &BackendCfg, salt: u64) -> f64 {
+    let mut z = (cfg.aw_bits as u64)
+        ^ (cfg.dw_bytes << 8)
+        ^ ((cfg.nax_r as u64) << 20)
+        ^ ((cfg.ports.len() as u64) << 30)
+        ^ salt.rotate_left(13);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    1.0 + 0.02 * (((z >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0)
+}
+
+/// Routing-congestion surcharge at wide data paths ("physical routing and
+/// placement congestion of the increasingly large buffer", §4.2 — area
+/// side effect).
+fn congestion(dw_bits: f64) -> f64 {
+    let x = (dw_bits / 128.0).max(0.0);
+    1.0 + 0.03 * x * x.min(8.0)
+}
+
+/// Synthesis stand-in: structural area of a back-end configuration.
+pub fn synthesize_area(cfg: &BackendCfg) -> AreaBreakdown {
+    let aw = cfg.aw_bits as f64;
+    let dw_bits = (cfg.dw_bytes * 8) as f64;
+    let nax = cfg.nax_r.max(cfg.nax_w) as f64;
+    let mut items = Vec::new();
+    let mut push = |name: &str, ge: f64| {
+        if ge > 0.0 {
+            items.push(AreaItem { name: name.to_string(), ge });
+        }
+    };
+
+    // Linear component models through the Table 4 anchors. Every entry
+    // is anchored at (AW 32, DW 32, NAx 16) with a structural intercept.
+    let lin = |anchor: f64, intercept_frac: f64, param: f64, anchor_param: f64| -> f64 {
+        let intercept = anchor * intercept_frac;
+        intercept + (anchor - intercept) * (param / anchor_param)
+    };
+
+    // --- decoupling (buffers, trackers): O(NAx)
+    push("decouple/base", lin(3700.0, 0.10, nax, ANCHOR_NAX));
+    // --- legalizer state: O(AW)
+    if cfg.legalizer {
+        push("legalizer/state-base", lin(1500.0, 0.25, aw, ANCHOR_AW));
+    }
+    // --- dataflow element: O(DW), scaled by the small-FIFO depth
+    // (anchored at the default 8-beat buffer).
+    let df = lin(1300.0, 0.02, dw_bits, ANCHOR_DW) * (0.25 + 0.75 * cfg.buffer_beats as f64 / 8.0);
+    push("transport/dataflow", df * congestion(dw_bits));
+    // --- manager/shifter structural bases: ∝ DW
+    push("transport/manager-base", 70.0 * dw_bits / ANCHOR_DW);
+    push("transport/shifter-base", 120.0 * dw_bits / ANCHOR_DW * congestion(dw_bits));
+
+    // Per-direction maxima for footnote-c components.
+    let mut max_leg_r: f64 = 0.0;
+    let mut max_leg_w: f64 = 0.0;
+    let mut max_shift_r: f64 = 0.0;
+    let mut max_shift_w: f64 = 0.0;
+
+    for port in &cfg.ports {
+        let a = anchors(port.protocol);
+        let caps = port.protocol.caps();
+        let pn = port.protocol.name();
+        if caps.can_read {
+            push(&format!("decouple/{pn}-r"), lin(a.decouple, 0.15, nax, ANCHOR_NAX));
+            if cfg.legalizer {
+                push(&format!("legalizer/page-split-{pn}-r"), a.page_split.0);
+                push(&format!("legalizer/pow2-split-{pn}-r"), a.pow2_split.0);
+            }
+            push(&format!("transport/read-manager-{pn}"), a.manager.0 * dw_bits / ANCHOR_DW);
+            max_leg_r = max_leg_r.max(a.leg_state);
+            max_shift_r = max_shift_r.max(a.shifter);
+        }
+        if caps.can_write {
+            push(&format!("decouple/{pn}-w"), lin(a.decouple, 0.15, nax, ANCHOR_NAX));
+            if cfg.legalizer {
+                push(&format!("legalizer/page-split-{pn}-w"), a.page_split.1);
+                push(&format!("legalizer/pow2-split-{pn}-w"), a.pow2_split.1);
+            }
+            push(&format!("transport/write-manager-{pn}"), a.manager.1 * dw_bits / ANCHOR_DW);
+            max_leg_w = max_leg_w.max(a.leg_state);
+            max_shift_w = max_shift_w.max(a.shifter);
+        }
+    }
+    if cfg.legalizer {
+        push("legalizer/state-r(max)", lin(max_leg_r, 0.2, aw, ANCHOR_AW));
+        push("legalizer/state-w(max)", lin(max_leg_w, 0.2, aw, ANCHOR_AW));
+    }
+    push(
+        "transport/shifter-r(max)",
+        max_shift_r * dw_bits / ANCHOR_DW * congestion(dw_bits),
+    );
+    push(
+        "transport/shifter-w(max)",
+        max_shift_w * dw_bits / ANCHOR_DW * congestion(dw_bits),
+    );
+    if cfg.error_handling {
+        push("error-handler", 300.0 + 2.0 * aw);
+    }
+
+    // Apply synthesis noise per component (deterministic).
+    for (i, it) in items.iter_mut().enumerate() {
+        it.ge *= noise(cfg, i as u64);
+    }
+    AreaBreakdown { items }
+}
+
+/// Mid-end area estimates (in-system components; §3.2 gives the rt_3D
+/// anchor: ≈11 kGE at 8 events / 16 outstanding).
+pub fn midend_area_ge(name: &str, param_a: u64, param_b: u64) -> f64 {
+    match name {
+        "tensor_2D" => 2000.0,
+        "tensor_ND" => 1500.0 + 900.0 * param_a as f64, // param_a = outer dims
+        "mp_split" => 700.0,
+        "mp_dist" => 500.0,
+        // param_a = events, param_b = outstanding transactions
+        "rt_3D" => 3000.0 + 500.0 * param_a as f64 + 250.0 * param_b as f64,
+        "rr_arbiter" => 150.0 * param_a as f64,
+        _ => 0.0,
+    }
+}
+
+/// Front-end area estimates.
+pub fn frontend_area_ge(name: &str) -> f64 {
+    match name {
+        "reg_32" | "reg_64" => 800.0,
+        "reg_32_2d" | "reg_64_2d" => 1150.0,
+        "reg_32_3d" => 1500.0,
+        "reg_32_rt_3d" => 1800.0,
+        "desc_64" => 2500.0,
+        "inst_64" => 900.0,
+        _ => 0.0,
+    }
+}
+
+/// Feature vector of the fitted linear area model: intercept, AW, DW,
+/// NAx, and per protocol-family (port count, count×NAx, count×DW).
+fn features(cfg: &BackendCfg) -> Vec<f64> {
+    let aw = cfg.aw_bits as f64;
+    let dw = (cfg.dw_bytes * 8) as f64;
+    let nax = cfg.nax_r.max(cfg.nax_w) as f64;
+    // The quadratic DW term captures the routing-congestion surcharge the
+    // synthesis stand-in applies at wide buses.
+    let mut f = vec![1.0, aw, dw, nax, dw * dw / 1024.0];
+    for fam in [
+        ProtocolKind::Axi4,
+        ProtocolKind::Axi4Lite,
+        ProtocolKind::Axi4Stream,
+        ProtocolKind::Obi,
+        ProtocolKind::TileLinkUl,
+        ProtocolKind::TileLinkUh,
+        ProtocolKind::Init,
+    ] {
+        let count = cfg.ports.iter().filter(|p| p.protocol == fam).count() as f64;
+        f.push(count);
+        f.push(count * nax);
+        f.push(count * dw);
+    }
+    f
+}
+
+/// The fitted linear area model (paper §4.1): predicts back-end GE from
+/// the configuration, trained on synthesized samples via NNLS.
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    coeffs: Vec<f64>,
+    /// Mean relative error on the training sweep.
+    pub train_error: f64,
+}
+
+impl AreaModel {
+    /// Fit on a sweep of configurations.
+    pub fn fit(samples: &[BackendCfg]) -> Self {
+        let rows: Vec<Vec<f64>> = samples.iter().map(features).collect();
+        let b: Vec<f64> = samples.iter().map(|c| synthesize_area(c).total()).collect();
+        let a = Mat::from_rows(&rows);
+        let coeffs = nnls(&a, &b);
+        let train_error = mean_relative_error(&a, &coeffs, &b);
+        Self { coeffs, train_error }
+    }
+
+    /// Predict total back-end area in GE.
+    pub fn predict(&self, cfg: &BackendCfg) -> f64 {
+        super::linalg::dot(&features(cfg), &self.coeffs)
+    }
+
+    /// Mean relative error over a (validation) set.
+    pub fn error_on(&self, samples: &[BackendCfg]) -> f64 {
+        let mut s = 0.0;
+        for c in samples {
+            let t = synthesize_area(c).total();
+            s += ((self.predict(c) - t) / t).abs();
+        }
+        s / samples.len() as f64
+    }
+}
+
+/// The paper's default training sweep: vary AW, DW, NAx and port sets
+/// around the base configuration (used by Fig. 12 and the tests).
+pub fn default_sweep() -> Vec<BackendCfg> {
+    use crate::backend::PortCfg;
+    let mut out = Vec::new();
+    let port_sets: Vec<Vec<ProtocolKind>> = vec![
+        vec![ProtocolKind::Axi4],
+        vec![ProtocolKind::Obi],
+        vec![ProtocolKind::Axi4Lite],
+        vec![ProtocolKind::TileLinkUh],
+        vec![ProtocolKind::Axi4, ProtocolKind::Obi],
+        vec![ProtocolKind::Axi4, ProtocolKind::Axi4Stream, ProtocolKind::Init],
+    ];
+    for ports in &port_sets {
+        for &aw in &[16u32, 32, 48, 64] {
+            for &dw_bytes in &[2u64, 4, 8, 16, 32, 64] {
+                for &nax in &[1usize, 2, 4, 8, 16, 32] {
+                    out.push(BackendCfg {
+                        aw_bits: aw,
+                        dw_bytes,
+                        nax_r: nax,
+                        nax_w: nax,
+                        ports: ports
+                            .iter()
+                            .map(|&p| PortCfg { protocol: p, mem: 0 })
+                            .collect(),
+                        ..Default::default()
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::PortCfg;
+
+    fn base() -> BackendCfg {
+        BackendCfg {
+            aw_bits: 32,
+            dw_bytes: 4,
+            nax_r: 16,
+            nax_w: 16,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn table4_anchor_reproduced() {
+        // At the Table 4 anchor the decomposition must match the paper's
+        // headline numbers (±2 % synthesis noise).
+        let b = synthesize_area(&base());
+        let get = |name: &str| {
+            b.items.iter().find(|i| i.name == name).map(|i| i.ge).unwrap_or(0.0)
+        };
+        assert!((get("decouple/base") - 3700.0).abs() / 3700.0 < 0.03);
+        assert!((get("legalizer/state-base") - 1500.0).abs() / 1500.0 < 0.03);
+        assert!((get("transport/dataflow") - 1300.0).abs() / 1300.0 < 0.03);
+        assert!((get("decouple/axi4-r") - 1400.0).abs() / 1400.0 < 0.03);
+        assert!((get("transport/read-manager-axi4") - 190.0).abs() / 190.0 < 0.03);
+    }
+
+    #[test]
+    fn nax_slope_under_400_ge() {
+        // Paper: "growing by roughly 400 GE for each added buffer stage".
+        let mut c1 = base();
+        c1.nax_r = 8;
+        c1.nax_w = 8;
+        let mut c2 = base();
+        c2.nax_r = 32;
+        c2.nax_w = 32;
+        let slope =
+            (synthesize_area(&c2).total() - synthesize_area(&c1).total()) / (32.0 - 8.0);
+        assert!(slope > 100.0 && slope < 450.0, "NAx slope {slope} GE/txn");
+        // 32-b config at 32 outstanding stays below 25 kGE.
+        assert!(synthesize_area(&c2).total() < 25_000.0);
+    }
+
+    #[test]
+    fn minimal_obi_engine_under_2_kge() {
+        // Paper: ultra-small iDMAEs incur less than 2 kGE (simple
+        // protocol, no hardware legalizer, single outstanding transfer).
+        let c = BackendCfg {
+            aw_bits: 32,
+            dw_bytes: 4,
+            nax_r: 1,
+            nax_w: 1,
+            legalizer: false,
+            buffer_beats: 2,
+            ports: vec![PortCfg { protocol: ProtocolKind::Obi, mem: 0 }],
+            ..Default::default()
+        };
+        let total = synthesize_area(&c).total();
+        assert!(total < 2000.0, "minimal OBI engine: {total:.0} GE");
+    }
+
+    #[test]
+    fn model_fits_within_paper_error_bound() {
+        let sweep = default_sweep();
+        let model = AreaModel::fit(&sweep);
+        assert!(
+            model.train_error < 0.09,
+            "paper claims <9 % mean error; got {:.1}%",
+            model.train_error * 100.0
+        );
+        // Validation on configs not in the sweep.
+        let mut validation = Vec::new();
+        for &nax in &[3usize, 6, 12, 24] {
+            let mut c = base();
+            c.nax_r = nax;
+            c.nax_w = nax;
+            c.dw_bytes = 8;
+            validation.push(c);
+        }
+        let err = model.error_on(&validation);
+        assert!(err < 0.15, "validation error {:.1}%", err * 100.0);
+    }
+
+    #[test]
+    fn rt3d_midend_matches_controlpulp_anchor() {
+        // §3.2: ≈11 kGE at 8 events, 16 outstanding.
+        let ge = midend_area_ge("rt_3D", 8, 16);
+        assert!((ge - 11_000.0).abs() / 11_000.0 < 0.01, "{ge}");
+    }
+
+    #[test]
+    fn area_monotone_in_parameters() {
+        let t0 = synthesize_area(&base()).total();
+        for (f, g) in [(48u32, 8u64), (64, 16)] {
+            let mut c = base();
+            c.aw_bits = f;
+            c.dw_bytes = g;
+            assert!(synthesize_area(&c).total() > t0);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Minimal dense linear algebra: column-major matrices, QR-based least
+//! squares. Substrate for the NNLS solver the paper's area model uses
+//! ("we fit a set of linear models using non-negative least squares").
+
+/// Dense column-major matrix.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    /// Rows.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Column-major storage (`a[(i, j)] = data[j * m + i]`).
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(m: usize, n: usize) -> Self {
+        Self { m, n, data: vec![0.0; m * n] }
+    }
+
+    /// Build from row slices.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let m = rows.len();
+        let n = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut a = Self::zeros(m, n);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), n, "ragged rows");
+            for (j, &v) in r.iter().enumerate() {
+                a[(i, j)] = v;
+            }
+        }
+        a
+    }
+
+    /// Extract column `j`.
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.m..(j + 1) * self.m]
+    }
+
+    /// Matrix-vector product `A x`.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0; self.m];
+        for j in 0..self.n {
+            let c = self.col(j);
+            let xj = x[j];
+            for i in 0..self.m {
+                y[i] += c[i] * xj;
+            }
+        }
+        y
+    }
+
+    /// Transposed product `Aᵀ y`.
+    pub fn t_mul_vec(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.m);
+        (0..self.n).map(|j| dot(self.col(j), y)).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[j * self.m + i]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[j * self.m + i]
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Solve the least-squares problem `min ‖A x − b‖₂` via Householder QR
+/// with column selection of the passed columns only. Returns `x`
+/// (length = `cols.len()`); requires `A.m ≥ cols.len()` and full rank on
+/// the selected columns (tiny pivots are regularized).
+pub fn lstsq_cols(a: &Mat, b: &[f64], cols: &[usize]) -> Vec<f64> {
+    let m = a.m;
+    let n = cols.len();
+    assert!(m >= n, "underdetermined system");
+    // Working copies.
+    let mut r = Mat::zeros(m, n);
+    for (jj, &j) in cols.iter().enumerate() {
+        r.data[jj * m..(jj + 1) * m].copy_from_slice(a.col(j));
+    }
+    let mut qtb = b.to_vec();
+    // Householder QR.
+    for k in 0..n {
+        // norm of column k below row k
+        let mut norm2 = 0.0;
+        for i in k..m {
+            norm2 += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-12 {
+            // Degenerate column: regularize to avoid division by zero.
+            r[(k, k)] += 1e-9;
+            continue;
+        }
+        let alpha = if r[(k, k)] > 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; m];
+        v[k] = r[(k, k)] - alpha;
+        for i in k + 1..m {
+            v[i] = r[(i, k)];
+        }
+        let vtv = dot(&v[k..], &v[k..]);
+        if vtv < 1e-24 {
+            continue;
+        }
+        // Apply H = I − 2 v vᵀ / (vᵀv) to R and qtb.
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i] * r[(i, j)];
+            }
+            let f = 2.0 * s / vtv;
+            for i in k..m {
+                r[(i, j)] -= f * v[i];
+            }
+        }
+        let mut s = 0.0;
+        for i in k..m {
+            s += v[i] * qtb[i];
+        }
+        let f = 2.0 * s / vtv;
+        for i in k..m {
+            qtb[i] -= f * v[i];
+        }
+    }
+    // Back substitution on the upper-triangular part.
+    let mut x = vec![0.0; n];
+    for k in (0..n).rev() {
+        let mut s = qtb[k];
+        for j in k + 1..n {
+            s -= r[(k, j)] * x[j];
+        }
+        let d = r[(k, k)];
+        x[k] = if d.abs() < 1e-12 { 0.0 } else { s / d };
+    }
+    x
+}
+
+/// Full least squares over all columns.
+pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let cols: Vec<usize> = (0..a.n).collect();
+    lstsq_cols(a, b, &cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_square_system() {
+        // x + 2y = 5 ; 3x + 4y = 11 → x=1, y=2
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let x = lstsq(&a, &[5.0, 11.0]);
+        assert!((x[0] - 1.0).abs() < 1e-9, "{x:?}");
+        assert!((x[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overdetermined_regression() {
+        // y = 3 + 2 t with noise-free samples
+        let ts = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let rows: Vec<Vec<f64>> = ts.iter().map(|&t| vec![1.0, t]).collect();
+        let b: Vec<f64> = ts.iter().map(|&t| 3.0 + 2.0 * t).collect();
+        let x = lstsq(&Mat::from_rows(&rows), &b);
+        assert!((x[0] - 3.0).abs() < 1e-9);
+        assert!((x[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_minimizes_residual() {
+        // Inconsistent system: residual of LS solution must beat naive guesses.
+        let a = Mat::from_rows(&[vec![1.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let b = [1.0, 3.0, 5.0];
+        let x = lstsq(&a, &b);
+        assert!((x[0] - 2.0).abs() < 1e-9, "{x:?}"); // mean of 1 and 3
+        assert!((x[1] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn column_subset() {
+        let a = Mat::from_rows(&[vec![1.0, 7.0, 0.0], vec![1.0, 9.0, 1.0], vec![1.0, 4.0, 2.0]]);
+        // fit only columns 0 and 2 to b = 2*1 + 3*col2
+        let b = [2.0, 5.0, 8.0];
+        let x = lstsq_cols(&a, &b, &[0, 2]);
+        assert!((x[0] - 2.0).abs() < 1e-9);
+        assert!((x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mul_vec_roundtrip() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(a.mul_vec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(a.t_mul_vec(&[1.0, 0.0, 1.0]), vec![6.0, 8.0]);
+    }
+}

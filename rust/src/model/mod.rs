@@ -1,0 +1,14 @@
+//! Area, timing and latency characterization (paper §4): the synthesis
+//! stand-in databases plus the paper's fitted models (NNLS linear area
+//! model <9 % error, inverse-linear timing model <4 % error, closed-form
+//! latency model).
+
+pub mod area;
+pub mod latency;
+pub mod linalg;
+pub mod nnls;
+pub mod timing;
+
+pub use area::{synthesize_area, AreaBreakdown, AreaModel};
+pub use latency::{backend_latency, launch_latency, MidEndKind};
+pub use timing::{synthesize_fmax_ghz, synthesize_timing, TimingModel};

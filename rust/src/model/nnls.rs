@@ -1,0 +1,157 @@
+//! Non-negative least squares (Lawson–Hanson active-set algorithm) — the
+//! fitting method the paper's area model uses (§4.1: "we fit a set of
+//! linear models using non-negative least squares").
+
+use super::linalg::{lstsq_cols, Mat};
+
+/// Solve `min ‖A x − b‖₂  s.t.  x ≥ 0` (Lawson & Hanson, 1974).
+pub fn nnls(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = a.n;
+    let mut x = vec![0.0; n];
+    let mut passive: Vec<usize> = Vec::new();
+    let mut in_passive = vec![false; n];
+    let tol = 1e-10;
+
+    for _outer in 0..(3 * n + 30) {
+        // Gradient of the residual: w = Aᵀ (b − A x)
+        let ax = a.mul_vec(&x);
+        let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let w = a.t_mul_vec(&r);
+        // Pick the most promising free variable.
+        let mut best = None;
+        for j in 0..n {
+            if !in_passive[j] && w[j] > tol {
+                if best.map(|(_, bw)| w[j] > bw).unwrap_or(true) {
+                    best = Some((j, w[j]));
+                }
+            }
+        }
+        let Some((j, _)) = best else { break };
+        passive.push(j);
+        in_passive[j] = true;
+
+        // Inner loop: solve unconstrained LS on the passive set; clip
+        // variables that went negative.
+        loop {
+            let z = lstsq_cols(a, b, &passive);
+            if z.iter().all(|&v| v > tol) {
+                for (k, &col) in passive.iter().enumerate() {
+                    x[col] = z[k];
+                }
+                break;
+            }
+            // Step towards z, stopping at the first variable to hit zero.
+            let mut alpha = f64::INFINITY;
+            for (k, &col) in passive.iter().enumerate() {
+                if z[k] <= tol {
+                    let d = x[col] - z[k];
+                    if d > 0.0 {
+                        alpha = alpha.min(x[col] / d);
+                    }
+                }
+            }
+            if !alpha.is_finite() {
+                alpha = 0.0;
+            }
+            for (k, &col) in passive.iter().enumerate() {
+                x[col] += alpha * (z[k] - x[col]);
+            }
+            // Remove zeroed variables from the passive set.
+            let mut removed = false;
+            let mut k = 0;
+            while k < passive.len() {
+                let col = passive[k];
+                if x[col] <= tol {
+                    x[col] = 0.0;
+                    in_passive[col] = false;
+                    passive.remove(k);
+                    removed = true;
+                } else {
+                    k += 1;
+                }
+            }
+            if !removed {
+                // Numerical corner: accept clipped solution.
+                for (k, &col) in passive.iter().enumerate() {
+                    x[col] = z[k].max(0.0);
+                }
+                break;
+            }
+        }
+    }
+    x
+}
+
+/// Goodness-of-fit helper: mean relative error of `A x` against `b`.
+pub fn mean_relative_error(a: &Mat, x: &[f64], b: &[f64]) -> f64 {
+    let ax = a.mul_vec(x);
+    let mut s = 0.0;
+    let mut n = 0usize;
+    for (p, t) in ax.iter().zip(b) {
+        if t.abs() > 1e-9 {
+            s += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_nonnegative_solution() {
+        // b = A [2, 0.5]
+        let a = Mat::from_rows(&[
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![2.0, 1.0],
+        ]);
+        let b = a.mul_vec(&[2.0, 0.5]);
+        let x = nnls(&a, &b);
+        assert!((x[0] - 2.0).abs() < 1e-6, "{x:?}");
+        assert!((x[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clips_negative_coefficients() {
+        // Unconstrained LS would want a negative coefficient on col 1.
+        let a = Mat::from_rows(&[vec![1.0, 1.0], vec![1.0, 2.0], vec![1.0, 3.0]]);
+        let b = [3.0, 2.0, 1.0]; // decreasing → negative slope
+        let x = nnls(&a, &b);
+        assert!(x.iter().all(|&v| v >= 0.0), "{x:?}");
+        assert!(x[1].abs() < 1e-9, "slope must clip to zero, got {x:?}");
+        assert!((x[0] - 2.0).abs() < 1e-6, "intercept = mean");
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let x = nnls(&a, &[0.0, 0.0]);
+        assert!(x.iter().all(|&v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn wide_well_posed_fit() {
+        // y = 10·a + 3·c, with b irrelevant
+        let mut rows = Vec::new();
+        let mut b = Vec::new();
+        for i in 0..20 {
+            let (p, q, r) = ((i % 5) as f64, ((i * 7) % 3) as f64, (i % 4) as f64);
+            rows.push(vec![p, q, r]);
+            b.push(10.0 * p + 3.0 * r);
+        }
+        let a = Mat::from_rows(&rows);
+        let x = nnls(&a, &b);
+        assert!((x[0] - 10.0).abs() < 1e-6, "{x:?}");
+        assert!(x[1].abs() < 1e-6);
+        assert!((x[2] - 3.0).abs() < 1e-6);
+        assert!(mean_relative_error(&a, &x, &b) < 1e-9);
+    }
+}

@@ -1,0 +1,202 @@
+//! Timing characterization (paper §4.2, Fig. 13).
+//!
+//! [`synthesize_timing`] is the synthesis stand-in: a structural
+//! critical-path estimator (ns, GF12LP+-calibrated) reproducing the
+//! paper's qualitative findings — simple protocols (OBI, AXI-Lite) run
+//! faster; multi-protocol engines pay arbitration; data width has the
+//! strongest impact (wider shifters + buffer congestion); address width
+//! barely matters; outstanding transactions degrade timing sub-linearly.
+//!
+//! [`TimingModel`] is the paper's fitted model: the longest path in ns
+//! has a *multiplicative inverse* relationship to frequency, and is
+//! fitted linearly in the three main parameters within the paper's <4 %
+//! error bound.
+
+use crate::backend::BackendCfg;
+use crate::protocol::ProtocolKind;
+
+use super::linalg::{dot, lstsq, Mat};
+
+/// Per-protocol base critical path in ns (legalizer core + manager depth).
+fn proto_path_ns(p: ProtocolKind) -> f64 {
+    match p {
+        ProtocolKind::Obi => 0.42,
+        ProtocolKind::Axi4Lite => 0.46,
+        ProtocolKind::Axi4Stream => 0.47,
+        ProtocolKind::TileLinkUl => 0.52,
+        ProtocolKind::TileLinkUh => 0.56,
+        ProtocolKind::Axi4 => 0.60,
+        ProtocolKind::Init => 0.30,
+    }
+}
+
+/// Synthesis stand-in: critical path of a back-end configuration in ns.
+pub fn synthesize_timing(cfg: &BackendCfg) -> f64 {
+    let dw_bits = (cfg.dw_bytes * 8) as f64;
+    let aw = cfg.aw_bits as f64;
+    let nax = cfg.nax_r.max(cfg.nax_w) as f64;
+    // Deepest protocol dominates.
+    let base = cfg
+        .ports
+        .iter()
+        .map(|p| proto_path_ns(p.protocol))
+        .fold(0.0f64, f64::max);
+    // Arbitration between multiple ports adds mux levels.
+    let arb = 0.035 * (cfg.ports.len() as f64 - 1.0).max(0.0);
+    // Barrel shifters: depth grows with log2(DW); congestion grows
+    // further at very wide buses (§4.2).
+    let shift = 0.055 * (dw_bits / 8.0).log2().max(0.0);
+    let congestion = 0.0009 * (dw_bits / 64.0).powf(1.5);
+    // Legalizer cores sit on paths through the address: mild AW effect.
+    let addr = if cfg.legalizer { 0.0012 * aw } else { 0.0004 * aw };
+    // FIFO management for outstanding transactions: sub-linear.
+    let outst = 0.028 * (nax).log2().max(0.0);
+    base + arb + shift + congestion + addr + outst
+}
+
+/// Maximum clock frequency in GHz for a configuration.
+pub fn synthesize_fmax_ghz(cfg: &BackendCfg) -> f64 {
+    1.0 / synthesize_timing(cfg)
+}
+
+fn features(cfg: &BackendCfg) -> Vec<f64> {
+    let dw_bits = (cfg.dw_bytes * 8) as f64;
+    vec![
+        1.0,
+        (dw_bits / 8.0).log2().max(0.0),
+        (dw_bits / 64.0).powf(1.5),
+        cfg.aw_bits as f64,
+        (cfg.nax_r.max(cfg.nax_w) as f64).log2().max(0.0),
+        cfg.ports.len() as f64,
+        cfg.ports.iter().map(|p| proto_path_ns(p.protocol)).fold(0.0f64, f64::max),
+    ]
+}
+
+/// Fitted timing model: linear in transformed parameters, predicting the
+/// critical path (ns); frequency is its multiplicative inverse.
+#[derive(Debug, Clone)]
+pub struct TimingModel {
+    coeffs: Vec<f64>,
+    /// Mean relative error on the training sweep.
+    pub train_error: f64,
+}
+
+impl TimingModel {
+    /// Fit on a sweep of configurations.
+    pub fn fit(samples: &[BackendCfg]) -> Self {
+        let rows: Vec<Vec<f64>> = samples.iter().map(features).collect();
+        let b: Vec<f64> = samples.iter().map(synthesize_timing).collect();
+        let a = Mat::from_rows(&rows);
+        let coeffs = lstsq(&a, &b);
+        let pred = a.mul_vec(&coeffs);
+        let train_error = pred
+            .iter()
+            .zip(&b)
+            .map(|(p, t)| ((p - t) / t).abs())
+            .sum::<f64>()
+            / b.len() as f64;
+        Self { coeffs, train_error }
+    }
+
+    /// Predicted critical path in ns.
+    pub fn predict_ns(&self, cfg: &BackendCfg) -> f64 {
+        dot(&features(cfg), &self.coeffs)
+    }
+
+    /// Predicted maximum frequency in GHz.
+    pub fn predict_fmax_ghz(&self, cfg: &BackendCfg) -> f64 {
+        1.0 / self.predict_ns(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::PortCfg;
+    use crate::model::area::default_sweep;
+
+    fn cfg_with(p: ProtocolKind) -> BackendCfg {
+        BackendCfg {
+            ports: vec![PortCfg { protocol: p, mem: 0 }],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn simple_protocols_run_faster() {
+        // §4.2: OBI and AXI-Lite engines are the fast group.
+        let f_obi = synthesize_fmax_ghz(&cfg_with(ProtocolKind::Obi));
+        let f_lite = synthesize_fmax_ghz(&cfg_with(ProtocolKind::Axi4Lite));
+        let f_axi = synthesize_fmax_ghz(&cfg_with(ProtocolKind::Axi4));
+        assert!(f_obi > f_axi, "OBI {f_obi} must beat AXI {f_axi}");
+        assert!(f_lite > f_axi);
+    }
+
+    #[test]
+    fn multi_protocol_engines_slower() {
+        let single = synthesize_fmax_ghz(&cfg_with(ProtocolKind::Axi4));
+        let multi = synthesize_fmax_ghz(&BackendCfg {
+            ports: vec![
+                PortCfg { protocol: ProtocolKind::Axi4, mem: 0 },
+                PortCfg { protocol: ProtocolKind::Obi, mem: 1 },
+                PortCfg { protocol: ProtocolKind::Axi4Stream, mem: 2 },
+            ],
+            ..Default::default()
+        });
+        assert!(multi < single);
+    }
+
+    #[test]
+    fn data_width_dominates() {
+        // §4.2: DW has a powerful impact; AW has little effect.
+        let base = synthesize_timing(&BackendCfg::default());
+        let mut wide = BackendCfg::default();
+        wide.dw_bytes = 64; // 512-bit
+        let dw_effect = synthesize_timing(&wide) - base;
+        let mut wide_aw = BackendCfg::default();
+        wide_aw.aw_bits = 64;
+        let aw_effect = synthesize_timing(&wide_aw) - base;
+        assert!(dw_effect > 4.0 * aw_effect, "dw {dw_effect} vs aw {aw_effect}");
+    }
+
+    #[test]
+    fn gigahertz_on_64bit_config() {
+        // Paper conclusion: "large high-performance iDMAEs running at
+        // over 1 GHz on a 12 nm node" (64-bit class configuration).
+        let mut c = BackendCfg::default();
+        c.dw_bytes = 8;
+        c.nax_r = 16;
+        c.nax_w = 16;
+        let f = synthesize_fmax_ghz(&c);
+        assert!(f > 1.0, "64-bit AXI config at {f:.2} GHz");
+    }
+
+    #[test]
+    fn nax_degrades_sublinearly() {
+        let t = |nax: usize| {
+            let mut c = BackendCfg::default();
+            c.nax_r = nax;
+            c.nax_w = nax;
+            synthesize_timing(&c)
+        };
+        let d1 = t(4) - t(2);
+        let d2 = t(32) - t(16);
+        assert!((d1 - d2).abs() < 1e-9, "log-shaped NAx effect: doubling adds a constant");
+        assert!(t(32) > t(2));
+    }
+
+    #[test]
+    fn model_error_under_4_percent() {
+        let sweep = default_sweep();
+        let model = TimingModel::fit(&sweep);
+        assert!(
+            model.train_error < 0.04,
+            "paper claims <4 % mean error; got {:.2}%",
+            model.train_error * 100.0
+        );
+        // Inverse relationship sanity.
+        let c = BackendCfg::default();
+        let f = model.predict_fmax_ghz(&c);
+        assert!((f - 1.0 / model.predict_ns(&c)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-protocol capability rows (paper Table 3) consumed by the transfer
+//! legalizer and the protocol managers.
+
+use super::ProtocolKind;
+
+/// Burst legality rule for a protocol — what the legalizer cores enforce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstRule {
+    /// No bursts: every access is a single bus-sized beat (OBI, AXI-Lite,
+    /// TileLink-UL).
+    SingleBeat,
+    /// Bursts up to `max_beats` beats or `max_bytes` bytes, whichever is
+    /// reached first, and never crossing a `page` boundary (AXI4:
+    /// 256 beats / 4 KiB).
+    Paged {
+        /// Maximum beats per burst.
+        max_beats: u64,
+        /// Maximum bytes per burst.
+        max_bytes: u64,
+        /// Page size whose boundary a burst must not cross.
+        page: u64,
+    },
+    /// Power-of-two burst sizes, naturally aligned (TileLink-UH), capped
+    /// at `max_bytes`.
+    PowerOfTwo {
+        /// Maximum bytes per burst (power of two).
+        max_bytes: u64,
+    },
+    /// Unlimited bursts (AXI4-Stream, Init): the legalizer passes the
+    /// transfer through whole.
+    Unlimited,
+}
+
+/// One row of Table 3.
+#[derive(Debug, Clone)]
+pub struct ProtocolCaps {
+    /// Protocol this row describes.
+    pub kind: ProtocolKind,
+    /// Specification version reproduced.
+    pub version: &'static str,
+    /// Burst rule for the legalizer.
+    pub burst: BurstRule,
+    /// Protocol supports reads (has a read manager).
+    pub can_read: bool,
+    /// Protocol supports writes (has a write manager).
+    pub can_write: bool,
+    /// Protocol carries addresses (AXI4-Stream does not; Init ignores them).
+    pub addressed: bool,
+    /// Dedicated request channel per direction (AXI AR/AW); protocols
+    /// without it (OBI) share one channel for reads and writes.
+    pub split_req_channels: bool,
+    /// Cycles of request-channel occupancy per issued request.
+    pub req_cycles: u64,
+    /// Whether a write completion response exists (AXI B channel, OBI/TL
+    /// responses); AXI4-Stream has none.
+    pub has_write_resp: bool,
+}
+
+const AXI4: ProtocolCaps = ProtocolCaps {
+    kind: ProtocolKind::Axi4,
+    version: "H.c (AXI4+ATOP)",
+    burst: BurstRule::Paged { max_beats: 256, max_bytes: 4096, page: 4096 },
+    can_read: true,
+    can_write: true,
+    addressed: true,
+    split_req_channels: true,
+    req_cycles: 1,
+    has_write_resp: true,
+};
+
+const AXI4_LITE: ProtocolCaps = ProtocolCaps {
+    kind: ProtocolKind::Axi4Lite,
+    version: "H.c",
+    burst: BurstRule::SingleBeat,
+    can_read: true,
+    can_write: true,
+    addressed: true,
+    split_req_channels: true,
+    req_cycles: 1,
+    has_write_resp: true,
+};
+
+const AXI4_STREAM: ProtocolCaps = ProtocolCaps {
+    kind: ProtocolKind::Axi4Stream,
+    version: "B",
+    burst: BurstRule::Unlimited,
+    can_read: true,
+    can_write: true,
+    addressed: false,
+    split_req_channels: false,
+    req_cycles: 0,
+    has_write_resp: false,
+};
+
+const OBI: ProtocolCaps = ProtocolCaps {
+    kind: ProtocolKind::Obi,
+    version: "v1.5.0",
+    burst: BurstRule::SingleBeat,
+    can_read: true,
+    can_write: true,
+    addressed: true,
+    split_req_channels: false,
+    req_cycles: 1,
+    has_write_resp: true,
+};
+
+const TL_UL: ProtocolCaps = ProtocolCaps {
+    kind: ProtocolKind::TileLinkUl,
+    version: "v1.8.1 (TL-UL)",
+    burst: BurstRule::SingleBeat,
+    can_read: true,
+    can_write: true,
+    addressed: true,
+    split_req_channels: false,
+    req_cycles: 1,
+    has_write_resp: true,
+};
+
+const TL_UH: ProtocolCaps = ProtocolCaps {
+    kind: ProtocolKind::TileLinkUh,
+    version: "v1.8.1 (TL-UH)",
+    burst: BurstRule::PowerOfTwo { max_bytes: 4096 },
+    can_read: true,
+    can_write: true,
+    addressed: true,
+    split_req_channels: false,
+    req_cycles: 1,
+    has_write_resp: true,
+};
+
+const INIT: ProtocolCaps = ProtocolCaps {
+    kind: ProtocolKind::Init,
+    version: "N.A.",
+    burst: BurstRule::Unlimited,
+    can_read: true,
+    can_write: false, // read-only pattern source
+    addressed: false,
+    split_req_channels: false,
+    req_cycles: 0,
+    has_write_resp: false,
+};
+
+/// Capability row lookup.
+pub fn caps(kind: ProtocolKind) -> &'static ProtocolCaps {
+    match kind {
+        ProtocolKind::Axi4 => &AXI4,
+        ProtocolKind::Axi4Lite => &AXI4_LITE,
+        ProtocolKind::Axi4Stream => &AXI4_STREAM,
+        ProtocolKind::Obi => &OBI,
+        ProtocolKind::TileLinkUl => &TL_UL,
+        ProtocolKind::TileLinkUh => &TL_UH,
+        ProtocolKind::Init => &INIT,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_rows_match_paper() {
+        // AXI4: 256 beats or 4 kB, whichever first.
+        match caps(ProtocolKind::Axi4).burst {
+            BurstRule::Paged { max_beats, max_bytes, page } => {
+                assert_eq!(max_beats, 256);
+                assert_eq!(max_bytes, 4096);
+                assert_eq!(page, 4096);
+            }
+            _ => panic!("AXI4 must be paged"),
+        }
+        // Lite / OBI / TL-UL: no bursts.
+        for p in [ProtocolKind::Axi4Lite, ProtocolKind::Obi, ProtocolKind::TileLinkUl] {
+            assert_eq!(caps(p).burst, BurstRule::SingleBeat, "{p}");
+        }
+        // TL-UH: power of two.
+        assert!(matches!(caps(ProtocolKind::TileLinkUh).burst, BurstRule::PowerOfTwo { .. }));
+        // Stream/Init: unlimited.
+        assert_eq!(caps(ProtocolKind::Axi4Stream).burst, BurstRule::Unlimited);
+        assert_eq!(caps(ProtocolKind::Init).burst, BurstRule::Unlimited);
+        // Init is read-only.
+        assert!(!caps(ProtocolKind::Init).can_write);
+        assert!(caps(ProtocolKind::Init).can_read);
+    }
+
+    #[test]
+    fn kind_field_consistent() {
+        for p in ProtocolKind::ALL {
+            assert_eq!(caps(p).kind, p);
+        }
+    }
+}

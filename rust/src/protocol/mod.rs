@@ -1,0 +1,91 @@
+//! On-chip protocol capability table (paper Table 3).
+//!
+//! The transport layer operates on generic byte streams; everything
+//! protocol-specific is captured here: burst rules for the legalizer and
+//! request/beat behaviour for the read/write managers. Adding a protocol
+//! to iDMA means adding one [`ProtocolCaps`] row plus (at most) a read
+//! manager, a write manager and a legalizer core — mirroring the paper's
+//! "at most three modules, each only a couple of hundred GEs".
+
+mod caps;
+
+pub use caps::{BurstRule, ProtocolCaps};
+
+/// The on-chip protocols supported by the back-end (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProtocolKind {
+    /// AXI4 + atomics: bursts up to 256 beats or 4 KiB, whichever first.
+    Axi4,
+    /// AXI4-Lite: single-beat only.
+    Axi4Lite,
+    /// AXI4-Stream: addressless, unlimited bursts, symmetric T channels.
+    Axi4Stream,
+    /// OpenHW OBI v1.5.0: single-beat, core-local scratchpad protocol.
+    Obi,
+    /// SiFive TileLink UL: single-beat messages.
+    TileLinkUl,
+    /// SiFive TileLink UH: power-of-two bursts.
+    TileLinkUh,
+    /// Init pseudo-protocol: read-only pattern generator (memory init).
+    Init,
+}
+
+impl ProtocolKind {
+    /// All protocols, in Table 3 order.
+    pub const ALL: [ProtocolKind; 7] = [
+        ProtocolKind::Axi4,
+        ProtocolKind::Axi4Lite,
+        ProtocolKind::Axi4Stream,
+        ProtocolKind::Obi,
+        ProtocolKind::TileLinkUl,
+        ProtocolKind::TileLinkUh,
+        ProtocolKind::Init,
+    ];
+
+    /// Short identifier used in configs, CLI and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            ProtocolKind::Axi4 => "axi4",
+            ProtocolKind::Axi4Lite => "axi4_lite",
+            ProtocolKind::Axi4Stream => "axi4_stream",
+            ProtocolKind::Obi => "obi",
+            ProtocolKind::TileLinkUl => "tl_ul",
+            ProtocolKind::TileLinkUh => "tl_uh",
+            ProtocolKind::Init => "init",
+        }
+    }
+
+    /// Parse a protocol identifier (as produced by [`Self::name`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    /// Capability row for this protocol.
+    pub fn caps(self) -> &'static ProtocolCaps {
+        caps::caps(self)
+    }
+}
+
+impl std::fmt::Display for ProtocolKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in ProtocolKind::ALL {
+            assert_eq!(ProtocolKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(ProtocolKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(ProtocolKind::Axi4.to_string(), "axi4");
+    }
+}

@@ -1,0 +1,71 @@
+//! Loader for the weight binaries the AOT step exports
+//! (`mb_weights.bin` + `mb_weights.tsv`: name, f32 offset, f32 count).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{IdmaError, Result};
+
+/// All model weights, loaded once at startup and placed into the
+/// simulated memory by the coordinator.
+#[derive(Debug, Clone)]
+pub struct WeightsFile {
+    data: Vec<f32>,
+    index: HashMap<String, (usize, usize)>,
+    order: Vec<String>,
+}
+
+impl WeightsFile {
+    /// Load `bin` (raw little-endian f32) with its `tsv` index.
+    pub fn load(bin: impl AsRef<Path>, tsv: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(bin.as_ref())
+            .map_err(|e| IdmaError::Runtime(format!("read {}: {e}", bin.as_ref().display())))?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let text = std::fs::read_to_string(tsv.as_ref())
+            .map_err(|e| IdmaError::Runtime(format!("read {}: {e}", tsv.as_ref().display())))?;
+        let mut index = HashMap::new();
+        let mut order = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split('\t');
+            let (Some(name), Some(off), Some(n)) = (it.next(), it.next(), it.next()) else {
+                continue;
+            };
+            let off: usize = off
+                .parse::<usize>()
+                .map_err(|e| IdmaError::Runtime(format!("bad offset {off}: {e}")))?
+                / 4; // byte offset → f32 index
+            let n: usize =
+                n.parse().map_err(|e| IdmaError::Runtime(format!("bad count {n}: {e}")))?;
+            index.insert(name.to_string(), (off, n));
+            order.push(name.to_string());
+        }
+        Ok(Self { data, index, order })
+    }
+
+    /// Slice of a named weight tensor (flattened, row-major).
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        let &(off, n) = self
+            .index
+            .get(name)
+            .ok_or_else(|| IdmaError::Runtime(format!("no weight named {name}")))?;
+        Ok(&self.data[off..off + n])
+    }
+
+    /// Weight names in file order.
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Total f32 elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when no weights were loaded.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}

@@ -1,0 +1,78 @@
+//! Minimal benchmark harness (criterion is not available in this
+//! offline environment): warmup + timed iterations with mean/stddev,
+//! used by every `cargo bench` target.
+
+use std::time::Instant;
+
+use super::stats::Accumulator;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Mean wall time per iteration (seconds).
+    pub mean_s: f64,
+    /// Standard deviation (seconds).
+    pub stddev_s: f64,
+    /// Iterations measured.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Throughput helper: units per second given units per iteration.
+    pub fn per_second(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>12.3} ms/iter (±{:.3} ms, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` + `iters` iterations.
+pub fn bench(name: &str, warmup: u64, iters: u64, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut acc = Accumulator::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        acc.add(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_s: acc.mean(),
+        stddev_s: acc.stddev(),
+        iters,
+    }
+}
+
+/// Print a standard bench header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let r = bench("t", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+    }
+}

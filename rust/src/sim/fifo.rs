@@ -1,0 +1,160 @@
+//! A registered, depth-bounded FIFO with ready/valid semantics.
+//!
+//! Models the `stream_fifo` building block the RTL uses on every
+//! front-/mid-/back-end boundary: an element pushed in cycle *t* becomes
+//! visible to the consumer in cycle *t+1* (one flip-flop stage), and the
+//! FIFO refuses pushes when full (back pressure).
+
+use std::collections::VecDeque;
+
+use super::Cycle;
+
+/// Registered FIFO. `depth` is the number of storage slots; a `depth` of 1
+/// behaves like a single pipeline register.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    depth: usize,
+    /// (cycle the element becomes visible, element)
+    q: VecDeque<(Cycle, T)>,
+    /// Total elements ever pushed (for stats / fingerprints).
+    pushed: u64,
+    /// Total elements ever popped.
+    popped: u64,
+}
+
+impl<T> Fifo<T> {
+    /// Create a FIFO with `depth` slots (must be ≥ 1).
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1, "FIFO depth must be at least 1");
+        Self { depth, q: VecDeque::with_capacity(depth), pushed: 0, popped: 0 }
+    }
+
+    /// True if a push would be accepted this cycle (i.e. `ready` is high).
+    pub fn can_push(&self) -> bool {
+        self.q.len() < self.depth
+    }
+
+    /// Push an element during cycle `now`; it becomes poppable at `now+1`.
+    /// Returns `false` (and drops nothing) if the FIFO is full.
+    pub fn push(&mut self, now: Cycle, v: T) -> bool {
+        if !self.can_push() {
+            return false;
+        }
+        self.q.push_back((now + 1, v));
+        self.pushed += 1;
+        true
+    }
+
+    /// Push an element visible in the *same* cycle (a combinational
+    /// pass-through slot, used by the zero-latency tensor_ND mode §4.3).
+    pub fn push_visible(&mut self, now: Cycle, v: T) -> bool {
+        if !self.can_push() {
+            return false;
+        }
+        self.q.push_back((now, v));
+        self.pushed += 1;
+        true
+    }
+
+    /// True if an element is visible (valid) at cycle `now`.
+    pub fn can_pop(&self, now: Cycle) -> bool {
+        self.q.front().map(|(vis, _)| *vis <= now).unwrap_or(false)
+    }
+
+    /// Peek the front element if visible at `now`.
+    pub fn peek(&self, now: Cycle) -> Option<&T> {
+        match self.q.front() {
+            Some((vis, v)) if *vis <= now => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Pop the front element if visible at `now`.
+    pub fn pop(&mut self, now: Cycle) -> Option<T> {
+        if self.can_pop(now) {
+            self.popped += 1;
+            self.q.pop_front().map(|(_, v)| v)
+        } else {
+            None
+        }
+    }
+
+    /// Number of elements stored (visible or not).
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True if no elements are stored at all.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Total elements ever pushed.
+    pub fn total_pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Total elements ever popped.
+    pub fn total_popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// Iterate over stored elements front-to-back (debug/inspection).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.q.iter().map(|(_, v)| v)
+    }
+
+    /// Remove all stored elements failing the predicate (error-handler
+    /// abort path: flush bursts of an aborted transfer).
+    pub fn retain(&mut self, mut f: impl FnMut(&T) -> bool) {
+        self.q.retain(|(_, v)| f(v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_visible_next_cycle() {
+        let mut f = Fifo::new(4);
+        assert!(f.push(10, 42u32));
+        assert!(!f.can_pop(10), "must not be combinationally visible");
+        assert!(f.can_pop(11));
+        assert_eq!(f.pop(11), Some(42));
+    }
+
+    #[test]
+    fn full_fifo_backpressures() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(0, 1u8));
+        assert!(f.push(0, 2));
+        assert!(!f.can_push());
+        assert!(!f.push(0, 3));
+        assert_eq!(f.pop(1), Some(1));
+        assert!(f.can_push());
+    }
+
+    #[test]
+    fn order_preserved() {
+        let mut f = Fifo::new(8);
+        for i in 0..5u32 {
+            assert!(f.push(i as u64, i));
+        }
+        for i in 0..5u32 {
+            assert_eq!(f.pop(100), Some(i));
+        }
+        assert_eq!(f.pop(100), None);
+        assert_eq!(f.total_pushed(), 5);
+        assert_eq!(f.total_popped(), 5);
+    }
+
+    #[test]
+    fn depth_one_is_pipeline_register() {
+        let mut f = Fifo::new(1);
+        assert!(f.push(0, 7u8));
+        assert!(!f.can_push());
+        assert_eq!(f.pop(1), Some(7));
+        assert!(f.can_push());
+    }
+}

@@ -1,0 +1,186 @@
+//! Bus-utilization and latency bookkeeping.
+//!
+//! Every paper metric we reproduce is derived from these counters:
+//! bus utilization (Figs. 8 & 14), cycle counts (§3.1, §3.2, §3.4) and
+//! the energy proxy of §4.5 (active cycles × area).
+
+use super::Cycle;
+
+/// Per-port beat/byte counters.
+#[derive(Debug, Clone, Default)]
+pub struct PortStats {
+    /// Cycles in which a data beat was transferred on this port.
+    pub busy_cycles: u64,
+    /// Payload bytes actually moved (≤ bus width × busy_cycles).
+    pub payload_bytes: u64,
+    /// Requests issued (AR/AW or per-beat requests for non-burst protocols).
+    pub requests: u64,
+    /// Error responses observed.
+    pub errors: u64,
+}
+
+impl PortStats {
+    /// Record one data beat carrying `payload` useful bytes.
+    pub fn beat(&mut self, payload: u64) {
+        self.busy_cycles += 1;
+        self.payload_bytes += payload;
+    }
+}
+
+/// Aggregate statistics for one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Cycle the first descriptor entered the engine.
+    pub start: Cycle,
+    /// Cycle the last write response retired.
+    pub end: Cycle,
+    /// Read-side counters.
+    pub read: PortStats,
+    /// Write-side counters.
+    pub write: PortStats,
+    /// Completed 1D transfers.
+    pub transfers_done: u64,
+    /// Legalized bursts emitted (read side).
+    pub bursts_read: u64,
+    /// Legalized bursts emitted (write side).
+    pub bursts_write: u64,
+    /// Bus errors encountered.
+    pub bus_errors: u64,
+    /// Bursts replayed by the error handler.
+    pub replays: u64,
+}
+
+impl RunStats {
+    /// Total wall-clock cycles of the run.
+    pub fn cycles(&self) -> u64 {
+        self.end.saturating_sub(self.start)
+    }
+
+    /// Bus utilization in `[0,1]`: payload bytes over the bytes the bus
+    /// could have moved in `cycles()` at `bus_bytes` per cycle. This is
+    /// the metric of Figs. 8 and 14.
+    pub fn bus_utilization(&self, bus_bytes: u64) -> f64 {
+        let c = self.cycles();
+        if c == 0 {
+            return 0.0;
+        }
+        self.write.payload_bytes as f64 / (c * bus_bytes) as f64
+    }
+
+    /// Beat-level occupancy of the write data channel in `[0,1]`.
+    pub fn write_channel_occupancy(&self) -> f64 {
+        let c = self.cycles();
+        if c == 0 {
+            return 0.0;
+        }
+        self.write.busy_cycles as f64 / c as f64
+    }
+
+    /// Energy proxy of §4.5: active cycles (read + write busy) — combined
+    /// with the area model this yields the `area × active-cycles` figure
+    /// used in EXPERIMENTS.md.
+    pub fn active_cycles(&self) -> u64 {
+        self.read.busy_cycles.max(self.write.busy_cycles)
+    }
+}
+
+/// Simple online mean/min/max/stddev accumulator (used by the bench
+/// harness and latency measurements).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    /// Create an empty accumulator.
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add a sample (Welford update).
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    /// Minimum sample.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum sample.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_full_bus() {
+        let mut s = RunStats { start: 0, end: 100, ..Default::default() };
+        for _ in 0..100 {
+            s.write.beat(8);
+        }
+        assert!((s.bus_utilization(8) - 1.0).abs() < 1e-12);
+        assert!((s.write_channel_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_partial_beats() {
+        let mut s = RunStats { start: 0, end: 100, ..Default::default() };
+        for _ in 0..100 {
+            s.write.beat(4); // half-filled beats on an 8-byte bus
+        }
+        assert!((s.bus_utilization(8) - 0.5).abs() < 1e-12);
+        assert!((s.write_channel_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_stats() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.add(x);
+        }
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert!((a.stddev() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn zero_cycles_zero_util() {
+        let s = RunStats::default();
+        assert_eq!(s.bus_utilization(8), 0.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Shared system-simulation helpers.
+
+use crate::backend::Backend;
+use crate::engine::IdmaEngine;
+use crate::mem::Endpoint;
+use crate::sim::{Cycle, Watchdog};
+
+/// Drive a bare back-end until all submitted transfers retire. Returns
+/// the final cycle.
+pub fn run_backend(be: &mut Backend, mems: &mut [Endpoint], start: Cycle, max: u64) -> Cycle {
+    let mut wd = Watchdog::new(100_000);
+    for now in start..start + max {
+        be.tick(now, mems);
+        if !be.busy() {
+            return now;
+        }
+        assert!(!wd.check(now, be.fingerprint()), "backend deadlock at {now}");
+    }
+    panic!("backend did not drain within {max} cycles");
+}
+
+/// Drive a composed engine until idle. Returns the final cycle.
+pub fn run_engine(e: &mut IdmaEngine, mems: &mut [Endpoint], start: Cycle, max: u64) -> Cycle {
+    let mut wd = Watchdog::new(100_000);
+    for now in start..start + max {
+        e.tick(now, mems);
+        if !e.busy() {
+            return now;
+        }
+        assert!(!wd.check(now, e.fingerprint()), "engine deadlock at {now}");
+    }
+    panic!("engine did not drain within {max} cycles");
+}
+
+/// Submit a stream of jobs as fast as the engine accepts them, then
+/// drain. Returns `(first_cycle, last_cycle)`.
+pub fn pump_engine(
+    e: &mut IdmaEngine,
+    mems: &mut [Endpoint],
+    jobs: Vec<crate::midend::NdJob>,
+    max: u64,
+) -> (Cycle, Cycle) {
+    let mut now: Cycle = 0;
+    let mut it = jobs.into_iter();
+    let mut pending = it.next();
+    let mut wd = Watchdog::new(100_000);
+    while pending.is_some() || e.busy() {
+        if let Some(j) = pending.take() {
+            if !e.submit(now, j.clone()) {
+                pending = Some(j);
+            } else {
+                pending = it.next();
+            }
+        }
+        e.tick(now, mems);
+        assert!(now < max, "pump exceeded {max} cycles");
+        assert!(
+            !wd.check(now, e.fingerprint() ^ pending.is_some() as u64),
+            "engine deadlock at {now}"
+        );
+        now += 1;
+    }
+    (0, now)
+}

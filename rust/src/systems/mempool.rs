@@ -1,0 +1,357 @@
+//! MemPool (§3.4, Fig. 9): a 256-core single-cluster manycore with 1 MiB
+//! of L1 scratchpad in 1024 banks. A monolithic DMA is infeasible, so the
+//! *distributed* iDMA places one back-end per group of banks: one
+//! front-end feeds `mp_split` (splitting at L1-region boundaries) and a
+//! binary tree of `mp_dist` mid-ends routing pieces to the back-ends.
+//!
+//! Experiments: the 512 KiB L2→L1 copy (99 % utilization, 15.8× vs the
+//! no-DMA baseline, <1 % area) and the five double-buffered kernels.
+
+use crate::backend::{Backend, BackendCfg, PortCfg};
+use crate::baseline::CoreCopy;
+use crate::mem::{Endpoint, MemModel};
+use crate::midend::{DistSide, MidEnd, MpDist, MpSplit, NdJob, SplitSide};
+use crate::model::area::synthesize_area;
+use crate::protocol::ProtocolKind;
+use crate::sim::{Cycle, Watchdog, XorShift64};
+use crate::transfer::{NdTransfer, Transfer1D, TransferOpts};
+use crate::workloads::double_buffer::{overlap_cycles, serial_cycles, DoubleBufferPhase};
+
+/// MemPool configuration.
+#[derive(Debug, Clone)]
+pub struct MemPool {
+    /// Distributed back-ends (one per group of L1 banks).
+    pub backends: usize,
+    /// L1 region size per back-end (bytes).
+    pub region: u64,
+    /// Wide-interconnect width in bytes (512-bit AXI).
+    pub dw: u64,
+    /// Outstanding transactions per back-end.
+    pub nax: usize,
+    /// L2 (SoC-side) latency in cycles.
+    pub l2_latency: u64,
+}
+
+impl Default for MemPool {
+    fn default() -> Self {
+        Self { backends: 4, region: 64 * 1024, dw: 64, nax: 16, l2_latency: 25 }
+    }
+}
+
+/// The distributed engine: front-end job → mp_split → mp_dist tree →
+/// per-region back-ends, all sharing one wide L2 port.
+pub struct DistributedIdma {
+    split: MpSplit,
+    dist: Vec<MpDist>, // binary tree, level-order (dist[0] = root)
+    backends: Vec<Backend>,
+    tid: u64,
+}
+
+/// Copy-experiment report.
+#[derive(Debug, Clone)]
+pub struct CopyReport {
+    /// Cycles for the distributed engine.
+    pub idma_cycles: u64,
+    /// Wide-bus utilization achieved.
+    pub utilization: f64,
+    /// Baseline (cores copying) cycles.
+    pub baseline_cycles: u64,
+    /// The §3.4 headline speedup.
+    pub speedup: f64,
+    /// Area overhead of the distributed engine vs the cluster (<1 %).
+    pub area_overhead: f64,
+}
+
+impl MemPool {
+    const L1_BASE: u64 = 0x1000_0000;
+    const L2_BASE: u64 = 0x8000_0000;
+
+    /// Build the distributed engine (Fig. 9). `backends` must be a power
+    /// of two; the mp_dist tree has `log2(backends)` levels.
+    pub fn engine(&self) -> DistributedIdma {
+        assert!(self.backends.is_power_of_two());
+        let levels = self.backends.trailing_zeros();
+        let region_bits = self.region.trailing_zeros();
+        // Level k (root = 0) tests bit log2(region) + levels - 1 - k of
+        // the L1 (destination) address.
+        let mut dist = Vec::new();
+        for k in 0..levels {
+            let bit = region_bits + levels - 1 - k;
+            for _ in 0..(1 << k) {
+                dist.push(MpDist::new(bit, DistSide::Dst));
+            }
+        }
+        let backends = (0..self.backends)
+            .map(|i| {
+                Backend::new(BackendCfg {
+                    aw_bits: 32,
+                    dw_bytes: self.dw,
+                    nax_r: self.nax,
+                    nax_w: self.nax,
+                    ports: vec![
+                        PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }, // shared L2
+                        PortCfg { protocol: ProtocolKind::Obi, mem: 1 + i }, // own L1 region
+                    ],
+                    owner: i as u32,
+                    ..Default::default()
+                })
+                .unwrap()
+            })
+            .collect();
+        DistributedIdma {
+            split: MpSplit::new(self.region, SplitSide::Dst),
+            dist,
+            backends,
+            tid: 0,
+        }
+    }
+
+    /// System endpoints: `[0]` = shared wide L2, `[1..]` = L1 regions.
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        let mut v = vec![Endpoint::new(MemModel::custom(
+            "L2",
+            self.l2_latency,
+            self.nax * self.backends,
+            self.dw,
+        ))];
+        for _ in 0..self.backends {
+            v.push(Endpoint::new(MemModel::custom("L1", 2, 8, self.dw)));
+        }
+        v
+    }
+
+    /// §3.4a: copy `bytes` from L2 into the distributed L1, returning
+    /// the report (utilization, speedup vs cores, area overhead).
+    pub fn copy_experiment(&self, bytes: u64) -> CopyReport {
+        let mut eng = self.engine();
+        let mut mems = self.endpoints();
+        let mut src = vec![0u8; bytes as usize];
+        XorShift64::new(0x3E3).fill(&mut src);
+        mems[0].data.write(Self::L2_BASE, &src);
+
+        let t = Transfer1D {
+            id: 0,
+            src: Self::L2_BASE,
+            dst: Self::L1_BASE,
+            len: bytes,
+            src_protocol: ProtocolKind::Axi4,
+            dst_protocol: ProtocolKind::Obi,
+            opts: TransferOpts::default(),
+        };
+        let cycles = eng.run(vec![t], &mut mems);
+
+        // Verify: each 64 KiB-region slice landed in its region's L1.
+        let regions = self.backends as u64;
+        for off in (0..bytes).step_by(4096) {
+            let region = (Self::L1_BASE + off) >> self.region.trailing_zeros();
+            let be = (region % regions) as usize;
+            let got = mems[1 + be].data.read_u8(Self::L1_BASE + off);
+            assert_eq!(got, src[off as usize], "byte at offset {off:#x}");
+        }
+
+        let beats = bytes / self.dw;
+        let utilization = beats as f64 / cycles as f64;
+        let baseline = CoreCopy::mempool().copy_cycles(bytes);
+        let total_area: f64 = {
+            let eng2 = self.engine();
+            eng2.backends.iter().map(|b| synthesize_area(&b.cfg).total()).sum()
+        };
+        // MemPool cluster ≈ 256 cores × ~40 kGE + 1 MiB SRAM + interconnect
+        // ≈ 25 MGE (the paper reports the engine below 1 % of that).
+        let cluster_area = 25.0e6;
+        CopyReport {
+            idma_cycles: cycles,
+            utilization,
+            baseline_cycles: baseline,
+            speedup: baseline as f64 / cycles as f64,
+            area_overhead: total_area / cluster_area,
+        }
+    }
+
+    /// §3.4b kernel speedups: double-buffered iDMA vs cores copying
+    /// in/out around the compute. Per-core cycle costs are taken from
+    /// MemPool's published kernel performance (calibrated constants);
+    /// the transfers themselves use the measured engine utilization.
+    pub fn kernel_speedups(&self, util: f64) -> Vec<(&'static str, f64)> {
+        // (name, compute cycles per byte moved, total bytes)
+        // compute/byte ratios reflect each kernel's arithmetic intensity
+        // on the 256-core cluster.
+        let kernels: [(&'static str, f64, u64); 5] = [
+            ("matmul(2048)", 0.665, 3 * 2048 * 2048 * 4),
+            ("conv2d", 0.0295, 2 * 2048 * 2048 * 4),
+            ("dct8x8", 0.0402, 2 * 2048 * 2048 * 4),
+            ("axpy", 0.0008, 3 * (4 << 20)),
+            ("dot", 0.0006, 2 * (4 << 20)),
+        ];
+        let mut out = Vec::new();
+        for (name, cpb, bytes) in kernels {
+            let tiles = 64u64;
+            let tile_bytes = bytes / tiles;
+            let compute = (cpb * tile_bytes as f64) as u64;
+            let dma = (tile_bytes as f64 / self.dw as f64 / util) as u64;
+            let phases: Vec<DoubleBufferPhase> =
+                (0..tiles).map(|_| DoubleBufferPhase { compute, dma }).collect();
+            // Baseline: cores copy at one 4-byte word per wide-bus slot.
+            let slowdown = self.dw as f64 / 4.0 * util;
+            let t_idma = overlap_cycles(&phases);
+            let t_base = serial_cycles(&phases, slowdown);
+            out.push((name, t_base as f64 / t_idma as f64));
+        }
+        out
+    }
+}
+
+impl DistributedIdma {
+    /// Total area of the distributed engine's back-ends + mid-ends.
+    pub fn area_ge(&self) -> f64 {
+        let be: f64 = self.backends.iter().map(|b| synthesize_area(&b.cfg).total()).sum();
+        be + crate::model::area::midend_area_ge("mp_split", 0, 0)
+            + self.dist.len() as f64 * crate::model::area::midend_area_ge("mp_dist", 0, 0)
+    }
+
+    /// Run a batch of linear transfers through split → dist tree →
+    /// back-ends until everything retires. Returns total cycles.
+    pub fn run(&mut self, transfers: Vec<Transfer1D>, mems: &mut [Endpoint]) -> u64 {
+        let mut pending: std::collections::VecDeque<Transfer1D> = transfers.into();
+        let levels = self.backends.len().trailing_zeros() as usize;
+        let mut now: Cycle = 0;
+        let mut wd = Watchdog::new(200_000);
+        loop {
+            // Feed the splitter.
+            if let Some(t) = pending.front() {
+                if self.split.can_accept() {
+                    let mut t = *t;
+                    pending.pop_front();
+                    self.tid += 1;
+                    t.id = self.tid;
+                    let ok = self.split.accept(now, NdJob::new(t.id, NdTransfer::d1(t)));
+                    debug_assert!(ok);
+                }
+            }
+            self.split.tick(now);
+            for d in self.dist.iter_mut() {
+                d.tick(now);
+            }
+            // splitter → root distributor
+            if self.dist[0].can_accept() {
+                if let Some(j) = self.split.pop(now) {
+                    self.dist[0].accept(now, j);
+                }
+            }
+            // tree hand-offs: node i at level k feeds nodes at level k+1
+            for k in 0..levels.saturating_sub(1) {
+                let level_base = (1usize << k) - 1;
+                let next_base = (1usize << (k + 1)) - 1;
+                for i in 0..(1 << k) {
+                    for port in 0..2 {
+                        let child = next_base + i * 2 + port;
+                        let (a, b) = self.dist.split_at_mut(next_base);
+                        let parent = &mut a[level_base + i];
+                        let child_node = &mut b[child - next_base];
+                        if child_node.can_accept() {
+                            if let Some(j) = parent.pop_port(now, port) {
+                                child_node.accept(now, j);
+                            }
+                        }
+                    }
+                }
+            }
+            // leaf distributors → back-ends
+            let leaf_base = (1usize << levels.saturating_sub(1)) - 1;
+            if levels > 0 {
+                for i in 0..(1 << (levels - 1)) {
+                    for port in 0..2 {
+                        let be = i * 2 + port;
+                        if self.backends[be].can_submit() {
+                            if let Some(j) = self.dist[leaf_base + i].pop_port(now, port) {
+                                let mut t = j.nd.inner;
+                                t.id = (self.tid << 20) | (be as u64) << 10 | j.job;
+                                self.tid += 1;
+                                let ok = self.backends[be].try_submit(now, t);
+                                debug_assert!(ok);
+                            }
+                        }
+                    }
+                }
+            }
+            for be in self.backends.iter_mut() {
+                be.tick(now, mems);
+                be.take_completions();
+            }
+            let busy = !pending.is_empty()
+                || self.split.busy()
+                || self.dist.iter().any(|d| d.busy())
+                || self.backends.iter().any(|b| b.busy());
+            if !busy {
+                return now;
+            }
+            let fp = self
+                .backends
+                .iter()
+                .fold(0u64, |a, b| a ^ b.fingerprint().rotate_left(7));
+            assert!(!wd.check(now, fp), "distributed engine deadlock at {now}");
+            now += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_512kib_fast_and_correct() {
+        // §3.4a: 99 % utilization, 15.8× speedup, <1 % area.
+        let m = MemPool::default();
+        let r = m.copy_experiment(512 * 1024);
+        assert!(r.utilization > 0.90, "utilization {:.3} (paper 0.99)", r.utilization);
+        assert!(
+            r.speedup > 13.0 && r.speedup < 16.5,
+            "speedup {:.1} (paper 15.8×)",
+            r.speedup
+        );
+        assert!(r.area_overhead < 0.01, "area overhead {:.4} (paper <1 %)", r.area_overhead);
+    }
+
+    #[test]
+    fn kernel_speedups_match_paper_ordering() {
+        // §3.4b: matmul 1.4×, conv 9.5×, DCT 7.2×, axpy 15.7×, dot 15.8×.
+        let m = MemPool::default();
+        let s = m.kernel_speedups(0.99);
+        let get = |n: &str| s.iter().find(|(k, _)| k.starts_with(n)).unwrap().1;
+        let (mm, conv, dct, axpy, dot) =
+            (get("matmul"), get("conv"), get("dct"), get("axpy"), get("dot"));
+        assert!((1.2..1.7).contains(&mm), "matmul {mm:.2} (paper 1.4)");
+        assert!((8.0..11.0).contains(&conv), "conv {conv:.2} (paper 9.5)");
+        assert!((6.0..8.5).contains(&dct), "dct {dct:.2} (paper 7.2)");
+        assert!((14.5..16.2).contains(&axpy), "axpy {axpy:.2} (paper 15.7)");
+        assert!((14.5..16.2).contains(&dot), "dot {dot:.2} (paper 15.8)");
+        // ordering: memory-bound kernels benefit most
+        assert!(mm < dct && dct < conv && conv < axpy);
+    }
+
+    #[test]
+    fn distributed_split_routes_by_region() {
+        let m = MemPool { backends: 4, region: 4096, ..Default::default() };
+        let mut eng = m.engine();
+        let mut mems = m.endpoints();
+        let mut src = vec![0u8; 16384];
+        XorShift64::new(1).fill(&mut src);
+        mems[0].data.write(MemPool::L2_BASE, &src);
+        let t = Transfer1D {
+            id: 0,
+            src: MemPool::L2_BASE,
+            dst: MemPool::L1_BASE,
+            len: 16384,
+            src_protocol: ProtocolKind::Axi4,
+            dst_protocol: ProtocolKind::Obi,
+            opts: TransferOpts::default(),
+        };
+        eng.run(vec![t], &mut mems);
+        // each backend wrote exactly its own region
+        for (i, off) in [(0usize, 0u64), (1, 4096), (2, 8192), (3, 12288)] {
+            let got = mems[1 + i].data.read_vec(MemPool::L1_BASE + off, 4096);
+            assert_eq!(got, &src[off as usize..off as usize + 4096], "backend {i}");
+        }
+    }
+}

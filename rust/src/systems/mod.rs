@@ -1,0 +1,15 @@
+//! The paper's five system-integration case studies (§3), as simulated
+//! systems composed from the engine library:
+//!
+//! * [`pulp_open`] — ULP edge-AI cluster (MobileNetV1, MCHAN baseline)
+//! * [`control_pulp`] — real-time power controller (rt_3D mid-end)
+//! * [`cheshire`] — Linux-capable SoC (desc_64, Xilinx AXI DMA baseline)
+//! * [`mempool`] — 256-core manycore (distributed mp_split/mp_dist engine)
+//! * [`manticore`] — dual-chiplet HPC (inst_64 Snitch clusters, HBM)
+
+pub mod cheshire;
+pub mod common;
+pub mod control_pulp;
+pub mod manticore;
+pub mod mempool;
+pub mod pulp_open;

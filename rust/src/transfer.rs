@@ -1,0 +1,247 @@
+//! Transfer descriptors — the standardized currency between front-, mid-
+//! and back-ends (paper Fig. 2).
+//!
+//! A [`Transfer1D`] is exactly the paper's 1D transfer descriptor: source
+//! address, destination address, length, per-direction protocol selection
+//! and back-end options. Mid-ends consume [`NdTransfer`]s (a 1D descriptor
+//! bundled with mid-end configuration) and emit `Transfer1D`s.
+
+use crate::protocol::ProtocolKind;
+
+/// Pattern emitted by the *Init* pseudo-protocol read manager (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitPattern {
+    /// The same byte value, repeated.
+    Constant(u8),
+    /// Bytes incrementing from a start value (wrapping).
+    Incrementing(u8),
+    /// A pseudorandom sequence from a 64-bit seed (xorshift64*).
+    Pseudorandom(u64),
+}
+
+/// What the error handler should do with a faulting burst (§2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ErrorAction {
+    /// Skip the faulting burst and continue with the rest of the transfer.
+    Continue,
+    /// Abort the remainder of the transfer.
+    Abort,
+    /// Re-issue the faulting burst (allows ND transfers to survive
+    /// transient errors without restarting, §2.3).
+    #[default]
+    Replay,
+}
+
+/// Run-time, per-transfer back-end options (part of the 1D descriptor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferOpts {
+    /// Decouple the read from the write channel fully (paper: decoupled
+    /// operation is the default; coupled mode exists for endpoints that
+    /// cannot take un-matched back pressure).
+    pub decouple_rw: bool,
+    /// Optional user cap on the legalized burst length, in bytes
+    /// ("user-specified burst length limitations", §2.3).
+    pub max_burst: Option<u64>,
+    /// Source pattern when the source protocol is [`ProtocolKind::Init`].
+    pub init: Option<InitPattern>,
+    /// Pre-resolved action for bus errors on this transfer. In hardware
+    /// the PE answers through the front-end when the error is reported;
+    /// simulation-side we let the issuer pre-register the policy.
+    pub on_error: ErrorAction,
+}
+
+impl Default for TransferOpts {
+    fn default() -> Self {
+        Self { decouple_rw: true, max_burst: None, init: None, on_error: ErrorAction::Replay }
+    }
+}
+
+/// The paper's 1D transfer descriptor (Fig. 2): what the back-end accepts
+/// from the front-end or the last mid-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer1D {
+    /// Unique, incrementing transfer ID (assigned by the front-end).
+    pub id: u64,
+    /// Source base address.
+    pub src: u64,
+    /// Destination base address.
+    pub dst: u64,
+    /// Length in bytes. Zero-length transfers may be rejected by the
+    /// legalizer depending on configuration (Fig. 4).
+    pub len: u64,
+    /// Protocol port used for reads.
+    pub src_protocol: ProtocolKind,
+    /// Protocol port used for writes.
+    pub dst_protocol: ProtocolKind,
+    /// Back-end options.
+    pub opts: TransferOpts,
+}
+
+impl Transfer1D {
+    /// A plain memory-to-memory copy between two ports of the same protocol.
+    pub fn copy(id: u64, src: u64, dst: u64, len: u64, protocol: ProtocolKind) -> Self {
+        Self { id, src, dst, len, src_protocol: protocol, dst_protocol: protocol, opts: TransferOpts::default() }
+    }
+
+    /// A memory-initialization transfer (Init pseudo-protocol as source).
+    pub fn init(id: u64, dst: u64, len: u64, pattern: InitPattern, protocol: ProtocolKind) -> Self {
+        Self {
+            id,
+            src: 0,
+            dst,
+            len,
+            src_protocol: ProtocolKind::Init,
+            dst_protocol: protocol,
+            opts: TransferOpts { init: Some(pattern), ..TransferOpts::default() },
+        }
+    }
+
+    /// Exclusive end of the source range.
+    pub fn src_end(&self) -> u64 {
+        self.src + self.len
+    }
+
+    /// Exclusive end of the destination range.
+    pub fn dst_end(&self) -> u64 {
+        self.dst + self.len
+    }
+}
+
+/// One outer dimension of an N-dimensional affine transfer: the mid-end
+/// repeats the inner transfer `reps` times, advancing source and
+/// destination pointers by the respective strides (§2.2, tensor mid-ends).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NdDim {
+    /// Source stride in bytes (signed: descending walks are legal).
+    pub src_stride: i64,
+    /// Destination stride in bytes.
+    pub dst_stride: i64,
+    /// Number of repetitions of the next-inner dimension.
+    pub reps: u64,
+}
+
+/// An N-dimensional affine transfer: the innermost contiguous 1D transfer
+/// plus a list of outer dimensions, innermost first.
+///
+/// `dims.len() == 0` degrades to a plain 1D transfer; `N` in the paper's
+/// sense is `dims.len() + 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NdTransfer {
+    /// Innermost 1D descriptor (its `len` is the inner, contiguous size).
+    pub inner: Transfer1D,
+    /// Outer dimensions, innermost first.
+    pub dims: Vec<NdDim>,
+}
+
+impl NdTransfer {
+    /// Wrap a 1D transfer.
+    pub fn d1(inner: Transfer1D) -> Self {
+        Self { inner, dims: Vec::new() }
+    }
+
+    /// A 2D transfer: `reps` rows of `inner.len` bytes with the given strides.
+    pub fn d2(inner: Transfer1D, src_stride: i64, dst_stride: i64, reps: u64) -> Self {
+        Self { inner, dims: vec![NdDim { src_stride, dst_stride, reps }] }
+    }
+
+    /// Total number of 1D transfers this decomposes into.
+    pub fn num_inner(&self) -> u64 {
+        self.dims.iter().map(|d| d.reps).product::<u64>().max(1)
+    }
+
+    /// Total payload bytes moved.
+    pub fn total_bytes(&self) -> u64 {
+        self.inner.len * self.num_inner()
+    }
+
+    /// Reference decomposition: enumerate every inner 1D transfer in
+    /// hardware order (outermost dimension slowest). This is the oracle
+    /// the `tensor_nd` mid-end is property-tested against.
+    pub fn enumerate(&self) -> Vec<Transfer1D> {
+        let n = self.num_inner();
+        let mut out = Vec::with_capacity(n as usize);
+        // Odometer over the dims, innermost fastest.
+        let mut idx = vec![0u64; self.dims.len()];
+        loop {
+            let mut src = self.inner.src as i128;
+            let mut dst = self.inner.dst as i128;
+            for (i, d) in self.dims.iter().enumerate() {
+                src += d.src_stride as i128 * idx[i] as i128;
+                dst += d.dst_stride as i128 * idx[i] as i128;
+            }
+            out.push(Transfer1D { src: src as u64, dst: dst as u64, ..self.inner });
+            // increment odometer
+            let mut k = 0;
+            loop {
+                if k == self.dims.len() {
+                    return out;
+                }
+                idx[k] += 1;
+                if idx[k] < self.dims[k].reps {
+                    break;
+                }
+                idx[k] = 0;
+                k += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(len: u64) -> Transfer1D {
+        Transfer1D::copy(0, 0x1000, 0x8000, len, ProtocolKind::Axi4)
+    }
+
+    #[test]
+    fn d1_enumerates_to_itself() {
+        let nd = NdTransfer::d1(t(64));
+        assert_eq!(nd.num_inner(), 1);
+        assert_eq!(nd.enumerate(), vec![t(64)]);
+        assert_eq!(nd.total_bytes(), 64);
+    }
+
+    #[test]
+    fn d2_row_walk() {
+        let nd = NdTransfer::d2(t(16), 256, 64, 4);
+        let rows = nd.enumerate();
+        assert_eq!(rows.len(), 4);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.src, 0x1000 + 256 * i as u64);
+            assert_eq!(r.dst, 0x8000 + 64 * i as u64);
+            assert_eq!(r.len, 16);
+        }
+    }
+
+    #[test]
+    fn d3_order_outermost_slowest() {
+        let mut nd = NdTransfer::d2(t(8), 0x100, 0x10, 2);
+        nd.dims.push(NdDim { src_stride: 0x1000, dst_stride: 0x40, reps: 3 });
+        let rows = nd.enumerate();
+        assert_eq!(rows.len(), 6);
+        // first four in inner-dim order
+        assert_eq!(rows[0].src, 0x1000);
+        assert_eq!(rows[1].src, 0x1100);
+        assert_eq!(rows[2].src, 0x2000);
+        assert_eq!(rows[3].src, 0x2100);
+        assert_eq!(nd.total_bytes(), 48);
+    }
+
+    #[test]
+    fn negative_strides_walk_down() {
+        let nd = NdTransfer::d2(t(4), -16, 16, 3);
+        let rows = nd.enumerate();
+        assert_eq!(rows[0].src, 0x1000);
+        assert_eq!(rows[1].src, 0x1000 - 16);
+        assert_eq!(rows[2].src, 0x1000 - 32);
+    }
+
+    #[test]
+    fn init_transfer_has_pattern() {
+        let tr = Transfer1D::init(7, 0x100, 32, InitPattern::Constant(0xAB), ProtocolKind::Obi);
+        assert_eq!(tr.src_protocol, ProtocolKind::Init);
+        assert_eq!(tr.opts.init, Some(InitPattern::Constant(0xAB)));
+    }
+}

@@ -1,0 +1,68 @@
+//! Double-buffer overlap accounting: the execution model behind the
+//! MemPool kernel speedups (§3.4) and the DORY schedule (§3.1). With a
+//! DMA engine, tile `i+1`'s transfer overlaps tile `i`'s compute; the
+//! steady-state per-tile cost is `max(compute, dma)`.
+
+/// One pipelined phase (a tile's compute and transfer cost in cycles).
+#[derive(Debug, Clone, Copy)]
+pub struct DoubleBufferPhase {
+    /// Compute cycles of the tile.
+    pub compute: u64,
+    /// DMA cycles to stage the tile in and the previous result out.
+    pub dma: u64,
+}
+
+/// Total cycles of a double-buffered pipeline over `phases`: prologue
+/// (first DMA) + per-tile `max(compute, dma)` + epilogue (last
+/// write-back).
+pub fn overlap_cycles(phases: &[DoubleBufferPhase]) -> u64 {
+    if phases.is_empty() {
+        return 0;
+    }
+    let prologue = phases[0].dma;
+    let body: u64 = phases.iter().map(|p| p.compute.max(p.dma)).sum();
+    let epilogue = phases.last().unwrap().dma / 2; // result write-back only
+    prologue + body + epilogue
+}
+
+/// Serial (no-DMA) cost: cores copy, then compute, per tile.
+pub fn serial_cycles(phases: &[DoubleBufferPhase], copy_slowdown: f64) -> u64 {
+    phases
+        .iter()
+        .map(|p| p.compute + (p.dma as f64 * copy_slowdown) as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_hides_dma() {
+        let phases = vec![DoubleBufferPhase { compute: 1000, dma: 100 }; 10];
+        let t = overlap_cycles(&phases);
+        assert_eq!(t, 100 + 10 * 1000 + 50);
+    }
+
+    #[test]
+    fn memory_bound_dominated_by_dma() {
+        let phases = vec![DoubleBufferPhase { compute: 10, dma: 500 }; 4];
+        assert_eq!(overlap_cycles(&phases), 500 + 4 * 500 + 250);
+    }
+
+    #[test]
+    fn serial_vs_overlap_speedup() {
+        // The §3.4 mechanism: serial core-copy (16× slower than DMA) vs
+        // overlapped DMA.
+        let phases = vec![DoubleBufferPhase { compute: 100, dma: 100 }; 100];
+        let serial = serial_cycles(&phases, 16.0);
+        let overlap = overlap_cycles(&phases);
+        let speedup = serial as f64 / overlap as f64;
+        assert!(speedup > 15.0 && speedup < 17.5, "{speedup}");
+    }
+
+    #[test]
+    fn empty_schedule_is_free() {
+        assert_eq!(overlap_cycles(&[]), 0);
+    }
+}

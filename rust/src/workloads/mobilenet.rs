@@ -1,0 +1,389 @@
+//! The PULP-open MobileNetV1 workload (§3.1): layer shapes, MAC counts
+//! and the DORY-style tile-transfer schedule that stresses the cluster
+//! DMA with frequent small 2D/3D transfers.
+//!
+//! Mirrors `python/compile/model.py` exactly (the pytest suite checks
+//! the Python side; `tests/` here check the mirrored constants).
+
+/// Layer kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Entry 3x3 stride-2 convolution (im2col + GEMM).
+    Conv3x3S2,
+    /// Depthwise 3x3 (stride in `stride`).
+    Depthwise,
+    /// Pointwise 1x1 (GEMM).
+    Pointwise,
+    /// Global average pool + FC.
+    Head,
+}
+
+/// One layer of the tiny MobileNetV1.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Name (artifact suffix: `mb_<name>`).
+    pub name: &'static str,
+    /// Kind.
+    pub kind: LayerKind,
+    /// Stride (depthwise only).
+    pub stride: u64,
+    /// Input height/width (square).
+    pub h_in: u64,
+    /// Input channels.
+    pub c_in: u64,
+    /// Output channels.
+    pub c_out: u64,
+    /// Multiply-accumulates.
+    pub macs: u64,
+}
+
+impl Layer {
+    /// Output spatial side.
+    pub fn h_out(&self) -> u64 {
+        self.h_in / self.stride
+    }
+
+    /// Input activation bytes (f32).
+    pub fn in_bytes(&self) -> u64 {
+        self.h_in * self.h_in * self.c_in * 4
+    }
+
+    /// Output activation bytes (f32).
+    pub fn out_bytes(&self) -> u64 {
+        self.h_out() * self.h_out() * self.c_out * 4
+    }
+
+    /// Weight bytes (f32).
+    pub fn weight_bytes(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv3x3S2 => 27 * self.c_out * 4,
+            LayerKind::Depthwise => 9 * self.c_in * 4,
+            LayerKind::Pointwise => self.c_in * self.c_out * 4,
+            LayerKind::Head => (self.c_in * self.c_out + self.c_out) * 4,
+        }
+    }
+}
+
+/// The network, in execution order (mirrors `model.py`).
+pub fn layers() -> Vec<Layer> {
+    let mut v = vec![Layer {
+        name: "l0",
+        kind: LayerKind::Conv3x3S2,
+        stride: 2,
+        h_in: 32,
+        c_in: 3,
+        c_out: 8,
+        macs: 256 * 27 * 8,
+    }];
+    let dw = [
+        ("dw1", 1u64, 16u64, 8u64),
+        ("dw2", 2, 16, 16),
+        ("dw3", 1, 8, 32),
+        ("dw4", 2, 8, 32),
+        ("dw5", 1, 4, 64),
+    ];
+    let pw = [
+        ("pw1", 16u64, 8u64, 16u64),
+        ("pw2", 8, 16, 32),
+        ("pw3", 8, 32, 32),
+        ("pw4", 4, 32, 64),
+        ("pw5", 4, 64, 64),
+    ];
+    for ((dn, s, h, c), (pn, ph, cin, cout)) in dw.into_iter().zip(pw) {
+        let ho = h / s;
+        v.push(Layer {
+            name: dn,
+            kind: LayerKind::Depthwise,
+            stride: s,
+            h_in: h,
+            c_in: c,
+            c_out: c,
+            macs: ho * ho * 9 * c,
+        });
+        v.push(Layer {
+            name: pn,
+            kind: LayerKind::Pointwise,
+            stride: 1,
+            h_in: ph,
+            c_in: cin,
+            c_out: cout,
+            macs: ph * ph * cin * cout,
+        });
+    }
+    v.push(Layer {
+        name: "head",
+        kind: LayerKind::Head,
+        stride: 1,
+        h_in: 4,
+        c_in: 64,
+        c_out: 10,
+        macs: 64 * 10,
+    });
+    v
+}
+
+/// Whole-network MAC count.
+pub fn total_macs() -> u64 {
+    layers().iter().map(|l| l.macs).sum()
+}
+
+/// Full-size MobileNetV1 (224×224, α = 1.0) layer table — the network
+/// the paper's §3.1 measurement actually deploys with DORY. The tiny
+/// network above is the E2E *verification* vehicle (real numerics over
+/// PJRT); this table drives the paper-scale MAC/cycle model.
+pub fn paper_layers() -> Vec<Layer> {
+    let mut v = vec![Layer {
+        name: "conv1",
+        kind: LayerKind::Conv3x3S2,
+        stride: 2,
+        h_in: 224,
+        c_in: 3,
+        c_out: 32,
+        macs: 112 * 112 * 27 * 32,
+    }];
+    // (stride, h_in, c_in, c_out) per depthwise-separable block.
+    let blocks: [(u64, u64, u64, u64); 13] = [
+        (1, 112, 32, 64),
+        (2, 112, 64, 128),
+        (1, 56, 128, 128),
+        (2, 56, 128, 256),
+        (1, 28, 256, 256),
+        (2, 28, 256, 512),
+        (1, 14, 512, 512),
+        (1, 14, 512, 512),
+        (1, 14, 512, 512),
+        (1, 14, 512, 512),
+        (1, 14, 512, 512),
+        (2, 14, 512, 1024),
+        (1, 7, 1024, 1024),
+    ];
+    for (s, h, cin, cout) in blocks {
+        let ho = h / s;
+        v.push(Layer {
+            name: "dw",
+            kind: LayerKind::Depthwise,
+            stride: s,
+            h_in: h,
+            c_in: cin,
+            c_out: cin,
+            macs: ho * ho * 9 * cin,
+        });
+        v.push(Layer {
+            name: "pw",
+            kind: LayerKind::Pointwise,
+            stride: 1,
+            h_in: ho,
+            c_in: cin,
+            c_out: cout,
+            macs: ho * ho * cin * cout,
+        });
+    }
+    v.push(Layer {
+        name: "fc",
+        kind: LayerKind::Head,
+        stride: 1,
+        h_in: 7,
+        c_in: 1024,
+        c_out: 1000,
+        macs: 1024 * 1000,
+    });
+    v
+}
+
+/// MAC count of the paper-scale network (≈569 M).
+pub fn paper_total_macs() -> u64 {
+    paper_layers().iter().map(|l| l.macs).sum()
+}
+
+/// One DMA tile movement in the DORY schedule.
+#[derive(Debug, Clone)]
+pub struct TileTransfer {
+    /// Layer index.
+    pub layer: usize,
+    /// L2-side address.
+    pub l2_addr: u64,
+    /// TCDM-side address.
+    pub tcdm_addr: u64,
+    /// Rows in this tile (outer dimension repetitions).
+    pub rows: u64,
+    /// Contiguous bytes per row (inner 1D length).
+    pub row_bytes: u64,
+    /// L2-side row stride (bytes).
+    pub l2_stride: i64,
+    /// TCDM-side row stride (bytes).
+    pub tcdm_stride: i64,
+    /// Direction: true = L2 → TCDM.
+    pub into_tcdm: bool,
+}
+
+impl TileTransfer {
+    /// Total payload bytes.
+    pub fn bytes(&self) -> u64 {
+        self.rows * self.row_bytes
+    }
+}
+
+/// Simulated memory map of the PULP-open run.
+pub mod map {
+    /// Input image in L2.
+    pub const L2_INPUT: u64 = 0x0000_0000;
+    /// Weights blob base in L2.
+    pub const L2_WEIGHTS: u64 = 0x0010_0000;
+    /// Per-layer activation ping/pong buffers in L2.
+    pub const L2_ACT_A: u64 = 0x0020_0000;
+    /// Second activation buffer.
+    pub const L2_ACT_B: u64 = 0x0030_0000;
+    /// TCDM activation-in buffer.
+    pub const TCDM_IN: u64 = 0x1000_0000;
+    /// TCDM weight buffer.
+    pub const TCDM_W: u64 = 0x1000_8000;
+    /// TCDM activation-out buffer.
+    pub const TCDM_OUT: u64 = 0x1000_A000;
+}
+
+/// The DORY-style schedule: per layer, the weight transfer plus
+/// `tiles_per_layer` row-tile input transfers and output write-backs —
+/// frequent small 2D transfers, exactly the pattern §3.1 stresses.
+#[derive(Debug, Clone)]
+pub struct MobileNetSchedule {
+    /// All tile transfers, in issue order.
+    pub transfers: Vec<TileTransfer>,
+    /// Row tiles per layer.
+    pub tiles_per_layer: u64,
+}
+
+impl MobileNetSchedule {
+    /// Build the schedule. `tiles` row-tiles per layer (≥1). Activations
+    /// ping-pong between the two L2 buffers (layer i reads A, writes B,
+    /// layer i+1 reads B, ...), with weights streamed from the blob at
+    /// the offsets of `weight_offsets`.
+    pub fn new(tiles: u64, weight_offsets: &[(u64, u64)]) -> Self {
+        let layers = layers();
+        assert_eq!(weight_offsets.len(), layers.len());
+        let mut transfers = Vec::new();
+        for (li, l) in layers.iter().enumerate() {
+            let (in_l2, out_l2) = if li == 0 {
+                (map::L2_INPUT, map::L2_ACT_B)
+            } else if li % 2 == 1 {
+                (map::L2_ACT_B, map::L2_ACT_A)
+            } else {
+                (map::L2_ACT_A, map::L2_ACT_B)
+            };
+            // Weights: one 1D transfer per layer.
+            let (w_off, w_bytes) = weight_offsets[li];
+            transfers.push(TileTransfer {
+                layer: li,
+                l2_addr: map::L2_WEIGHTS + w_off,
+                tcdm_addr: map::TCDM_W,
+                rows: 1,
+                row_bytes: w_bytes,
+                l2_stride: 0,
+                tcdm_stride: 0,
+                into_tcdm: true,
+            });
+            // Input row-tiles (2D: rows × row_bytes).
+            let row_bytes_in = l.h_in * l.c_in * 4;
+            let t_in = tiles.min(l.h_in);
+            let rows_per = l.h_in / t_in;
+            for t in 0..t_in {
+                transfers.push(TileTransfer {
+                    layer: li,
+                    l2_addr: in_l2 + t * rows_per * row_bytes_in,
+                    tcdm_addr: map::TCDM_IN + t * rows_per * row_bytes_in,
+                    rows: rows_per,
+                    row_bytes: row_bytes_in,
+                    l2_stride: row_bytes_in as i64,
+                    tcdm_stride: row_bytes_in as i64,
+                    into_tcdm: true,
+                });
+            }
+            // Output row-tiles.
+            let row_bytes_out = l.h_out() * l.c_out * 4;
+            let t_out = tiles.min(l.h_out());
+            let rows_per_out = l.h_out() / t_out;
+            let out_rows = if l.kind == LayerKind::Head { 1 } else { l.h_out() };
+            let out_row_bytes =
+                if l.kind == LayerKind::Head { l.c_out * 4 } else { row_bytes_out };
+            let t_out = if l.kind == LayerKind::Head { 1 } else { t_out };
+            for t in 0..t_out {
+                let rows = if l.kind == LayerKind::Head { 1 } else { rows_per_out };
+                transfers.push(TileTransfer {
+                    layer: li,
+                    l2_addr: out_l2 + t * rows_per_out * out_row_bytes,
+                    tcdm_addr: map::TCDM_OUT + t * rows_per_out * out_row_bytes,
+                    rows,
+                    row_bytes: out_row_bytes,
+                    l2_stride: out_row_bytes as i64,
+                    tcdm_stride: out_row_bytes as i64,
+                    into_tcdm: false,
+                });
+            }
+            let _ = out_rows;
+        }
+        Self { transfers, tiles_per_layer: tiles }
+    }
+
+    /// Total DMA payload bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bytes()).sum()
+    }
+
+    /// Number of DMA commands a front-end must issue.
+    pub fn num_commands(&self) -> usize {
+        self.transfers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_table_matches_python_model() {
+        let ls = layers();
+        assert_eq!(ls.len(), 12); // l0 + 5 dw + 5 pw + head
+        assert_eq!(total_macs(), 345_216, "must match python model.total_macs()");
+        assert_eq!(ls[0].macs, 256 * 27 * 8);
+        // dw/pw channel chaining
+        for w in ls.windows(2) {
+            if w[1].kind == LayerKind::Pointwise {
+                assert_eq!(w[0].c_out, w[1].c_in);
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_covers_all_layers() {
+        let offsets: Vec<(u64, u64)> =
+            layers().iter().scan(0, |acc, l| {
+                let o = (*acc, l.weight_bytes());
+                *acc += l.weight_bytes();
+                Some(o)
+            }).collect();
+        let s = MobileNetSchedule::new(4, &offsets);
+        // weights + in tiles + out tiles for every layer
+        assert!(s.num_commands() > 12 * 3);
+        let total = s.total_bytes();
+        let expect: u64 = layers()
+            .iter()
+            .map(|l| l.weight_bytes() + l.in_bytes())
+            .sum::<u64>()
+            + layers()
+                .iter()
+                .map(|l| if l.kind == LayerKind::Head { l.c_out * 4 } else { l.out_bytes() })
+                .sum::<u64>();
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn frequent_small_transfers() {
+        // §3.1: "2D, 3D, and very small transfers are frequently
+        // required for this workload".
+        let offsets: Vec<(u64, u64)> =
+            layers().iter().map(|l| (0, l.weight_bytes())).collect();
+        let s = MobileNetSchedule::new(4, &offsets);
+        let small = s.transfers.iter().filter(|t| t.bytes() <= 4096).count();
+        assert!(small * 10 >= s.num_commands() * 9, "nearly all transfers ≤ 4 KiB");
+        assert!(s.transfers.iter().any(|t| t.bytes() < 600), "some very small transfers");
+    }
+}

@@ -1,0 +1,10 @@
+//! Case-study workloads: the compute side of the paper's five system
+//! integrations (§3) plus the synthetic transfer patterns of §4.4.
+
+pub mod double_buffer;
+pub mod mobilenet;
+pub mod sparse;
+
+pub use double_buffer::{overlap_cycles, DoubleBufferPhase};
+pub use mobilenet::{MobileNetSchedule, TileTransfer};
+pub use sparse::{SparseMatrix, SuiteSparseLike};

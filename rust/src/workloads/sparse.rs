@@ -1,0 +1,248 @@
+//! Synthetic sparse matrices standing in for the SuiteSparse tiles of
+//! §3.5 (diag, cz2548, bcsstk13, raefsky1 — see DESIGN.md
+//! §Substitutions: we match dimension and nonzero count with a seeded
+//! generator, since SpMV/SpMM behaviour is governed by size, density
+//! and row-length distribution).
+
+use crate::sim::XorShift64;
+
+/// CSR sparse matrix (f64 values, the Manticore workloads are
+/// double precision).
+#[derive(Debug, Clone)]
+pub struct SparseMatrix {
+    /// Rows.
+    pub n_rows: usize,
+    /// Columns.
+    pub n_cols: usize,
+    /// CSR row pointers (len = n_rows + 1).
+    pub row_ptr: Vec<usize>,
+    /// Column indices.
+    pub col_idx: Vec<u32>,
+    /// Values.
+    pub vals: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// Nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Density in [0,1].
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// `y = A x` (the SpMV oracle; also the "compute" of the Manticore
+    /// sparse workloads, executed natively in the coordinator).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        for r in 0..self.n_rows {
+            let mut acc = 0.0;
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc += self.vals[k] * x[self.col_idx[k] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// `Y = A X` with dense `X` of `n_rhs` columns (SpMM).
+    pub fn spmm(&self, x: &[f64], n_rhs: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols * n_rhs);
+        let mut y = vec![0.0; self.n_rows * n_rhs];
+        for r in 0..self.n_rows {
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                let a = self.vals[k];
+                let c = self.col_idx[k] as usize;
+                for j in 0..n_rhs {
+                    y[r * n_rhs + j] += a * x[c * n_rhs + j];
+                }
+            }
+        }
+        y
+    }
+
+    /// Bytes streamed from memory for one SpMV (CSR vals + indices +
+    /// row pointers + gathered x + result y) — the traffic model of the
+    /// Manticore bandwidth analysis.
+    pub fn spmv_bytes(&self) -> u64 {
+        (self.nnz() * (8 + 4) + (self.n_rows + 1) * 4 + self.n_cols * 8 + self.n_rows * 8) as u64
+    }
+
+    /// Identity-like diagonal matrix (the `diag` tile).
+    pub fn diag(n: usize) -> Self {
+        Self {
+            n_rows: n,
+            n_cols: n,
+            row_ptr: (0..=n).collect(),
+            col_idx: (0..n as u32).collect(),
+            vals: (0..n).map(|i| 1.0 + (i % 7) as f64 * 0.25).collect(),
+        }
+    }
+
+    /// Random matrix with a target nonzero count, banded-ish structure
+    /// (FE matrices like bcsstk13/raefsky1 are banded) and deterministic
+    /// seed.
+    pub fn synthetic(n_rows: usize, n_cols: usize, nnz: usize, bandwidth: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let per_row = nnz / n_rows;
+        let extra = nnz % n_rows;
+        let mut row_ptr = Vec::with_capacity(n_rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for r in 0..n_rows {
+            let k = per_row + usize::from(r < extra);
+            let mut cols = std::collections::BTreeSet::new();
+            // center the band on the diagonal
+            let lo = r.saturating_sub(bandwidth / 2).min(n_cols - 1);
+            let hi = (lo + bandwidth).min(n_cols);
+            let mut guard = 0;
+            while cols.len() < k.min(hi - lo) && guard < 10 * k + 100 {
+                cols.insert(lo as u64 + rng.below((hi - lo) as u64));
+                guard += 1;
+            }
+            for c in cols {
+                col_idx.push(c as u32);
+                vals.push(rng.unit_f64() * 2.0 - 1.0);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Self { n_rows, n_cols, row_ptr, col_idx, vals }
+    }
+}
+
+/// The four §3.5 tiles by increasing density, dimension/nnz-matched to
+/// their SuiteSparse namesakes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SuiteSparseLike {
+    /// `diag` (S): diagonal.
+    Diag,
+    /// `cz2548` (M): 2548², ≈57k nnz.
+    Cz2548,
+    /// `bcsstk13` (L): 2003², ≈84k nnz.
+    Bcsstk13,
+    /// `raefsky1` (XL): 3242², ≈294k nnz.
+    Raefsky1,
+}
+
+impl SuiteSparseLike {
+    /// All four, S → XL.
+    pub const ALL: [SuiteSparseLike; 4] = [
+        SuiteSparseLike::Diag,
+        SuiteSparseLike::Cz2548,
+        SuiteSparseLike::Bcsstk13,
+        SuiteSparseLike::Raefsky1,
+    ];
+
+    /// Tile-size label used in Fig. 11.
+    pub fn label(self) -> &'static str {
+        match self {
+            SuiteSparseLike::Diag => "S(diag)",
+            SuiteSparseLike::Cz2548 => "M(cz2548)",
+            SuiteSparseLike::Bcsstk13 => "L(bcsstk13)",
+            SuiteSparseLike::Raefsky1 => "XL(raefsky1)",
+        }
+    }
+
+    /// Build the synthetic stand-in.
+    pub fn build(self) -> SparseMatrix {
+        match self {
+            SuiteSparseLike::Diag => SparseMatrix::diag(2000),
+            SuiteSparseLike::Cz2548 => SparseMatrix::synthetic(2548, 2548, 57_308, 600, 0xC25),
+            SuiteSparseLike::Bcsstk13 => SparseMatrix::synthetic(2003, 2003, 83_883, 400, 0xB13),
+            SuiteSparseLike::Raefsky1 => SparseMatrix::synthetic(3242, 3242, 293_409, 500, 0x4AE),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diag_spmv_is_scaling() {
+        let m = SparseMatrix::diag(10);
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y = m.spmv(&x);
+        for i in 0..10 {
+            assert_eq!(y[i], m.vals[i] * x[i]);
+        }
+    }
+
+    #[test]
+    fn synthetic_hits_nnz_targets() {
+        for t in SuiteSparseLike::ALL {
+            let m = t.build();
+            let target = match t {
+                SuiteSparseLike::Diag => 2000,
+                SuiteSparseLike::Cz2548 => 57_308,
+                SuiteSparseLike::Bcsstk13 => 83_883,
+                SuiteSparseLike::Raefsky1 => 293_409,
+            };
+            let got = m.nnz();
+            let rel = ((got as f64) - (target as f64)).abs() / (target as f64);
+            assert!(rel < 0.05, "{}: nnz {} vs target {}", t.label(), got, target);
+        }
+    }
+
+    #[test]
+    fn density_increases_s_to_xl() {
+        let d: Vec<f64> = SuiteSparseLike::ALL.iter().map(|t| t.build().density()).collect();
+        assert!(d[0] < d[1] && d[1] < d[2] && d[2] < d[3], "{d:?}");
+    }
+
+    #[test]
+    fn spmv_matches_dense_reference() {
+        let m = SparseMatrix::synthetic(50, 40, 300, 30, 9);
+        let x: Vec<f64> = (0..40).map(|i| (i as f64) * 0.5 - 3.0).collect();
+        // dense reference
+        let mut dense = vec![0.0; 50 * 40];
+        for r in 0..50 {
+            for k in m.row_ptr[r]..m.row_ptr[r + 1] {
+                dense[r * 40 + m.col_idx[k] as usize] = m.vals[k];
+            }
+        }
+        let mut expect = vec![0.0; 50];
+        for r in 0..50 {
+            for c in 0..40 {
+                expect[r] += dense[r * 40 + c] * x[c];
+            }
+        }
+        let got = m.spmv(&x);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn spmm_consistent_with_spmv_per_column() {
+        let m = SparseMatrix::synthetic(30, 30, 200, 20, 4);
+        let n_rhs = 3;
+        let mut x = vec![0.0; 30 * n_rhs];
+        let mut rng = XorShift64::new(8);
+        for v in x.iter_mut() {
+            *v = rng.unit_f64();
+        }
+        let y = m.spmm(&x, n_rhs);
+        for j in 0..n_rhs {
+            let xc: Vec<f64> = (0..30).map(|r| x[r * n_rhs + j]).collect();
+            let yc = m.spmv(&xc);
+            for r in 0..30 {
+                assert!((y[r * n_rhs + j] - yc[r]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rows_sorted_and_in_bounds() {
+        let m = SuiteSparseLike::Bcsstk13.build();
+        for r in 0..m.n_rows {
+            let s = &m.col_idx[m.row_ptr[r]..m.row_ptr[r + 1]];
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "row {r} not sorted");
+            assert!(s.iter().all(|&c| (c as usize) < m.n_cols));
+        }
+    }
+}
