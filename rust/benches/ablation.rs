@@ -11,7 +11,7 @@
 use idma::backend::{Backend, BackendCfg, PortCfg};
 use idma::mem::{Endpoint, MemModel};
 use idma::protocol::ProtocolKind;
-use idma::sim::bench::header;
+use idma::sim::bench::{header, scaled, smoke, BenchJson};
 use idma::transfer::Transfer1D;
 
 fn run_jittery(cfg: BackendCfg, mem: MemModel, frag: u64, total: u64, contention: f64) -> f64 {
@@ -84,7 +84,7 @@ fn base(nax: usize) -> BackendCfg {
 
 fn main() {
     header("Ablation — what each back-end feature buys (bus utilization)");
-    let total = 64 * 1024;
+    let total = scaled(64 * 1024, 8 * 1024);
 
     println!("(1) read/write decoupling (coupled = error-handling mode's");
     println!("    joint burst boundaries), misaligned transfers through an");
@@ -141,7 +141,15 @@ fn main() {
 
     println!("(5) desc_64 contiguous-descriptor prefetch (Cheshire, 64 B):");
     let c = idma::systems::cheshire::Cheshire::default();
-    let with = c.measure_idma(64, 64);
+    let with = c.measure_idma(64, if smoke() { 16 } else { 64 });
     println!("    with prefetch {with:.3} (without: fetch-latency-bound ≈0.70;");
     println!("    see frontend/desc.rs — the default new() disables it)");
+    let _ = BenchJson::new("ablation")
+        .int("total_bytes", total)
+        .num("decoupled_util", dec)
+        .num("coupled_util", cpl)
+        .num("hw_legalizer_util", hw)
+        .num("sw_legalized_util", swu)
+        .num("desc64_prefetch_util", with)
+        .write();
 }

@@ -3,14 +3,20 @@
 //! model and the theoretical limit. Also the FPGA resource comparison.
 
 use idma::baseline::XilinxAxiDma;
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, smoke, BenchJson};
 use idma::systems::cheshire::Cheshire;
 
 fn main() {
     header("Fig. 8 — Cheshire: bus utilization vs transfer length");
     let c = Cheshire::default();
     println!("{:>8} | {:>8} {:>8} {:>8} | {:>6}", "len", "iDMA", "Xilinx", "limit", "ratio");
-    for p in c.fig8() {
+    let pts = if smoke() {
+        // CI smoke: two representative lengths, few repetitions.
+        [64u64, 4096].iter().map(|&len| c.point(len, 8)).collect::<Vec<_>>()
+    } else {
+        c.fig8()
+    };
+    for p in &pts {
         println!(
             "{:>8} | {:>8.3} {:>8.3} {:>8.3} | {:>5.1}x",
             p.len,
@@ -20,7 +26,7 @@ fn main() {
             p.idma / p.xilinx
         );
     }
-    let p64 = c.point(64, 128);
+    let p64 = c.point(64, if smoke() { 8 } else { 128 });
     println!(
         "\n64 B fine-grained transfers: iDMA {:.1}× over Xilinx AXI DMA v7.1 (paper ≈6×)",
         p64.idma / p64.xilinx
@@ -32,4 +38,12 @@ fn main() {
         let _ = c.measure_idma(64, 64);
     });
     println!("\n{r}");
+    let mut json = BenchJson::new("fig08_cheshire_util")
+        .num("util_64b", p64.idma)
+        .num("ratio_vs_xilinx_64b", p64.idma / p64.xilinx)
+        .result("sweep_point", &r);
+    for p in &pts {
+        json = json.num(&format!("util_len{}", p.len), p.idma);
+    }
+    let _ = json.write();
 }

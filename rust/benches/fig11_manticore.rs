@@ -3,7 +3,7 @@
 //! simulation (inst_64 launch agility + real f64 numerics over PJRT
 //! when artifacts are built).
 
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, smoke, BenchJson};
 use idma::systems::manticore::Manticore;
 
 fn main() {
@@ -24,7 +24,8 @@ fn main() {
 
     println!("\ncluster tile staging (inst_64, 32 outstanding, HBM latency 100):");
     let mut rt = idma::runtime::Runtime::open_default().ok();
-    for n in [24usize, 32, 48, 64] {
+    let tiles: &[usize] = if smoke() { &[24] } else { &[24, 32, 48, 64] };
+    for &n in tiles {
         let sim = m.gemm_tile_sim(n, rt.as_mut());
         println!(
             "  tile {n:>2}: {} B staged in {} cycles ({} launch insts){}",
@@ -38,4 +39,9 @@ fn main() {
         let _ = m.fig11();
     });
     println!("\n{r}");
+    let mut json = BenchJson::new("fig11_manticore").result("model", &r);
+    for p in m.fig11() {
+        json = json.num(&format!("{}_{}_speedup", p.workload, p.tile), p.speedup);
+    }
+    let _ = json.write();
 }

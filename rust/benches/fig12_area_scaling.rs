@@ -6,7 +6,7 @@
 use idma::backend::{BackendCfg, PortCfg};
 use idma::model::area::{default_sweep, synthesize_area, AreaModel};
 use idma::protocol::ProtocolKind;
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, BenchJson};
 
 fn cfg(ports: &[ProtocolKind], aw: u32, dw: u64, nax: usize) -> BackendCfg {
     BackendCfg {
@@ -65,4 +65,9 @@ fn main() {
         let _ = AreaModel::fit(&default_sweep());
     });
     println!("\n{r}");
+    let _ = BenchJson::new("fig12_area_scaling")
+        .num("model_train_error", model.train_error)
+        .num("axi4_32b_nax32_ge", synthesize_area(&c32).total())
+        .result("nnls_fit", &r)
+        .write();
 }

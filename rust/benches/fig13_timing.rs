@@ -6,7 +6,7 @@ use idma::backend::{BackendCfg, PortCfg};
 use idma::model::area::default_sweep;
 use idma::model::timing::{synthesize_fmax_ghz, TimingModel};
 use idma::protocol::ProtocolKind;
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, BenchJson};
 
 fn cfg(ports: &[ProtocolKind], aw: u32, dw: u64, nax: usize) -> BackendCfg {
     BackendCfg {
@@ -63,4 +63,10 @@ fn main() {
         let _ = TimingModel::fit(&default_sweep());
     });
     println!("\n{r}");
+    let base = cfg(&[ProtocolKind::Axi4], 32, 4, 2);
+    let _ = BenchJson::new("fig13_timing")
+        .num("model_train_error", model.train_error)
+        .num("axi4_base_fmax_ghz", synthesize_fmax_ghz(&base))
+        .result("timing_fit", &r)
+        .write();
 }

@@ -6,7 +6,7 @@
 use idma::backend::{Backend, BackendCfg, PortCfg};
 use idma::mem::{Endpoint, MemModel};
 use idma::protocol::ProtocolKind;
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, smoke, BenchJson};
 use idma::transfer::Transfer1D;
 
 fn run(mem: MemModel, nax: usize, frag: u64) -> (f64, u64) {
@@ -49,14 +49,17 @@ fn main() {
     header("Fig. 14 — standalone bus utilization (base config, 32-b)");
     let systems: [(&str, fn(u64) -> MemModel); 3] =
         [("SRAM", MemModel::sram), ("RPC-DRAM", MemModel::rpc_dram), ("HBM", MemModel::hbm)];
-    println!(
-        "{:<10} {:>6} | {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7}",
-        "system", "NAx", "1B", "4B", "16B", "64B", "128B", "512B", "1KiB"
-    );
+    let naxs: &[usize] = if smoke() { &[2, 16] } else { &[2, 4, 8, 16, 32, 64] };
+    let frags: &[u64] = if smoke() { &[4, 64, 512] } else { &[1, 4, 16, 64, 128, 512, 1024] };
+    print!("{:<10} {:>6} |", "system", "NAx");
+    for frag in frags {
+        print!(" {:>7}", format!("{frag}B"));
+    }
+    println!();
     for (name, m) in systems {
-        for nax in [2usize, 4, 8, 16, 32, 64] {
+        for &nax in naxs {
             let mut row = format!("{name:<10} {nax:>6} |");
-            for frag in [1u64, 4, 16, 64, 128, 512, 1024] {
+            for &frag in frags {
                 let (util, _) = run(m(4), nax, frag);
                 row += &format!(" {util:>7.3}");
             }
@@ -64,12 +67,17 @@ fn main() {
         }
     }
     println!("\n§4.5 energy proxy (active cycles, 64 KiB in 64 B pieces):");
+    let mut json = BenchJson::new("fig14_standalone_util");
     for (name, m) in systems {
-        let (_, active) = run(m(4), 16, 64);
+        let (util, active) = run(m(4), 16, 64);
         println!("  {name:<10} {active} active cycles (min possible: 16384)");
+        json = json
+            .num(&format!("{name}_util_nax16_64b"), util)
+            .int(&format!("{name}_active_cycles"), active);
     }
     let r = bench("fig14 hot point (HBM, NAx=32, 16B)", 1, 5, || {
         let _ = run(MemModel::hbm(4), 32, 16);
     });
     println!("\n{r}");
+    let _ = json.result("hot_point", &r).write();
 }

@@ -3,7 +3,7 @@
 //! −10 % DMAE area claim. Runs the tiny-net E2E verification when the
 //! AOT artifacts exist.
 
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, BenchJson};
 use idma::systems::pulp_open::{DmaKind, PulpOpen};
 
 fn main() {
@@ -39,8 +39,15 @@ fn main() {
         }
         Err(_) => println!("\n(artifacts not built; skipping the E2E numerics run)"),
     }
-    let r = bench("8 KiB copy sim", 1, 10, || {
+    let b = bench("8 KiB copy sim", 1, 10, || {
         let _ = p.copy_8kib();
     });
-    println!("\n{r}");
+    println!("\n{b}");
+    let _ = BenchJson::new("sec31_pulp")
+        .int("copy_8kib_cycles", c)
+        .num("idma_mac_per_cycle", r.mac_per_cycle)
+        .num("mchan_mac_per_cycle", rm.mac_per_cycle)
+        .num("area_reduction", 1.0 - idma_ge / mchan_ge)
+        .result("copy_sim", &b)
+        .write();
 }

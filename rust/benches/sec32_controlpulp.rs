@@ -1,7 +1,7 @@
 //! §3.2: ControlPULP — rt_3D autonomous sensor readout: ≈2200 core
 //! cycles saved per scheduling period, sDMAE ≈11 kGE.
 
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, BenchJson};
 use idma::systems::control_pulp::ControlPulp;
 
 fn main() {
@@ -19,4 +19,10 @@ fn main() {
         let _ = c.run_hyperperiod();
     });
     println!("\n{b}");
+    let _ = BenchJson::new("sec32_controlpulp")
+        .int("saved_cycles", r.saved)
+        .int("launches", r.launches)
+        .num("rt3d_area_ge", r.rt3d_area_ge)
+        .result("hyperperiod", &b)
+        .write();
 }

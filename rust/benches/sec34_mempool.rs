@@ -1,14 +1,15 @@
 //! §3.4: MemPool — distributed iDMA: 512 KiB L2→L1 copy (99 %
 //! utilization, 15.8×, <1 % area) and the five kernel speedups.
 
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, scaled, BenchJson};
 use idma::systems::mempool::MemPool;
 
 fn main() {
     header("§3.4 — MemPool distributed iDMA");
     let m = MemPool::default();
-    let r = m.copy_experiment(512 * 1024);
-    println!("512 KiB L2→L1 copy:");
+    let bytes = scaled(512 * 1024, 64 * 1024);
+    let r = m.copy_experiment(bytes);
+    println!("{} KiB L2→L1 copy:", bytes / 1024);
     println!("  iDMA: {} cycles — wide-bus utilization {:.3} (paper 0.99)", r.idma_cycles, r.utilization);
     println!("  no-DMA cores: {} cycles (1/16 of the wide interconnect)", r.baseline_cycles);
     println!("  speedup {:.1}× (paper 15.8×); area overhead {:.2}% (paper <1 %)",
@@ -23,4 +24,12 @@ fn main() {
         let _ = m.copy_experiment(64 * 1024);
     });
     println!("\n{b}");
+    let _ = BenchJson::new("sec34_mempool")
+        .int("copy_bytes", bytes)
+        .int("idma_cycles", r.idma_cycles)
+        .num("utilization", r.utilization)
+        .num("speedup", r.speedup)
+        .num("area_overhead", r.area_overhead)
+        .result("copy_64k", &b)
+        .write();
 }

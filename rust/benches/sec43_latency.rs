@@ -7,7 +7,7 @@ use idma::backend::{Backend, BackendCfg, PortCfg};
 use idma::mem::{Endpoint, MemModel};
 use idma::model::latency::{backend_latency, launch_latency, MidEndKind};
 use idma::protocol::ProtocolKind;
-use idma::sim::bench::header;
+use idma::sim::bench::{header, BenchJson};
 use idma::transfer::Transfer1D;
 
 fn measure(legalizer: bool, dw: u64, nax: usize) -> u64 {
@@ -63,4 +63,8 @@ fn main() {
         launch_latency(&cfg, &[MidEndKind::Rt3D, MidEndKind::TensorNd])
     );
     println!("\npaper: 2 cycles (1 w/o legalizer), +1 per mid-end, 0 for tensor_ND.");
+    let _ = BenchJson::new("sec43_latency")
+        .int("with_legalizer_cycles", measure(true, 4, 2))
+        .int("without_legalizer_cycles", m)
+        .write();
 }

@@ -1,0 +1,113 @@
+//! Multi-threaded scenario-sweep demo: a utilization grid over memory
+//! latency × outstanding transactions × fragment size (the Fig. 14
+//! axes, densified), sharded across cores by `sim::sweep`. One
+//! invocation covers the whole configuration grid — the workflow every
+//! future scenario PR builds on.
+
+use std::time::Instant;
+
+use idma::backend::{Backend, BackendCfg, PortCfg};
+use idma::mem::{Endpoint, MemModel};
+use idma::protocol::ProtocolKind;
+use idma::sim::bench::{header, smoke, BenchJson};
+use idma::sim::sweep;
+use idma::systems::common::run_backend;
+use idma::transfer::Transfer1D;
+
+#[derive(Clone, Copy)]
+struct Point {
+    latency: u64,
+    nax: usize,
+    frag: u64,
+}
+
+fn utilization(p: &Point) -> f64 {
+    let dw = 8u64;
+    let total = 16 * 1024u64;
+    let mut be = Backend::new(BackendCfg {
+        dw_bytes: dw,
+        nax_r: p.nax,
+        nax_w: p.nax,
+        desc_depth: 8,
+        ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+        ..Default::default()
+    })
+    .unwrap();
+    let mut mems = [Endpoint::new(MemModel::custom("m", p.latency, p.nax.max(8), dw))];
+    let payload = vec![0x5Au8; total as usize];
+    mems[0].data.write(0, &payload);
+    let n = total / p.frag;
+    let mut now = 0u64;
+    let mut submitted = 0u64;
+    while be.busy() || submitted < n {
+        while submitted < n {
+            let t = Transfer1D::copy(
+                submitted,
+                submitted * p.frag,
+                0x100_000 + submitted * p.frag,
+                p.frag,
+                ProtocolKind::Axi4,
+            );
+            if !be.try_submit(now, t) {
+                break;
+            }
+            submitted += 1;
+        }
+        if submitted < n {
+            // Submission window still open: advance per cycle.
+            be.tick(now, &mut mems);
+            now += 1;
+        } else {
+            // Drain event-driven.
+            now = run_backend(&mut be, &mut mems, now, 50_000_000);
+        }
+        assert!(now < 50_000_000, "runaway");
+    }
+    be.stats.bus_utilization(dw)
+}
+
+fn main() {
+    header("scenario sweep — latency × NAx × fragment utilization grid");
+    let latencies: &[u64] = if smoke() { &[3, 50] } else { &[1, 3, 13, 50, 100, 200] };
+    let naxs: &[usize] = if smoke() { &[2, 16] } else { &[1, 2, 4, 8, 16, 32] };
+    let frags: &[u64] = if smoke() { &[64, 1024] } else { &[16, 64, 256, 1024, 4096] };
+    let mut grid = Vec::new();
+    for &latency in latencies {
+        for &nax in naxs {
+            for &frag in frags {
+                grid.push(Point { latency, nax, frag });
+            }
+        }
+    }
+    let threads = sweep::default_threads();
+    let t0 = Instant::now();
+    let utils = sweep::sweep(&grid, threads, |_, p| utilization(p));
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} scenarios on {} threads in {:.2} s ({:.1} scenarios/s)\n",
+        grid.len(),
+        threads,
+        wall,
+        grid.len() as f64 / wall.max(1e-9)
+    );
+    println!("{:>8} {:>5} {:>6} | {:>6}", "latency", "nax", "frag", "util");
+    for (p, u) in grid.iter().zip(&utils) {
+        println!("{:>8} {:>5} {:>6} | {:>6.3}", p.latency, p.nax, p.frag, u);
+    }
+    // Sanity anchors of the Fig. 14 mechanism: at deep latency, deeper
+    // NAx must win; tiny fragments pay the per-transfer overhead.
+    let find = |lat: u64, nax: usize, frag: u64| {
+        grid.iter().zip(&utils).find(|(p, _)| p.latency == lat && p.nax == nax && p.frag == frag)
+    };
+    if let (Some((_, lo)), Some((_, hi))) = (find(50, 2, 1024), find(50, 16, 1024)) {
+        assert!(hi >= lo, "deeper NAx must not hurt utilization: {lo} vs {hi}");
+    }
+    let best = utils.iter().cloned().fold(0.0f64, f64::max);
+    let _ = BenchJson::new("sweep_grid")
+        .int("scenarios", grid.len() as u64)
+        .int("threads", threads as u64)
+        .num("wall_s", wall)
+        .num("scenarios_per_s", grid.len() as f64 / wall.max(1e-9))
+        .num("best_utilization", best)
+        .write();
+}

@@ -4,7 +4,7 @@
 use idma::backend::{BackendCfg, PortCfg};
 use idma::model::area::synthesize_area;
 use idma::protocol::ProtocolKind;
-use idma::sim::bench::{bench, header};
+use idma::sim::bench::{bench, header, BenchJson};
 
 fn main() {
     header("Table 4 — back-end area decomposition (GE)");
@@ -35,4 +35,9 @@ fn main() {
         let _ = synthesize_area(&cfg);
     });
     println!("\n{r}");
+    let _ = BenchJson::new("tab04_area")
+        .num("total_ge", b.total())
+        .int("items", b.items.len() as u64)
+        .result("decomposition", &r)
+        .write();
 }

@@ -5,7 +5,7 @@
 use idma::backend::{BackendCfg, PortCfg};
 use idma::model::area::{frontend_area_ge, midend_area_ge, synthesize_area};
 use idma::protocol::ProtocolKind;
-use idma::sim::bench::header;
+use idma::sim::bench::{header, BenchJson};
 
 fn be(aw: u32, dw: u64, nax: usize, ports: &[ProtocolKind]) -> f64 {
     synthesize_area(&BackendCfg {
@@ -60,9 +60,12 @@ fn main() {
         ("ControlPULP (paper ≈61 kGE)", controlpulp),
         ("IO-DMA (paper ≈2 kGE)", io_dma),
     ];
-    for (name, ge) in rows {
+    let mut json = BenchJson::new("tab05_soa");
+    for (i, (name, ge)) in rows.iter().enumerate() {
         println!("  {name:<44} {ge:>9.0} GE");
+        json = json.str(&format!("row{i}_name"), name).num(&format!("row{i}_ge"), *ge);
     }
+    let _ = json.write();
     println!("\nmodel estimates; Cheshire/ControlPULP deltas vs the paper stem from");
     println!("system-level wrappers (CDC cuts, config buses) outside the model's scope.");
     println!("architecture span: ≥2 kGE (minimal OBI) to HPC configs >1 GHz — Table 5 row.");

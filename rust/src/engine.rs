@@ -233,6 +233,18 @@ impl IdmaEngine {
     pub fn fingerprint(&self) -> u64 {
         self.backend.fingerprint() ^ (self.done.len() as u64) << 50
     }
+
+    /// Event-driven scheduling hook (see [`Backend::next_event`]): the
+    /// earliest cycle after `now` at which the engine could progress.
+    /// While the mid-end chain is active the engine advances per cycle
+    /// (chain hand-offs are combinational, one per boundary per cycle);
+    /// once the chain has drained, the back-end's event horizon applies.
+    pub fn next_event(&self, now: Cycle, mems: &[Endpoint]) -> Cycle {
+        if !self.chain_idle() {
+            return now + 1;
+        }
+        self.backend.next_event(now, mems)
+    }
 }
 
 /// The §3.6 wrapper: build a typical engine from the three critical

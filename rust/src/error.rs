@@ -1,18 +1,20 @@
 //! Error types for the iDMA library.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline build environment has
+//! no crates.io access, so the crate stays dependency-free (no
+//! `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Top-level error type for iDMA operations.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum IdmaError {
     /// A transfer descriptor violates a structural constraint
     /// (e.g. zero-length where the legalizer is configured to reject it).
-    #[error("illegal transfer: {0}")]
     IllegalTransfer(String),
 
     /// A protocol port was used in a way its capability table forbids
     /// (e.g. writes on an AXI4-Stream read-only port, Init as destination).
-    #[error("protocol violation on {protocol}: {reason}")]
     ProtocolViolation {
         /// The offending protocol.
         protocol: &'static str,
@@ -21,24 +23,60 @@ pub enum IdmaError {
     },
 
     /// A bus error reported by the memory system (the error handler's input).
-    #[error("bus error at address {addr:#x}")]
     BusError {
         /// Faulting (legalized burst base) address.
         addr: u64,
     },
 
     /// Engine configuration is inconsistent (e.g. no back-end ports).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// Artifact loading / PJRT runtime failures.
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Simulation failed to converge / deadlocked (watchdog tripped).
-    #[error("simulation watchdog: no progress after {0} cycles")]
     Watchdog(u64),
 }
 
+impl fmt::Display for IdmaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IdmaError::IllegalTransfer(msg) => write!(f, "illegal transfer: {msg}"),
+            IdmaError::ProtocolViolation { protocol, reason } => {
+                write!(f, "protocol violation on {protocol}: {reason}")
+            }
+            IdmaError::BusError { addr } => write!(f, "bus error at address {addr:#x}"),
+            IdmaError::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            IdmaError::Runtime(msg) => write!(f, "runtime: {msg}"),
+            IdmaError::Watchdog(cycles) => {
+                write!(f, "simulation watchdog: no progress after {cycles} cycles")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IdmaError {}
+
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, IdmaError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_format() {
+        assert_eq!(IdmaError::IllegalTransfer("x".into()).to_string(), "illegal transfer: x");
+        assert_eq!(
+            IdmaError::ProtocolViolation { protocol: "AXI4", reason: "r".into() }.to_string(),
+            "protocol violation on AXI4: r"
+        );
+        assert_eq!(IdmaError::BusError { addr: 0x10 }.to_string(), "bus error at address 0x10");
+        assert_eq!(IdmaError::Config("c".into()).to_string(), "invalid configuration: c");
+        assert_eq!(IdmaError::Runtime("r".into()).to_string(), "runtime: r");
+        assert_eq!(
+            IdmaError::Watchdog(7).to_string(),
+            "simulation watchdog: no progress after 7 cycles"
+        );
+    }
+}

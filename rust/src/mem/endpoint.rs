@@ -376,6 +376,33 @@ impl Endpoint {
     pub fn idle(&self) -> bool {
         self.inflight_r.is_empty() && self.writes.is_empty() && self.write_resps.is_empty()
     }
+
+    // ------------------------------------------------ event scheduling
+
+    /// Earliest cycle (strictly after `now`) at which the front in-flight
+    /// read burst could deliver its next data beat. Conservative lower
+    /// bound: contention steals and consumer back pressure can defer the
+    /// actual beat further, in which case the caller simply retries at
+    /// the returned cycle. `None` when no read is in flight.
+    pub fn next_read_beat_at(&self, now: Cycle) -> Option<Cycle> {
+        self.inflight_r.front().map(|b| b.ready_at.max(self.next_r_slot).max(now + 1))
+    }
+
+    /// Earliest cycle (strictly after `now`) at which the front write
+    /// response becomes due. `None` when no response is pending.
+    pub fn next_write_resp_at(&self, now: Cycle) -> Option<Cycle> {
+        self.write_resps.front().map(|(due, _)| (*due).max(now + 1))
+    }
+
+    /// Earliest time-gated endpoint event after `now` (read beat ready
+    /// or write response due). `None` when neither is pending — write
+    /// data beats are requester-paced and need no endpoint wake-up.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        match (self.next_read_beat_at(now), self.next_write_resp_at(now)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -487,6 +514,28 @@ mod tests {
         let r = e.pop_write_resp(5).unwrap();
         assert!(r.error);
         assert_eq!(e.data.read_vec(100, 4), vec![0, 0, 0, 0], "faulting write swallowed");
+    }
+
+    #[test]
+    fn next_event_tracks_read_latency_and_resp_due() {
+        let mut e = ep(5, 4);
+        assert_eq!(e.next_event(0), None, "idle endpoint has no events");
+        assert!(e.try_read_req(10, 0, 4, 0));
+        assert_eq!(e.next_read_beat_at(10), Some(15), "beat ready at latency");
+        assert_eq!(e.next_event(10), Some(15));
+        // Mid-stream the next beat is one cycle out, never earlier.
+        e.data.write(0, &[1; 8]);
+        let mut e2 = ep(0, 4);
+        e2.data.write(0, &[1; 8]);
+        assert!(e2.try_read_req(0, 0, 8, 0));
+        let _ = e2.take_read_beat(0).unwrap();
+        assert_eq!(e2.next_read_beat_at(0), Some(1), "one beat per cycle");
+        // Write responses surface at their due cycle.
+        let mut e3 = ep(3, 4);
+        assert!(e3.try_write_req(0, 0, 4, 0));
+        assert!(e3.push_write_beat(0, &[1, 2, 3, 4]));
+        assert_eq!(e3.next_write_resp_at(0), Some(3));
+        assert_eq!(e3.next_event(1), Some(3));
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! The real PJRT-backed runtime (requires the `xla` crate, only present
+//! in environments with the XLA toolchain — see the `pjrt` feature note
+//! in `Cargo.toml`). API-identical to [`super::stub`].
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{IdmaError, Result};
+
+/// A compiled AOT entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (manifest key).
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute on f32 buffers with shapes. Each input is `(data, dims)`;
+    /// returns the flattened f32 outputs of the (tupled) result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| IdmaError::Runtime(format!("reshape: {e}")))?;
+            lits.push(lit);
+        }
+        let out = self.exec(&lits)?;
+        let tuple = out.to_tuple().map_err(|e| IdmaError::Runtime(format!("tuple: {e}")))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| IdmaError::Runtime(format!("to_vec: {e}"))))
+            .collect()
+    }
+
+    /// Execute on f64 buffers.
+    pub fn run_f64(&self, inputs: &[(&[f64], &[i64])]) -> Result<Vec<Vec<f64>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| IdmaError::Runtime(format!("reshape: {e}")))?;
+            lits.push(lit);
+        }
+        let out = self.exec(&lits)?;
+        let tuple = out.to_tuple().map_err(|e| IdmaError::Runtime(format!("tuple: {e}")))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f64>().map_err(|e| IdmaError::Runtime(format!("to_vec: {e}"))))
+            .collect()
+    }
+
+    fn exec(&self, lits: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(lits)
+            .map_err(|e| IdmaError::Runtime(format!("execute {}: {e}", self.name)))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| IdmaError::Runtime(format!("to_literal: {e}")))
+    }
+}
+
+/// The artifact registry: PJRT CPU client + lazily compiled entry points
+/// from `artifacts/manifest.tsv`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, String>,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            IdmaError::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let mut manifest = HashMap::new();
+        for line in text.lines() {
+            let mut it = line.split('\t');
+            if let (Some(name), Some(file)) = (it.next(), it.next()) {
+                manifest.insert(name.to_string(), file.to_string());
+            }
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| IdmaError::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Load + compile an entry point (cached).
+    pub fn get(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| IdmaError::Runtime(format!("no artifact named {name}")))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().expect("utf-8 path"))
+            .map_err(|e| IdmaError::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| IdmaError::Runtime(format!("compile {name}: {e}")))?;
+        let e = std::rc::Rc::new(Executable { exe, name: name.to_string() });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Path of a raw data file (weights/input/expected binaries).
+    pub fn data_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}

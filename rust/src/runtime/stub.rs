@@ -1,0 +1,81 @@
+//! Stub runtime for builds without the XLA toolchain (the default).
+//!
+//! API-identical to [`super::pjrt`], but [`Runtime::open`] always fails
+//! with [`IdmaError::Runtime`], so every caller takes its graceful
+//! artifacts-unavailable path (the system simulations run the cycle
+//! model without executing layer numerics, exactly as they do when
+//! `make artifacts` has not been run).
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{IdmaError, Result};
+
+/// A compiled AOT entry point (never constructed in stub builds).
+pub struct Executable {
+    /// Artifact name (manifest key).
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute on f32 buffers with shapes. Each input is `(data, dims)`;
+    /// returns the flattened f32 outputs of the (tupled) result.
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable(&self.name))
+    }
+
+    /// Execute on f64 buffers.
+    pub fn run_f64(&self, _inputs: &[(&[f64], &[i64])]) -> Result<Vec<Vec<f64>>> {
+        Err(unavailable(&self.name))
+    }
+}
+
+fn unavailable(what: &str) -> IdmaError {
+    IdmaError::Runtime(format!(
+        "PJRT runtime not built for {what}: this is a stub build (enable the `pjrt` \
+         feature in an environment that provides the `xla` crate)"
+    ))
+}
+
+/// The artifact registry (stub: opening always fails).
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifact directory. Always fails in stub builds.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable(&dir.as_ref().display().to_string()))
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    /// Artifact names available (none in stub builds).
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Load + compile an entry point. Always fails in stub builds.
+    pub fn get(&mut self, name: &str) -> Result<Rc<Executable>> {
+        Err(unavailable(name))
+    }
+
+    /// Path of a raw data file (weights/input/expected binaries).
+    pub fn data_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_open_reports_unavailable() {
+        let err = Runtime::open_default().unwrap_err();
+        assert!(err.to_string().contains("stub build"), "{err}");
+    }
+}

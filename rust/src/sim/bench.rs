@@ -1,7 +1,17 @@
 //! Minimal benchmark harness (criterion is not available in this
 //! offline environment): warmup + timed iterations with mean/stddev,
 //! used by every `cargo bench` target.
+//!
+//! Two CI-oriented knobs:
+//! * **Smoke mode** — `IDMA_BENCH_SMOKE=1` shrinks every sweep (via
+//!   [`scaled`]/[`smoke`]) and drops warmup so CI can execute all bench
+//!   binaries in seconds.
+//! * **Machine-readable results** — each bench writes a
+//!   `BENCH_<name>.json` (config, cycles simulated, wall time,
+//!   utilization) through [`BenchJson`], into `IDMA_BENCH_OUT` (or the
+//!   working directory), so future PRs can track the perf trajectory.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use super::stats::Accumulator;
@@ -39,8 +49,29 @@ impl std::fmt::Display for BenchResult {
     }
 }
 
-/// Time `f` with `warmup` + `iters` iterations.
+/// True when `IDMA_BENCH_SMOKE` requests the fast CI configuration.
+pub fn smoke() -> bool {
+    smoke_from(std::env::var("IDMA_BENCH_SMOKE").ok().as_deref())
+}
+
+/// Pure core of [`smoke`]: set and not "0"/"" → smoke mode.
+pub fn smoke_from(v: Option<&str>) -> bool {
+    matches!(v, Some(s) if !s.is_empty() && s != "0")
+}
+
+/// Pick `full` normally, `small` in smoke mode — the standard way for a
+/// bench to shrink its sweep sizes for CI.
+pub fn scaled(full: u64, small: u64) -> u64 {
+    if smoke() {
+        small
+    } else {
+        full
+    }
+}
+
+/// Time `f` with `warmup` + `iters` iterations (smoke mode: 0 + 1).
 pub fn bench(name: &str, warmup: u64, iters: u64, mut f: impl FnMut()) -> BenchResult {
+    let (warmup, iters) = if smoke() { (0, 1) } else { (warmup, iters.max(1)) };
     for _ in 0..warmup {
         f();
     }
@@ -50,17 +81,117 @@ pub fn bench(name: &str, warmup: u64, iters: u64, mut f: impl FnMut()) -> BenchR
         f();
         acc.add(t0.elapsed().as_secs_f64());
     }
-    BenchResult {
-        name: name.to_string(),
-        mean_s: acc.mean(),
-        stddev_s: acc.stddev(),
-        iters,
-    }
+    BenchResult { name: name.to_string(), mean_s: acc.mean(), stddev_s: acc.stddev(), iters }
 }
 
 /// Print a standard bench header.
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Machine-readable bench output: accumulates key/value pairs and writes
+/// them as `BENCH_<name>.json` into `IDMA_BENCH_OUT` (default: the
+/// working directory). Values are rendered eagerly, so the builder holds
+/// no generics; non-finite floats become `null` to keep the JSON valid.
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    name: String,
+    fields: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    /// Start a record for the bench called `name`.
+    pub fn new(name: &str) -> Self {
+        let mut j = Self { name: name.to_string(), fields: Vec::new() };
+        j.fields.push(("bench".into(), render_str(name)));
+        j.fields.push(("smoke".into(), if smoke() { "true".into() } else { "false".into() }));
+        j
+    }
+
+    /// Add a float field.
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        let rendered = if v.is_finite() { format!("{v}") } else { "null".into() };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, v: u64) -> Self {
+        self.fields.push((key.to_string(), format!("{v}")));
+        self
+    }
+
+    /// Add a string field.
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.fields.push((key.to_string(), render_str(v)));
+        self
+    }
+
+    /// Add a timed [`BenchResult`] as `<key>_mean_s` / `<key>_stddev_s`.
+    pub fn result(self, key: &str, r: &BenchResult) -> Self {
+        let iters = r.iters;
+        self.num(&format!("{key}_mean_s"), r.mean_s)
+            .num(&format!("{key}_stddev_s"), r.stddev_s)
+            .int(&format!("{key}_iters"), iters)
+    }
+
+    /// Serialize to a JSON object string.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&render_str(k));
+            out.push(':');
+            out.push_str(v);
+        }
+        out.push('}');
+        out
+    }
+
+    /// Write `BENCH_<name>.json` and report the path. The output
+    /// directory is created if missing (cargo runs bench binaries with
+    /// the package root as CWD, so relative `IDMA_BENCH_OUT` paths may
+    /// not exist yet). Failures are printed, not fatal — a read-only
+    /// CWD must not fail a bench run.
+    pub fn write(&self) -> Option<PathBuf> {
+        let dir = PathBuf::from(std::env::var("IDMA_BENCH_OUT").unwrap_or_else(|_| ".".into()));
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            eprintln!("could not create {}: {e}", dir.display());
+            return None;
+        }
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        match std::fs::write(&path, self.to_json() + "\n") {
+            Ok(()) => {
+                println!("results: {}", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("could not write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn render_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 #[cfg(test)]
@@ -71,8 +202,39 @@ mod tests {
     fn bench_counts_iterations() {
         let mut n = 0u64;
         let r = bench("t", 2, 5, || n += 1);
-        assert_eq!(n, 7);
-        assert_eq!(r.iters, 5);
+        // In smoke mode (env-driven) warmup/iters shrink to 0/1.
+        if smoke() {
+            assert_eq!(n, 1);
+        } else {
+            assert_eq!(n, 7);
+            assert_eq!(r.iters, 5);
+        }
         assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn smoke_parsing() {
+        assert!(!smoke_from(None));
+        assert!(!smoke_from(Some("")));
+        assert!(!smoke_from(Some("0")));
+        assert!(smoke_from(Some("1")));
+        assert!(smoke_from(Some("yes")));
+    }
+
+    #[test]
+    fn json_renders_escaped_object() {
+        let j = BenchJson::new("unit").num("util", 0.5).int("cycles", 42).str("cfg", "a\"b");
+        let s = j.to_json();
+        assert!(s.starts_with('{') && s.ends_with('}'), "{s}");
+        assert!(s.contains("\"bench\":\"unit\""), "{s}");
+        assert!(s.contains("\"util\":0.5"), "{s}");
+        assert!(s.contains("\"cycles\":42"), "{s}");
+        assert!(s.contains("\"cfg\":\"a\\\"b\""), "{s}");
+    }
+
+    #[test]
+    fn json_nan_becomes_null() {
+        let s = BenchJson::new("u").num("bad", f64::NAN).to_json();
+        assert!(s.contains("\"bad\":null"), "{s}");
     }
 }

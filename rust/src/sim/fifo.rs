@@ -99,6 +99,19 @@ impl<T> Fifo<T> {
         self.popped
     }
 
+    /// Front element regardless of visibility (event-scheduling
+    /// inspection: what *will* become poppable).
+    pub fn front(&self) -> Option<&T> {
+        self.q.front().map(|(_, v)| v)
+    }
+
+    /// Cycle at which the front element becomes (or became) visible.
+    /// `None` when empty. Used by the event-driven scheduler to compute
+    /// the earliest cycle a consumer could act on this FIFO.
+    pub fn next_visible_at(&self) -> Option<Cycle> {
+        self.q.front().map(|(vis, _)| *vis)
+    }
+
     /// Iterate over stored elements front-to-back (debug/inspection).
     pub fn iter(&self) -> impl Iterator<Item = &T> {
         self.q.iter().map(|(_, v)| v)
@@ -147,6 +160,17 @@ mod tests {
         assert_eq!(f.pop(100), None);
         assert_eq!(f.total_pushed(), 5);
         assert_eq!(f.total_popped(), 5);
+    }
+
+    #[test]
+    fn front_and_visibility_inspection() {
+        let mut f = Fifo::new(4);
+        assert_eq!(f.front(), None);
+        assert_eq!(f.next_visible_at(), None);
+        assert!(f.push(10, 3u8));
+        assert_eq!(f.front(), Some(&3), "front ignores visibility");
+        assert_eq!(f.next_visible_at(), Some(11));
+        assert!(f.peek(10).is_none(), "peek still honours visibility");
     }
 
     #[test]

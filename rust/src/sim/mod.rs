@@ -6,14 +6,26 @@
 //! pushes become visible one cycle later, like a flip-flop boundary) so
 //! that pipeline latencies match the RTL contract the paper states
 //! (§4.3: two cycles from descriptor to first read request).
+//!
+//! On top of the per-cycle semantics sits the **event-driven core**:
+//! components additionally report the earliest future cycle at which
+//! they can make progress (`next_event`), and drivers use the
+//! [`Scheduler`] event wheel to jump the clock over provably idle
+//! cycles — bit- and cycle-identical to ticking every cycle, but orders
+//! of magnitude faster on the latency-hiding scenarios the paper cares
+//! about (§3.3, §3.4). The [`sweep`] module shards independent scenario
+//! configurations across OS threads.
 
 pub mod bench;
 mod fifo;
 mod rng;
+mod scheduler;
 pub mod stats;
+pub mod sweep;
 
 pub use fifo::Fifo;
 pub use rng::XorShift64;
+pub use scheduler::Scheduler;
 
 /// Simulation cycle count.
 pub type Cycle = u64;

@@ -1,0 +1,123 @@
+//! Event wheel for the cycle-skipping simulation core.
+//!
+//! Components report the earliest future cycle at which they can make
+//! progress (`Backend::next_event`, `IdmaEngine::next_event`,
+//! `Endpoint::next_event`); drivers push those candidates into a
+//! [`Scheduler`] and jump the simulated clock straight to the earliest
+//! pending event instead of spinning through provably idle cycles. The
+//! wheel is a binary min-heap keyed by [`Cycle`], deduplicating events
+//! that land on the same cycle and discarding stale (past) entries on
+//! pop — so over-approximating wake-ups is always safe, merely costing a
+//! no-op tick.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Cycle;
+
+/// Binary-heap event wheel keyed by simulation cycle.
+#[derive(Debug, Clone, Default)]
+pub struct Scheduler {
+    heap: BinaryHeap<Reverse<Cycle>>,
+    /// Events popped over the scheduler's lifetime (instrumentation: the
+    /// number of ticks an event-driven run actually executed).
+    popped: u64,
+}
+
+impl Scheduler {
+    /// Create an empty event wheel.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule a wake-up at cycle `at` (duplicates are cheap and
+    /// collapse on pop).
+    pub fn schedule(&mut self, at: Cycle) {
+        self.heap.push(Reverse(at));
+    }
+
+    /// Earliest scheduled cycle without consuming it.
+    pub fn peek(&self) -> Option<Cycle> {
+        self.heap.peek().map(|r| r.0)
+    }
+
+    /// Number of pending entries (duplicates included).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Events consumed so far (the tick count of an event-driven run).
+    pub fn events_fired(&self) -> u64 {
+        self.popped
+    }
+
+    /// Pop the earliest scheduled cycle strictly after `now`, discarding
+    /// stale entries (≤ `now`) and collapsing duplicates of the returned
+    /// cycle. `None` when nothing future is pending.
+    pub fn pop_after(&mut self, now: Cycle) -> Option<Cycle> {
+        while let Some(Reverse(at)) = self.heap.pop() {
+            if at > now {
+                while self.heap.peek() == Some(&Reverse(at)) {
+                    self.heap.pop();
+                }
+                self.popped += 1;
+                return Some(at);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_cycle_order() {
+        let mut s = Scheduler::new();
+        s.schedule(30);
+        s.schedule(10);
+        s.schedule(20);
+        assert_eq!(s.pop_after(0), Some(10));
+        assert_eq!(s.pop_after(10), Some(20));
+        assert_eq!(s.pop_after(20), Some(30));
+        assert_eq!(s.pop_after(30), None);
+        assert_eq!(s.events_fired(), 3);
+    }
+
+    #[test]
+    fn deduplicates_same_cycle() {
+        let mut s = Scheduler::new();
+        s.schedule(5);
+        s.schedule(5);
+        s.schedule(5);
+        s.schedule(9);
+        assert_eq!(s.pop_after(0), Some(5));
+        assert_eq!(s.pop_after(5), Some(9), "duplicate 5s collapsed");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn discards_stale_entries() {
+        let mut s = Scheduler::new();
+        s.schedule(3);
+        s.schedule(7);
+        assert_eq!(s.pop_after(5), Some(7), "cycle 3 is in the past");
+        assert_eq!(s.pop_after(7), None);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut s = Scheduler::new();
+        assert_eq!(s.peek(), None);
+        s.schedule(4);
+        assert_eq!(s.peek(), Some(4));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.pop_after(0), Some(4));
+    }
+}

@@ -1,0 +1,115 @@
+//! Multi-threaded scenario-sweep runner.
+//!
+//! The paper-scale evaluations (and the randomized property sweeps in
+//! `tests/integration.rs`) run hundreds of independent protocol /
+//! alignment / latency / NAx combinations. Each scenario is a pure
+//! function of its configuration, so they shard trivially across cores.
+//! This runner is std-only (`std::thread::scope` + an atomic work
+//! index): the environment is offline and the crate is dependency-free,
+//! so no rayon.
+//!
+//! Worker panics (e.g. a failing assertion inside a property case)
+//! propagate to the caller when the scope joins, so sweeps keep the
+//! fail-loudly semantics of a sequential loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `IDMA_SWEEP_THREADS` if set and
+/// positive, else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("IDMA_SWEEP_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over every item, sharded across `threads` workers, returning
+/// results in input order. `f` receives `(index, &item)` so scenarios
+/// can derive deterministic per-case seeds from their position.
+pub fn sweep<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(items.len());
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots.into_inner().unwrap().into_iter().map(|r| r.expect("sweep case completed")).collect()
+}
+
+/// Convenience: sweep with [`default_threads`] workers.
+pub fn sweep_default<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    sweep(items, default_threads(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order() {
+        let items: Vec<u64> = (0..97).collect();
+        let out = sweep(&items, 8, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * x
+        });
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_degenerates_to_map() {
+        let items = [3u32, 1, 4, 1, 5];
+        let out = sweep(&items, 1, |_, &x| x + 1);
+        assert_eq!(out, vec![4, 2, 5, 2, 6]);
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let items: [u8; 0] = [];
+        let out: Vec<u8> = sweep(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items_is_clamped() {
+        let items = [1u8, 2];
+        let out = sweep(&items, 64, |_, &x| x * 10);
+        assert_eq!(out, vec![10, 20]);
+    }
+
+    #[test]
+    #[should_panic(expected = "case 2 failed")]
+    fn worker_panics_propagate() {
+        let items = [0u8, 1, 2, 3];
+        let _ = sweep(&items, 2, |i, _| {
+            assert!(i != 2, "case 2 failed");
+            i
+        });
+    }
+}

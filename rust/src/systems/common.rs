@@ -1,13 +1,55 @@
 //! Shared system-simulation helpers.
+//!
+//! Two families of drivers:
+//! * **Event-driven** ([`run_backend`], [`run_engine`], [`pump_engine`]):
+//!   the default. After every tick the driver asks the component for its
+//!   earliest possible next event and jumps the clock there via the
+//!   [`Scheduler`] event wheel, skipping provably idle cycles (long
+//!   memory latencies, drained pipelines). Cycle- and bit-identical to
+//!   the per-cycle reference — the differential tests in
+//!   `tests/integration.rs` pin this down.
+//! * **Per-cycle reference** ([`run_backend_exact`],
+//!   [`run_engine_exact`]): the original `while busy { tick; now += 1 }`
+//!   loops, kept as the oracle for differential testing.
 
 use crate::backend::Backend;
 use crate::engine::IdmaEngine;
 use crate::mem::Endpoint;
-use crate::sim::{Cycle, Watchdog};
+use crate::sim::{Cycle, Scheduler, Watchdog};
 
-/// Drive a bare back-end until all submitted transfers retire. Returns
-/// the final cycle.
+/// Drive a bare back-end event-driven until all submitted transfers
+/// retire. Returns the final cycle (identical to [`run_backend_exact`]).
 pub fn run_backend(be: &mut Backend, mems: &mut [Endpoint], start: Cycle, max: u64) -> Cycle {
+    run_backend_instrumented(be, mems, start, max).0
+}
+
+/// [`run_backend`] that also reports how many ticks were executed —
+/// the event-core speedup is `final_cycle / ticks` (see the
+/// `event_core_speedup` bench).
+pub fn run_backend_instrumented(
+    be: &mut Backend,
+    mems: &mut [Endpoint],
+    start: Cycle,
+    max: u64,
+) -> (Cycle, u64) {
+    let mut wd = Watchdog::new(100_000);
+    let mut sched = Scheduler::new();
+    let mut now = start;
+    loop {
+        be.tick(now, mems);
+        if !be.busy() {
+            return (now, sched.events_fired() + 1);
+        }
+        assert!(!wd.check(now, be.fingerprint()), "backend deadlock at {now}");
+        sched.schedule(be.next_event(now, mems));
+        now = sched.pop_after(now).expect("event wheel empty while backend busy");
+        assert!(now < start + max, "backend did not drain within {max} cycles");
+    }
+}
+
+/// Per-cycle reference driver for a bare back-end (the differential
+/// oracle). Returns the final cycle.
+pub fn run_backend_exact(be: &mut Backend, mems: &mut [Endpoint], start: Cycle, max: u64) -> Cycle {
     let mut wd = Watchdog::new(100_000);
     for now in start..start + max {
         be.tick(now, mems);
@@ -19,8 +61,27 @@ pub fn run_backend(be: &mut Backend, mems: &mut [Endpoint], start: Cycle, max: u
     panic!("backend did not drain within {max} cycles");
 }
 
-/// Drive a composed engine until idle. Returns the final cycle.
+/// Drive a composed engine event-driven until idle. Returns the final
+/// cycle (identical to [`run_engine_exact`]).
 pub fn run_engine(e: &mut IdmaEngine, mems: &mut [Endpoint], start: Cycle, max: u64) -> Cycle {
+    let mut wd = Watchdog::new(100_000);
+    let mut sched = Scheduler::new();
+    let mut now = start;
+    loop {
+        e.tick(now, mems);
+        if !e.busy() {
+            return now;
+        }
+        assert!(!wd.check(now, e.fingerprint()), "engine deadlock at {now}");
+        sched.schedule(e.next_event(now, mems));
+        now = sched.pop_after(now).expect("event wheel empty while engine busy");
+        assert!(now < start + max, "engine did not drain within {max} cycles");
+    }
+}
+
+/// Per-cycle reference driver for a composed engine (the differential
+/// oracle). Returns the final cycle.
+pub fn run_engine_exact(e: &mut IdmaEngine, mems: &mut [Endpoint], start: Cycle, max: u64) -> Cycle {
     let mut wd = Watchdog::new(100_000);
     for now in start..start + max {
         e.tick(now, mems);
@@ -33,7 +94,10 @@ pub fn run_engine(e: &mut IdmaEngine, mems: &mut [Endpoint], start: Cycle, max: 
 }
 
 /// Submit a stream of jobs as fast as the engine accepts them, then
-/// drain. Returns `(first_cycle, last_cycle)`.
+/// drain. Event-driven: while a submission is pending the clock advances
+/// per cycle (acceptance is combinational in engine progress); once the
+/// last job is in, the engine's event horizon applies. Returns
+/// `(first_cycle, last_cycle)`.
 pub fn pump_engine(
     e: &mut IdmaEngine,
     mems: &mut [Endpoint],
@@ -44,6 +108,7 @@ pub fn pump_engine(
     let mut it = jobs.into_iter();
     let mut pending = it.next();
     let mut wd = Watchdog::new(100_000);
+    let mut sched = Scheduler::new();
     while pending.is_some() || e.busy() {
         if let Some(j) = pending.take() {
             if !e.submit(now, j.clone()) {
@@ -58,7 +123,9 @@ pub fn pump_engine(
             !wd.check(now, e.fingerprint() ^ pending.is_some() as u64),
             "engine deadlock at {now}"
         );
-        now += 1;
+        let next = if pending.is_some() { now + 1 } else { e.next_event(now, mems) };
+        sched.schedule(next);
+        now = sched.pop_after(now).unwrap_or(now + 1);
     }
     (0, now)
 }

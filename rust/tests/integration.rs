@@ -8,7 +8,11 @@ use idma::engine::EngineBuilder;
 use idma::mem::{Endpoint, ErrorInjector, MemModel};
 use idma::midend::NdJob;
 use idma::protocol::{BurstRule, ProtocolKind};
-use idma::sim::{Watchdog, XorShift64};
+use idma::sim::{sweep, Watchdog, XorShift64};
+use idma::systems::common::{
+    run_backend as drive_event, run_backend_exact as drive_exact, run_backend_instrumented,
+    run_engine as drive_engine_event, run_engine_exact as drive_engine_exact,
+};
 use idma::transfer::{ErrorAction, NdDim, NdTransfer, Transfer1D};
 
 fn run_backend(be: &mut Backend, mems: &mut [Endpoint], max: u64) {
@@ -23,13 +27,19 @@ fn run_backend(be: &mut Backend, mems: &mut [Endpoint], max: u64) {
 }
 
 /// Property: any 1D transfer between any protocol pair at any alignment
-/// is byte-exact (invariant 1 of DESIGN.md §5).
+/// is byte-exact (invariant 1 of DESIGN.md §5). The 60 cases are
+/// independent scenarios, sharded across cores by `sim::sweep`.
 #[test]
 fn prop_random_transfers_byte_exact() {
-    let mut rng = XorShift64::new(0xBEEF);
-    let protos =
-        [ProtocolKind::Axi4, ProtocolKind::Obi, ProtocolKind::Axi4Lite, ProtocolKind::TileLinkUh];
-    for case in 0..60 {
+    let cases: Vec<u64> = (0..60).collect();
+    sweep::sweep_default(&cases, |_, &case| {
+        let mut rng = XorShift64::new(0xBEEF ^ (case + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let protos = [
+            ProtocolKind::Axi4,
+            ProtocolKind::Obi,
+            ProtocolKind::Axi4Lite,
+            ProtocolKind::TileLinkUh,
+        ];
         let src_p = protos[rng.below(4) as usize];
         let dst_p = protos[rng.below(4) as usize];
         let dw = [2u64, 4, 8, 16][rng.below(4) as usize];
@@ -61,7 +71,7 @@ fn prop_random_transfers_byte_exact() {
             data,
             "case {case}: {src_p}→{dst_p} dw={dw} len={len} src={src:#x} dst={dst:#x}"
         );
-    }
+    });
 }
 
 /// Property: the legalizer only ever emits protocol-legal, contiguous,
@@ -495,6 +505,284 @@ fn abort_isolates_other_transfers() {
     assert!(c.iter().any(|x| x.aborted));
     assert!(c.iter().any(|x| !x.aborted));
     assert_eq!(mems[0].data.read_vec(0x9000, 300), good, "unrelated transfer intact");
+}
+
+// ---------------------------------------------------------------------
+// Event-driven core: differential tests against the per-cycle reference
+// ---------------------------------------------------------------------
+
+/// One randomized backend scenario for the differential sweep: builds
+/// the engine + memory twice from the same parameters and returns the
+/// per-run observables `(final_cycle, completions, dst_bytes)`.
+struct DiffCase {
+    transfers: Vec<Transfer1D>,
+    datas: Vec<Vec<u8>>,
+    dw: u64,
+    nax: usize,
+    latency: u64,
+    outstanding: usize,
+    ports: Vec<PortCfg>,
+    error_handling: bool,
+    inject: Option<ErrorInjector>,
+}
+
+impl DiffCase {
+    fn build(&self) -> (Backend, Vec<Endpoint>) {
+        let be = Backend::new(BackendCfg {
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            desc_depth: self.transfers.len().max(1),
+            error_handling: self.error_handling,
+            ports: self.ports.clone(),
+            ..Default::default()
+        })
+        .unwrap();
+        let mut mems = vec![Endpoint::new(MemModel::custom(
+            "m",
+            self.latency,
+            self.outstanding,
+            self.dw,
+        ))];
+        mems[0].inject = self.inject.clone();
+        for (t, data) in self.transfers.iter().zip(&self.datas) {
+            if !data.is_empty() {
+                mems[0].data.write(t.src, data);
+            }
+        }
+        (be, mems)
+    }
+
+    /// Run with either driver; all transfers are submitted at cycle 0
+    /// (desc_depth is sized for it) so both runs see identical inputs.
+    fn run(&self, event_driven: bool) -> (u64, Vec<idma::backend::Completion>, Vec<Vec<u8>>) {
+        let (mut be, mut mems) = self.build();
+        for t in &self.transfers {
+            assert!(be.try_submit(0, *t));
+        }
+        let end = if event_driven {
+            drive_event(&mut be, &mut mems, 0, 20_000_000)
+        } else {
+            drive_exact(&mut be, &mut mems, 0, 20_000_000)
+        };
+        let comps = be.take_completions();
+        let dsts = self
+            .transfers
+            .iter()
+            .map(|t| mems[0].data.read_vec(t.dst, t.len as usize))
+            .collect();
+        (end, comps, dsts)
+    }
+
+    fn assert_equivalent(&self, label: &str) {
+        let (end_a, comp_a, dst_a) = self.run(false);
+        let (end_b, comp_b, dst_b) = self.run(true);
+        assert_eq!(end_a, end_b, "{label}: final cycle differs (exact {end_a} vs event {end_b})");
+        assert_eq!(comp_a, comp_b, "{label}: completion records differ");
+        assert_eq!(dst_a, dst_b, "{label}: destination bytes differ");
+    }
+}
+
+/// The tentpole contract: event-driven (cycle-skipping) execution is
+/// bit- and cycle-identical to the per-cycle reference across random
+/// protocol / width / NAx / latency / alignment / burst-cap
+/// combinations, including Init-source pattern generation. Independent
+/// cases are sharded across cores by `sim::sweep`.
+#[test]
+fn prop_event_driven_matches_per_cycle() {
+    let cases: Vec<u64> = (0..40).collect();
+    sweep::sweep_default(&cases, |_, &case| {
+        let mut rng = XorShift64::new(0xE7E47 ^ (case + 1).wrapping_mul(0x2545_F491_4F6C_DD1D));
+        let protos = [
+            ProtocolKind::Axi4,
+            ProtocolKind::Obi,
+            ProtocolKind::Axi4Lite,
+            ProtocolKind::TileLinkUh,
+        ];
+        let src_p = protos[rng.below(4) as usize];
+        let dst_p = protos[rng.below(4) as usize];
+        let dw = [2u64, 4, 8, 16][rng.below(4) as usize];
+        let nax = 1 + rng.below(8) as usize;
+        let latency = 1 + rng.below(300);
+        let outstanding = 1 + rng.below(24) as usize;
+        let n_jobs = 1 + rng.below(3);
+        let max_burst = if rng.chance(0.5) { Some(16 + rng.below(240)) } else { None };
+        let mut transfers = Vec::new();
+        let mut datas = Vec::new();
+        for j in 0..n_jobs {
+            let len = 1 + rng.below(2500);
+            let dst = 0x200_000 + j * 0x10_000 + rng.below(32);
+            if rng.chance(0.2) {
+                use idma::transfer::InitPattern;
+                let mut t =
+                    Transfer1D::init(j + 1, dst, len, InitPattern::Pseudorandom(case ^ j), dst_p);
+                t.opts.max_burst = max_burst;
+                transfers.push(t);
+                datas.push(Vec::new());
+            } else {
+                let src = 0x1000 + j * 0x10_000 + rng.below(32);
+                let mut t = Transfer1D::copy(j + 1, src, dst, len, src_p);
+                t.dst_protocol = dst_p;
+                t.opts.max_burst = max_burst;
+                let mut data = vec![0u8; len as usize];
+                rng.fill(&mut data);
+                transfers.push(t);
+                datas.push(data);
+            }
+        }
+        let case_cfg = DiffCase {
+            transfers,
+            datas,
+            dw,
+            nax,
+            latency,
+            outstanding,
+            ports: vec![
+                PortCfg { protocol: src_p, mem: 0 },
+                PortCfg { protocol: dst_p, mem: 0 },
+            ],
+            error_handling: false,
+            inject: None,
+        };
+        case_cfg.assert_equivalent(&format!(
+            "case {case}: {src_p}→{dst_p} dw={dw} nax={nax} latency={latency}"
+        ));
+        // Copies must also be byte-exact against the source payload.
+        let (_, _, dsts) = case_cfg.run(true);
+        for ((t, data), got) in case_cfg.transfers.iter().zip(&case_cfg.datas).zip(&dsts) {
+            if !data.is_empty() {
+                assert_eq!(got, data, "case {case}: transfer {} not byte-exact", t.id);
+            }
+        }
+    });
+}
+
+/// Differential under error handling: transient faults with Replay,
+/// permanent faults with Continue and Abort all retire identically
+/// (cycle and byte) in both execution modes.
+#[test]
+fn prop_event_driven_matches_per_cycle_with_faults() {
+    let cases: Vec<u64> = (0..12).collect();
+    sweep::sweep_default(&cases, |_, &case| {
+        let mut rng = XorShift64::new(0xFA17 ^ (case + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let len = 256 + rng.below(1500);
+        let latency = 1 + rng.below(120);
+        let action = [ErrorAction::Replay, ErrorAction::Continue, ErrorAction::Abort]
+            [(case % 3) as usize];
+        let fault_at = 0x1000 + rng.below(len);
+        let inject = if action == ErrorAction::Replay {
+            ErrorInjector::transient(fault_at, fault_at + 1, 1 + rng.below(3) as u32)
+        } else {
+            ErrorInjector { ranges: vec![(fault_at, fault_at + 1)], ..Default::default() }
+        };
+        let mut t = Transfer1D::copy(1, 0x1000, 0x9000, len, ProtocolKind::Axi4);
+        t.opts.on_error = action;
+        t.opts.max_burst = Some(64);
+        let mut data = vec![0u8; len as usize];
+        rng.fill(&mut data);
+        let case_cfg = DiffCase {
+            transfers: vec![t],
+            datas: vec![data],
+            dw: 4,
+            nax: 1 + rng.below(6) as usize,
+            latency,
+            outstanding: 16,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            error_handling: true,
+            inject: Some(inject),
+        };
+        let label = format!("fault case {case} ({action:?}) latency={latency} len={len}");
+        let (end_a, comp_a, dst_a) = case_cfg.run(false);
+        let (end_b, comp_b, dst_b) = case_cfg.run(true);
+        assert_eq!(end_a, end_b, "{label}: final cycle differs");
+        assert_eq!(comp_a, comp_b, "{label}: completions differ");
+        assert_eq!(dst_a, dst_b, "{label}: destination bytes differ");
+        if action == ErrorAction::Replay {
+            assert_eq!(dst_b[0], case_cfg.datas[0], "{label}: replay must restore exactness");
+        }
+    });
+}
+
+/// Differential for the composed engine: ND jobs through the tensor
+/// mid-end complete at identical cycles with identical destination
+/// bytes in both execution modes.
+#[test]
+fn event_driven_matches_per_cycle_engine() {
+    let mut rng = XorShift64::new(0xE2E2);
+    for case in 0..10u64 {
+        let inner_len = 1 + rng.below(96);
+        let reps = 1 + rng.below(6);
+        let latency = 1 + rng.below(150);
+        let src_stride = inner_len as i64 + rng.below(48) as i64;
+        let total = (inner_len * reps) as usize;
+        let mut blob = vec![0u8; 1 << 14];
+        rng.fill(&mut blob);
+        let inner = Transfer1D::copy(0, 0x100, 0x8000, inner_len, ProtocolKind::Axi4);
+        let nd = NdTransfer::d2(inner, src_stride, inner_len as i64, reps);
+        let mut run = |event_driven: bool| {
+            let mut e = EngineBuilder::new(32, 8, 4).tensor(2).build().unwrap();
+            let mut mems = vec![Endpoint::new(MemModel::custom("m", latency, 8, 8))];
+            mems[0].data.write(0, &blob);
+            assert!(e.submit(0, NdJob::new(case + 1, nd.clone())));
+            let end = if event_driven {
+                drive_engine_event(&mut e, &mut mems, 0, 5_000_000)
+            } else {
+                drive_engine_exact(&mut e, &mut mems, 0, 5_000_000)
+            };
+            (end, e.take_done(), mems[0].data.read_vec(0x8000, total))
+        };
+        let (end_a, done_a, out_a) = run(false);
+        let (end_b, done_b, out_b) = run(true);
+        assert_eq!(end_a, end_b, "case {case}: engine final cycle differs");
+        assert_eq!(done_a, done_b, "case {case}: job completions differ");
+        assert_eq!(out_a, out_b, "case {case}: destination differs");
+    }
+}
+
+/// The point of the event core: a latency-bound copy (deep memory
+/// latency, shallow NAx, small bursts) executes a small fraction of the
+/// simulated cycles as actual ticks — the wall-clock speedup the
+/// `event_core_speedup` bench demonstrates, asserted here via the
+/// deterministic tick count.
+#[test]
+fn event_core_skips_idle_cycles() {
+    let len = 128 * 1024u64;
+    let case_cfg = {
+        let mut t = Transfer1D::copy(1, 0, 0x100_000, len, ProtocolKind::Axi4);
+        t.opts.max_burst = Some(64);
+        let mut rng = XorShift64::new(0x51EE9);
+        let mut data = vec![0u8; len as usize];
+        rng.fill(&mut data);
+        DiffCase {
+            transfers: vec![t],
+            datas: vec![data],
+            dw: 8,
+            nax: 2,
+            latency: 250,
+            outstanding: 8,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            error_handling: false,
+            inject: None,
+        }
+    };
+    // Per-cycle reference.
+    let (mut be_a, mut mems_a) = case_cfg.build();
+    assert!(be_a.try_submit(0, case_cfg.transfers[0]));
+    let end_a = drive_exact(&mut be_a, &mut mems_a, 0, 20_000_000);
+    // Event-driven with tick instrumentation.
+    let (mut be_b, mut mems_b) = case_cfg.build();
+    assert!(be_b.try_submit(0, case_cfg.transfers[0]));
+    let (end_b, ticks) = run_backend_instrumented(&mut be_b, &mut mems_b, 0, 20_000_000);
+    assert_eq!(end_a, end_b, "event-driven run must be cycle-exact");
+    assert_eq!(
+        mems_b[0].data.read_vec(0x100_000, len as usize),
+        case_cfg.datas[0],
+        "byte-exact"
+    );
+    assert!(
+        ticks * 4 <= end_a,
+        "event core should skip ≥ 3/4 of the {end_a} simulated cycles, executed {ticks} ticks"
+    );
 }
 
 /// Regression: an Init transfer queued behind an in-flight copy must not
