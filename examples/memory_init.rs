@@ -7,15 +7,11 @@
 use idma::backend::{Backend, BackendCfg, BlockTranspose};
 use idma::mem::{Endpoint, MemModel};
 use idma::protocol::ProtocolKind;
+use idma::systems::common::run_backend;
 use idma::transfer::{InitPattern, Transfer1D};
 
 fn run(be: &mut Backend, mems: &mut [Endpoint]) {
-    let mut now = 0;
-    while be.busy() {
-        be.tick(now, mems);
-        now += 1;
-        assert!(now < 100_000);
-    }
+    run_backend(be, mems, 0, 100_000);
 }
 
 fn main() {

@@ -1,0 +1,72 @@
+//! Mixed control planes on one engine (paper §2.1 + Fig. 1): a
+//! register-file front-end, a descriptor fetcher and an instruction
+//! decoder — each programmed through its *native* surface — feed the
+//! same back-end through the round-robin arbiter inside
+//! [`idma::system::IdmaSystem`]. Completions route back to the
+//! front-end that issued them, and the whole run is event-driven.
+//!
+//! Run: `cargo run --release --example mixed_frontends`
+
+use idma::engine::EngineBuilder;
+use idma::frontend::{
+    decode, encode, regs, write_descriptor, DescFlags, DescFrontend, Frontend, InstFrontend,
+    Opcode, RegFrontend, RegVariant,
+};
+use idma::mem::{Endpoint, MemModel};
+use idma::protocol::ProtocolKind;
+use idma::system::IdmaSystem;
+
+fn main() {
+    // One engine (64-bit AXI4, 8 outstanding) behind three front-ends.
+    let engine = EngineBuilder::new(32, 8, 8).build().unwrap();
+    let mut sys = IdmaSystem::new(engine, vec![Endpoint::new(MemModel::sram(8))]);
+    let reg = sys.add_frontend(Box::new(RegFrontend::new(RegVariant::R32, 0)));
+    let desc = sys.add_frontend(Box::new(DescFrontend::new(6)));
+    let inst = sys.add_frontend(Box::new(InstFrontend::new(0)));
+
+    // Source payloads.
+    for (base, fill) in [(0x1000u64, 0x11u8), (0x2000, 0x22), (0x3000, 0x33)] {
+        sys.mems[0].data.write(base, &[fill; 512]);
+    }
+
+    // reg_32: memory-mapped register writes, launch via TRANSFER_ID read.
+    let fe = sys.frontend_mut::<RegFrontend>(reg);
+    fe.write_reg(0, regs::SRC, 0x1000);
+    fe.write_reg(0, regs::DST, 0x8000);
+    fe.write_reg(0, regs::LEN, 512);
+    let id = fe.read_reg(0, regs::TRANSFER_ID);
+    println!("reg_32   launched transfer {id} with {} register ops", fe.reg_writes + 1);
+
+    // desc_64: one descriptor in the control-plane SPM, single-write launch.
+    write_descriptor(
+        &mut sys.ctrl_mem,
+        0x40,
+        0,
+        0x2000,
+        0x9000,
+        512,
+        DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
+    );
+    assert!(sys.frontend_mut::<DescFrontend>(desc).launch_chain(0, 0x40));
+    println!("desc_64  launched a 1-descriptor chain with a single store");
+
+    // inst_64: dmsrc / dmdst / dmcpy — three instructions.
+    let fe = sys.frontend_mut::<InstFrontend>(inst);
+    fe.execute(0, decode(encode(Opcode::DmSrc, 0, 1, 2)).unwrap(), 0x3000, 0);
+    fe.execute(1, decode(encode(Opcode::DmDst, 0, 1, 2)).unwrap(), 0xA000, 0);
+    let id = fe.execute(2, decode(encode(Opcode::DmCpy, 5, 1, 2)).unwrap(), 512, 0).unwrap();
+    println!("inst_64  launched transfer {id} in three instructions");
+
+    // Event-driven drain through the arbiter; completions fan back.
+    let end = sys.run_until_idle();
+    println!("\nall three jobs retired by cycle {end} ({} ticks executed):", sys.ticks());
+    for d in sys.take_done() {
+        let fe = d.frontend.expect("front-end jobs carry their source");
+        println!("  front-end {fe} ({}) job {} done at cycle {}", sys.frontend_dyn(fe).name(), d.job, d.at);
+    }
+    for (i, dst, fill) in [(reg, 0x8000u64, 0x11u8), (desc, 0x9000, 0x22), (inst, 0xA000, 0x33)] {
+        assert_eq!(sys.frontend_dyn(i).status(), 1, "front-end {i} completion observed");
+        assert_eq!(sys.mems[0].data.read_vec(dst, 512), vec![fill; 512]);
+    }
+    println!("byte-exact on all three destinations — mixed control planes compose.");
+}

@@ -10,43 +10,41 @@ use idma::mem::{Endpoint, MemModel};
 use idma::midend::NdJob;
 use idma::model::{synthesize_area, synthesize_fmax_ghz};
 use idma::protocol::ProtocolKind;
+use idma::system::IdmaSystem;
 use idma::transfer::{InitPattern, NdTransfer, Transfer1D};
 
 fn main() {
     // 1. An engine from the three §3.6 wrapper parameters:
-    //    AW=32 bits, DW=8 bytes, NAx=8, with a 3D tensor mid-end.
-    let mut engine = EngineBuilder::new(32, 8, 8).tensor(3).build().unwrap();
-
-    // 2. A memory system: SRAM-class endpoint (3 cycles, 8 outstanding).
-    let mut mems = [Endpoint::new(MemModel::sram(8))];
+    //    AW=32 bits, DW=8 bytes, NAx=8, with a 3D tensor mid-end —
+    //    wrapped in the system facade with an SRAM-class endpoint
+    //    (3 cycles, 8 outstanding).
+    let engine = EngineBuilder::new(32, 8, 8).tensor(3).build().unwrap();
+    let mut sys = IdmaSystem::new(engine, vec![Endpoint::new(MemModel::sram(8))]);
     let payload: Vec<u8> = (0..=255).collect();
-    mems[0].data.write(0x1000, &payload);
+    sys.mems[0].data.write(0x1000, &payload);
 
-    // 3. A 2D transfer: 4 rows of 64 B, source stride 256 B.
+    // 2. A 2D transfer: 4 rows of 64 B, source stride 256 B.
     let inner = Transfer1D::copy(0, 0x1000, 0x8000, 64, ProtocolKind::Axi4);
     let nd = NdTransfer::d2(inner, 256, 64, 4);
-    assert!(engine.submit(0, NdJob::new(1, nd)));
+    assert!(sys.submit(NdJob::new(1, nd)));
 
-    // 4. A memory-init transfer right behind it.
+    // 3. A memory-init transfer right behind it (retry on back pressure).
     let init = Transfer1D::init(0, 0x9000, 128, InitPattern::Incrementing(0), ProtocolKind::Axi4);
-    let mut now = 0u64;
-    loop {
-        engine.tick(now, &mut mems);
-        now += 1;
-        if engine.submit(now, NdJob::new(2, NdTransfer::d1(init))) {
-            break;
-        }
+    while !sys.submit(NdJob::new(2, NdTransfer::d1(init))) {
+        sys.step();
     }
-    while engine.busy() {
-        engine.tick(now, &mut mems);
-        now += 1;
-    }
-    for d in engine.take_done() {
+
+    // 4. Drain event-driven: the facade jumps over provably idle cycles.
+    let end = sys.run_until_idle();
+    for d in sys.take_done() {
         println!("job {} done at cycle {} (errors: {})", d.job, d.at, d.errors);
     }
-    assert_eq!(mems[0].data.read_vec(0x8000, 64), payload[0..64].to_vec());
-    assert_eq!(mems[0].data.read_u8(0x9000 + 77), 77);
-    println!("2D copy + memory init complete in {now} cycles — byte exact.");
+    assert_eq!(sys.mems[0].data.read_vec(0x8000, 64), payload[0..64].to_vec());
+    assert_eq!(sys.mems[0].data.read_u8(0x9000 + 77), 77);
+    println!(
+        "2D copy + memory init complete in {end} cycles ({} ticks executed) — byte exact.",
+        sys.ticks()
+    );
 
     // 5. Characterize the configuration (the §4 models).
     let cfg = BackendCfg {

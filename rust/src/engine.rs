@@ -238,12 +238,21 @@ impl IdmaEngine {
     /// earliest cycle after `now` at which the engine could progress.
     /// While the mid-end chain is active the engine advances per cycle
     /// (chain hand-offs are combinational, one per boundary per cycle);
-    /// once the chain has drained, the back-end's event horizon applies.
+    /// once the chain has drained, the back-end's event horizon applies,
+    /// merged with any armed mid-end's timed wake hint (an `rt_3D`
+    /// waiting out its period is idle by `busy()` but will autonomously
+    /// launch at a known future cycle).
     pub fn next_event(&self, now: Cycle, mems: &[Endpoint]) -> Cycle {
         if !self.chain_idle() {
             return now + 1;
         }
-        self.backend.next_event(now, mems)
+        let mut at = self.backend.next_event(now, mems);
+        for m in self.mids.iter() {
+            if let Some(e) = m.next_event(now) {
+                at = at.min(e.max(now + 1));
+            }
+        }
+        at
     }
 }
 

@@ -186,6 +186,67 @@ impl DescFrontend {
     }
 }
 
+impl super::Frontend for DescFrontend {
+    fn name(&self) -> &'static str {
+        "desc_64"
+    }
+
+    fn tick(&mut self, now: Cycle, mem: &SparseMemory) {
+        DescFrontend::tick(self, now, mem);
+    }
+
+    fn pop(&mut self, now: Cycle) -> Option<NdJob> {
+        self.out.pop(now)
+    }
+
+    fn peek(&self, now: Cycle) -> Option<&NdJob> {
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        DescFrontend::busy(self)
+    }
+
+    fn notify_complete(&mut self, id: u64) {
+        DescFrontend::notify_complete(self, id);
+    }
+
+    fn status(&self) -> u64 {
+        self.last_completed
+    }
+
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let mut at = Cycle::MAX;
+        // Emitted jobs become poppable when their FIFO slot is visible.
+        if let Some(v) = self.out.next_visible_at() {
+            at = at.min(v.max(now + 1));
+        }
+        match &self.state {
+            // A launch-queue entry is consumed the tick it is visible.
+            State::Idle => {
+                if let Some(v) = self.queue.next_visible_at() {
+                    at = at.min(v.max(now + 1));
+                }
+            }
+            // The manager port delivers the descriptor at `done_at` —
+            // every tick before that is provably a no-op, which is what
+            // makes descriptor chains cycle-skippable.
+            State::Fetching { done_at, .. } => at = at.min((*done_at).max(now + 1)),
+            // Emission retries every cycle until the output FIFO drains.
+            State::Emitting { .. } => at = at.min(now + 1),
+        }
+        (at != Cycle::MAX).then_some(at)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -201,6 +201,44 @@ impl InstFrontend {
     }
 }
 
+impl super::Frontend for InstFrontend {
+    fn name(&self) -> &'static str {
+        "inst_64"
+    }
+
+    fn pop(&mut self, now: Cycle) -> Option<NdJob> {
+        self.out.pop(now)
+    }
+
+    fn peek(&self, now: Cycle) -> Option<&NdJob> {
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.out.is_empty()
+    }
+
+    fn notify_complete(&mut self, id: u64) {
+        InstFrontend::notify_complete(self, id);
+    }
+
+    fn status(&self) -> u64 {
+        self.last_completed
+    }
+
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        self.out.next_visible_at().map(|v| v.max(now + 1))
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

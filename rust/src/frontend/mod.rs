@@ -10,11 +10,76 @@
 //! Front-ends emit [`NdJob`]s into the mid-end chain and observe
 //! completions to update their status interface (the `status` register /
 //! completed-descriptor writeback / `dmstat` value).
+//!
+//! All three implement the [`Frontend`] trait — the uniform control-plane
+//! surface the paper's Fig. 1 composition implies: each is *programmed*
+//! through its native interface (register writes, a descriptor-chain
+//! head pointer, custom instructions) but *drained* identically. An
+//! [`crate::system::IdmaSystem`] stores heterogeneous front-ends as
+//! `Box<dyn Frontend>` and drives the whole frontend→engine path
+//! event-driven via the [`Frontend::next_event`] wake hints.
 
 mod desc;
 mod inst;
 mod reg;
 
 pub use desc::{write_descriptor, DescFlags, DescFrontend, DESC_SIZE};
-pub use inst::{decode, encode, Decoded, InstFrontend, Opcode};
-pub use reg::{RegFrontend, RegVariant};
+pub use inst::{decode, encode, Decoded, InstFrontend, Opcode, CUSTOM0};
+pub use reg::{regs, RegFrontend, RegVariant};
+
+use std::any::Any;
+
+use crate::mem::SparseMemory;
+use crate::midend::NdJob;
+use crate::sim::Cycle;
+
+/// The uniform front-end surface (paper §2.1): every front-end, however
+/// it is programmed, emits [`NdJob`]s towards the mid-end chain and
+/// observes completions.
+///
+/// Contract for the event-driven core: [`Frontend::next_event`] must
+/// return `Some(_)` whenever [`Frontend::busy`] is true, and the
+/// returned cycle must never be *later* than the first cycle at which a
+/// per-cycle execution of `tick`/`pop` would change state — waking early
+/// is always safe (a no-op tick, then re-ask), waking late breaks the
+/// cycle-exactness the differential tests pin down.
+pub trait Frontend: Any {
+    /// Table 1 identifier of this front-end.
+    fn name(&self) -> &'static str;
+
+    /// Advance the control-plane state machine one cycle. `mem` is the
+    /// memory the front-end's manager port fetches from (the descriptor
+    /// SPM for `desc_64`); register- and instruction-based front-ends
+    /// have no manager port and ignore it.
+    fn tick(&mut self, _now: Cycle, _mem: &SparseMemory) {}
+
+    /// Pop the next job towards the mid-end chain / engine.
+    fn pop(&mut self, now: Cycle) -> Option<NdJob>;
+
+    /// Peek the next visible job without consuming it.
+    fn peek(&self, now: Cycle) -> Option<&NdJob>;
+
+    /// True while jobs are queued, fetched, or awaiting drain.
+    fn busy(&self) -> bool;
+
+    /// Engine callback: front-end job `id` completed.
+    fn notify_complete(&mut self, id: u64);
+
+    /// Status surface value (the `status` register / `dmstat`): the
+    /// last-completed transfer ID.
+    fn status(&self) -> u64;
+
+    /// Conservative wake hint mirroring [`crate::backend::Backend::next_event`]:
+    /// the earliest cycle strictly after `now` at which this front-end
+    /// could make progress on its own (finish a fetch, make a queued job
+    /// visible). `None` when fully passive — only external programming
+    /// can wake it.
+    fn next_event(&self, now: Cycle) -> Option<Cycle>;
+
+    /// Downcasting access so a type-erased front-end can still be
+    /// programmed through its native surface.
+    fn as_any(&self) -> &dyn Any;
+
+    /// Mutable downcasting access (see [`Frontend::as_any`]).
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}

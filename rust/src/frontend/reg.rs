@@ -56,7 +56,7 @@ impl RegVariant {
     /// transfer (addresses + length + per-dimension stride/rep fields).
     /// Addresses above 32 bits cost two writes on 32-bit layouts.
     pub fn writes_for(&self, n_dims: u32) -> u64 {
-        let addr_words = if self.word_bits == 32 { 1 } else { 1 };
+        let addr_words = if self.word_bits == 32 { 2 } else { 1 };
         // src + dst + len
         let base = 2 * addr_words + 1;
         // each extra dimension: src_stride + dst_stride + num_repetitions
@@ -262,6 +262,44 @@ impl RegFrontend {
     }
 }
 
+impl super::Frontend for RegFrontend {
+    fn name(&self) -> &'static str {
+        self.variant.name()
+    }
+
+    fn pop(&mut self, now: Cycle) -> Option<NdJob> {
+        self.out.pop(now)
+    }
+
+    fn peek(&self, now: Cycle) -> Option<&NdJob> {
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.out.is_empty()
+    }
+
+    fn notify_complete(&mut self, id: u64) {
+        RegFrontend::notify_complete(self, id);
+    }
+
+    fn status(&self) -> u64 {
+        self.last_completed
+    }
+
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        self.out.next_visible_at().map(|v| v.max(now + 1))
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +371,27 @@ mod tests {
         let mut fe64 = RegFrontend::new(RegVariant::R64_2D, 0);
         let (_, ops64) = fe64.launch_nd(0, &nd);
         assert_eq!(ops64, 7);
+    }
+
+    #[test]
+    fn writes_for_counts_address_words_per_layout() {
+        // 32-bit layouts: 64-bit src/dst addresses cost two register
+        // writes each → 2·2 + 1 (len) = 5 for a 1D transfer; 64-bit
+        // layouts take one write per address → 2 + 1 = 3.
+        assert_eq!(RegVariant::R32.writes_for(1), 5);
+        assert_eq!(RegVariant::R64.writes_for(1), 3);
+        // Each extra dimension adds src_stride + dst_stride + reps.
+        assert_eq!(RegVariant::R32_2D.writes_for(2), 8);
+        assert_eq!(RegVariant::R64_2D.writes_for(2), 6);
+        assert_eq!(RegVariant::R32_3D.writes_for(3), 11);
+        // The 32-bit layout is strictly costlier at every dimensionality.
+        for n in 1..=3 {
+            assert_eq!(
+                RegVariant::R32.writes_for(n),
+                RegVariant::R64.writes_for(n) + 2,
+                "two extra high-half writes on 32-bit layouts"
+            );
+        }
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod mem;
 pub mod protocol;
 pub mod runtime;
 pub mod sim;
+pub mod system;
 pub mod systems;
 pub mod transfer;
 pub mod workloads;

@@ -25,7 +25,7 @@ mod tensor;
 pub use arbiter::RoundRobinArbiter;
 pub use mp_dist::{DistSide, MpDist};
 pub use mp_split::{MpSplit, SplitSide};
-pub use rt3d::{Rt3D, Rt3DConfig};
+pub use rt3d::{Rt3D, Rt3DConfig, RT_JOB_BIT};
 pub use tensor::{Tensor2D, TensorNd};
 
 use crate::sim::Cycle;
@@ -87,5 +87,20 @@ pub trait MidEnd {
     /// one per mid-end; zero for the zero-latency tensor_ND config).
     fn added_latency(&self) -> u64 {
         1
+    }
+
+    /// Conservative wake hint for the event-driven core: the earliest
+    /// cycle strictly after `now` at which this mid-end could make
+    /// progress *on its own*, or `None` when it is fully passive until
+    /// new input arrives. The default covers pipeline-style mid-ends:
+    /// advance per cycle while busy. Autonomous mid-ends with timed
+    /// behaviour ([`Rt3D`]) override it so armed-but-waiting periods are
+    /// cycle-skippable.
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if self.busy() {
+            Some(now + 1)
+        } else {
+            None
+        }
     }
 }

@@ -137,6 +137,23 @@ impl MidEnd for Rt3D {
     fn busy(&self) -> bool {
         !self.bypass.is_empty() || !self.out.is_empty()
     }
+
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if self.busy() {
+            return Some(now + 1);
+        }
+        // Armed and launches remaining: the next tick that changes state
+        // is the launch cycle — everything in between is a provable
+        // no-op, so a whole PVCT waiting period is one clock jump.
+        if !self.enabled {
+            return None;
+        }
+        let cfg = self.cfg.as_ref()?;
+        if cfg.count.is_some_and(|c| self.launched >= c) {
+            return None;
+        }
+        Some(self.next_launch.max(now + 1))
+    }
 }
 
 #[cfg(test)]
@@ -197,6 +214,23 @@ mod tests {
             rt.tick(now);
             assert!(rt.pop(now).is_none());
         }
+    }
+
+    #[test]
+    fn wake_hint_points_at_next_launch() {
+        let mut rt = Rt3D::new();
+        assert_eq!(rt.next_event(0), None, "unprogrammed rt_3D is passive");
+        rt.program(0, Rt3DConfig { template: template(), period: 100, count: Some(2), phase: 40 });
+        assert_eq!(rt.next_event(0), Some(40));
+        assert_eq!(rt.next_event(39), Some(40));
+        // Skipping straight to the hint launches exactly on schedule.
+        rt.tick(40);
+        assert!(rt.next_event(40).is_some(), "queued launch keeps it busy");
+        assert!(rt.pop(41).is_some());
+        assert_eq!(rt.next_event(41), Some(140));
+        rt.tick(140);
+        assert!(rt.pop(141).is_some());
+        assert_eq!(rt.next_event(141), None, "count exhausted → passive");
     }
 
     #[test]

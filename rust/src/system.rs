@@ -1,0 +1,545 @@
+//! The **system facade**: one object owning front-ends, the composed
+//! engine and the memory endpoints, driven event-first.
+//!
+//! The paper's composition claim (Fig. 1, §2) is that front-ends,
+//! mid-ends and back-ends compose independently. [`IdmaSystem`] is the
+//! software form of that claim for the *control plane*: any mix of
+//! [`Frontend`] implementations — per-core register files, a descriptor
+//! fetcher, an instruction decoder — funnels through the round-robin
+//! arbiter into one [`IdmaEngine`], and completions fan back to the
+//! front-end that issued the job.
+//!
+//! Operation is **submit-free**: front-ends are programmed through their
+//! *native* surfaces (register writes, a chain-head store, custom
+//! instructions) obtained via [`IdmaSystem::frontend_mut`]; the facade
+//! only moves the resulting jobs. Two drivers are exposed:
+//!
+//! * [`IdmaSystem::run_until_idle`] — the default, built on
+//!   [`Scheduler`]: after every tick the facade merges the wake hints of
+//!   all front-ends ([`Frontend::next_event`]), armed mid-ends
+//!   ([`crate::midend::MidEnd::next_event`]) and the engine, and jumps
+//!   the clock over provably idle cycles (descriptor fetches, memory
+//!   latency, rt_3D waiting periods).
+//! * [`IdmaSystem::run_until_idle_exact`] — the per-cycle reference, the
+//!   differential oracle: bit- and cycle-identical results, pinned down
+//!   by `tests/integration.rs`.
+//!
+//! Job-ID namespacing: front-end job IDs are local to each front-end, so
+//! the facade tags every job with its source index (bits 48..) before it
+//! enters the engine and strips the tag when routing the completion
+//! back. Autonomous `rt_3D` launches (bit 63 set) and jobs submitted
+//! directly to the engine stay untagged.
+
+use crate::engine::IdmaEngine;
+use crate::frontend::Frontend;
+use crate::mem::{Endpoint, SparseMemory};
+use crate::midend::{MidEnd, NdJob, RoundRobinArbiter, RT_JOB_BIT};
+use crate::sim::{Cycle, Scheduler, Watchdog};
+
+/// Bit position where the facade stores the 1-based front-end index in a
+/// job ID travelling the engine.
+const FE_TAG_SHIFT: u32 = 48;
+
+/// Mask recovering the front-end-local job ID from a tagged ID.
+const FE_JOB_MASK: u64 = (1 << FE_TAG_SHIFT) - 1;
+
+/// Hard cap on cycles a single drive call may simulate.
+const RUNAWAY: u64 = 100_000_000;
+
+/// A completed job, as observed at the system level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SystemDone {
+    /// Index of the front-end that issued the job; `None` for jobs
+    /// submitted directly to the engine or born inside the chain
+    /// (autonomous `rt_3D` launches).
+    pub frontend: Option<usize>,
+    /// Front-end-local job ID (tag stripped).
+    pub job: u64,
+    /// Completion cycle.
+    pub at: Cycle,
+    /// Whether any part was aborted.
+    pub aborted: bool,
+    /// Total bus errors over all 1D parts.
+    pub errors: u32,
+}
+
+/// Front-ends + arbiter + engine + endpoints, one clock.
+pub struct IdmaSystem {
+    frontends: Vec<Box<dyn Frontend>>,
+    /// Present from the second front-end on (§3.1's per-core funnel).
+    arbiter: Option<RoundRobinArbiter>,
+    /// Retry slot between the arbiter (or sole front-end) and the engine.
+    hold: Option<NdJob>,
+    /// The composed engine (mid-end chain + back-end).
+    pub engine: IdmaEngine,
+    /// System memory endpoints (indexed by the back-end's port list).
+    pub mems: Vec<Endpoint>,
+    /// Control-plane memory the descriptor front-end's manager port
+    /// fetches from (the SPM holding descriptor chains).
+    pub ctrl_mem: SparseMemory,
+    now: Cycle,
+    ticks: u64,
+    done_log: Vec<SystemDone>,
+}
+
+impl IdmaSystem {
+    /// Wrap an engine and its endpoints; front-ends are added with
+    /// [`IdmaSystem::add_frontend`].
+    pub fn new(engine: IdmaEngine, mems: Vec<Endpoint>) -> Self {
+        Self {
+            frontends: Vec::new(),
+            arbiter: None,
+            hold: None,
+            engine,
+            mems,
+            ctrl_mem: SparseMemory::new(),
+            now: 0,
+            ticks: 0,
+            done_log: Vec::new(),
+        }
+    }
+
+    /// Attach a front-end; returns its index (the handle for
+    /// [`IdmaSystem::frontend_mut`] and [`SystemDone::frontend`]). From
+    /// the second front-end on, jobs arbitrate through a
+    /// [`RoundRobinArbiter`] sized to the front-end count.
+    pub fn add_frontend(&mut self, fe: Box<dyn Frontend>) -> usize {
+        assert!(
+            self.hold.is_none() && !self.arbiter.as_ref().is_some_and(|a| a.busy()),
+            "front-ends must be added while the control plane is quiescent"
+        );
+        self.frontends.push(fe);
+        if self.frontends.len() > 1 {
+            self.arbiter = Some(RoundRobinArbiter::new(self.frontends.len()));
+        }
+        self.frontends.len() - 1
+    }
+
+    /// Builder-style [`IdmaSystem::add_frontend`].
+    pub fn with_frontend(mut self, fe: Box<dyn Frontend>) -> Self {
+        self.add_frontend(fe);
+        self
+    }
+
+    /// Number of attached front-ends.
+    pub fn num_frontends(&self) -> usize {
+        self.frontends.len()
+    }
+
+    /// Typed access to front-end `i` for native-surface programming.
+    /// Panics if `T` is not the concrete type at that index.
+    pub fn frontend<T: Frontend>(&self, i: usize) -> &T {
+        self.frontends[i].as_any().downcast_ref::<T>().expect("front-end type mismatch")
+    }
+
+    /// Mutable typed access to front-end `i` (see [`IdmaSystem::frontend`]).
+    pub fn frontend_mut<T: Frontend>(&mut self, i: usize) -> &mut T {
+        self.frontends[i].as_any_mut().downcast_mut::<T>().expect("front-end type mismatch")
+    }
+
+    /// Type-erased access to front-end `i` (status interface).
+    pub fn frontend_dyn(&self, i: usize) -> &dyn Frontend {
+        self.frontends[i].as_ref()
+    }
+
+    /// Current system clock: the cycle the *next* tick will execute at.
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    /// Ticks actually executed so far — the event core's instrumentation
+    /// (compare against elapsed cycles for the skip factor).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Relocate the clock forward without simulating (configuration-cost
+    /// accounting before any work is in flight, e.g. "programming took
+    /// ~15 core cycles"). Panics while the system is busy.
+    pub fn advance_to(&mut self, cycle: Cycle) {
+        assert!(!self.busy(), "advance_to is only valid while idle");
+        assert!(cycle >= self.now, "clock must be monotone ({cycle} < {})", self.now);
+        self.now = cycle;
+    }
+
+    /// Submit a job directly to the engine at the current clock,
+    /// bypassing the front-ends (host-less scenarios and tests). Returns
+    /// `false` on back pressure.
+    pub fn submit(&mut self, j: NdJob) -> bool {
+        debug_assert_eq!(
+            j.job >> FE_TAG_SHIFT,
+            0,
+            "job-id bits 48.. are reserved for front-end routing"
+        );
+        self.engine.submit(self.now, j)
+    }
+
+    /// Drain the system-level completion log.
+    pub fn take_done(&mut self) -> Vec<SystemDone> {
+        std::mem::take(&mut self.done_log)
+    }
+
+    /// True while any job or control-plane action is in flight.
+    pub fn busy(&self) -> bool {
+        self.hold.is_some()
+            || self.engine.busy()
+            || self.arbiter.as_ref().is_some_and(|a| a.busy())
+            || self.frontends.iter().any(|f| f.busy())
+    }
+
+    /// Progress fingerprint for watchdogs.
+    pub fn fingerprint(&self) -> u64 {
+        let mut fp = self.engine.fingerprint() ^ (self.done_log.len() as u64).rotate_left(17);
+        fp ^= (self.hold.is_some() as u64) << 1;
+        for (i, fe) in self.frontends.iter().enumerate() {
+            fp ^= fe.status().rotate_left(i as u32 + 3) ^ ((fe.busy() as u64) << (i % 32 + 8));
+        }
+        fp
+    }
+
+    /// Execute exactly one cycle at the current clock and advance it.
+    pub fn step(&mut self) {
+        let now = self.now;
+        self.step_cycle(now);
+        self.ticks += 1;
+        self.now = now + 1;
+    }
+
+    /// One simulated cycle: front-end control planes, job hand-offs
+    /// (front-end → arbiter → hold → engine, one per boundary per
+    /// cycle), the engine, and completion fan-back.
+    fn step_cycle(&mut self, now: Cycle) {
+        for fe in self.frontends.iter_mut() {
+            fe.tick(now, &self.ctrl_mem);
+        }
+        match &mut self.arbiter {
+            Some(arb) => {
+                for (i, fe) in self.frontends.iter_mut().enumerate() {
+                    if arb.can_accept_port(i) {
+                        if let Some(mut j) = fe.pop(now) {
+                            debug_assert_eq!(j.job >> FE_TAG_SHIFT, 0);
+                            j.job |= ((i as u64) + 1) << FE_TAG_SHIFT;
+                            let ok = arb.accept_port(now, i, j);
+                            debug_assert!(ok);
+                        }
+                    }
+                }
+                arb.tick(now);
+                if self.hold.is_none() {
+                    self.hold = arb.pop(now);
+                }
+            }
+            None => {
+                if self.hold.is_none() {
+                    if let Some(fe) = self.frontends.first_mut() {
+                        if let Some(mut j) = fe.pop(now) {
+                            debug_assert_eq!(j.job >> FE_TAG_SHIFT, 0);
+                            j.job |= 1 << FE_TAG_SHIFT;
+                            self.hold = Some(j);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(j) = self.hold.take() {
+            if !self.engine.submit(now, j.clone()) {
+                self.hold = Some(j);
+            }
+        }
+        self.engine.tick(now, &mut self.mems);
+        for d in self.engine.take_done() {
+            let src = (d.job >> FE_TAG_SHIFT) as usize;
+            let (frontend, job) = if d.job & RT_JOB_BIT != 0 || src == 0 {
+                (None, d.job)
+            } else {
+                debug_assert!(src <= self.frontends.len(), "unknown front-end tag");
+                self.frontends[src - 1].notify_complete(d.job & FE_JOB_MASK);
+                (Some(src - 1), d.job & FE_JOB_MASK)
+            };
+            self.done_log.push(SystemDone {
+                frontend,
+                job,
+                at: d.at,
+                aborted: d.aborted,
+                errors: d.errors,
+            });
+        }
+    }
+
+    /// Earliest cycle strictly after `now` at which any component could
+    /// progress. Conservative: waking early is a no-op tick, waking late
+    /// never happens (the differential tests pin this down).
+    fn next_event(&self, now: Cycle) -> Cycle {
+        // Staged hand-offs advance per cycle, like the engine's chain.
+        if self.hold.is_some() || self.arbiter.as_ref().is_some_and(|a| a.busy()) {
+            return now + 1;
+        }
+        // A busy engine contributes its own horizon (which already folds
+        // in the mid-end hints); an idle engine only wakes through the
+        // front-end / armed-mid-end hint set shared with `idle_wake`.
+        let mut at = if self.engine.busy() {
+            self.engine.next_event(now, &self.mems)
+        } else {
+            Cycle::MAX
+        };
+        if let Some(w) = self.idle_wake(now) {
+            at = at.min(w);
+        }
+        if at == Cycle::MAX {
+            now + 1
+        } else {
+            at
+        }
+    }
+
+    /// Timed wake hint while the system is idle (armed `rt_3D`, queued
+    /// descriptor launches): `None` means nothing internal will ever
+    /// change state again without external programming.
+    fn idle_wake(&self, now: Cycle) -> Option<Cycle> {
+        let mut at = Cycle::MAX;
+        for fe in self.frontends.iter() {
+            if let Some(e) = fe.next_event(now) {
+                at = at.min(e.max(now + 1));
+            }
+        }
+        for m in self.engine.mids.iter() {
+            if let Some(e) = m.next_event(now) {
+                at = at.min(e.max(now + 1));
+            }
+        }
+        (at != Cycle::MAX).then_some(at)
+    }
+
+    /// Drive event-driven until the whole system drains. Returns the
+    /// cycle of the last executed tick (the clock then rests one past
+    /// it). Cycle- and byte-identical to
+    /// [`IdmaSystem::run_until_idle_exact`].
+    pub fn run_until_idle(&mut self) -> Cycle {
+        let mut sched = Scheduler::new();
+        let mut wd = Watchdog::new(100_000);
+        let start = self.now;
+        let mut last = self.now;
+        while self.busy() {
+            let now = self.now;
+            self.step_cycle(now);
+            self.ticks += 1;
+            last = now;
+            if !self.busy() {
+                self.now = now + 1;
+                break;
+            }
+            assert!(!wd.check(now, self.fingerprint()), "system deadlock at {now}");
+            sched.schedule(self.next_event(now));
+            self.now = sched.pop_after(now).expect("event wheel empty while system busy");
+            assert!(self.now - start < RUNAWAY, "system did not drain within {RUNAWAY} cycles");
+        }
+        last
+    }
+
+    /// Per-cycle reference for [`IdmaSystem::run_until_idle`] — the
+    /// differential oracle (`while busy { tick; now += 1 }`).
+    pub fn run_until_idle_exact(&mut self) -> Cycle {
+        let mut wd = Watchdog::new(100_000);
+        let start = self.now;
+        let mut last = self.now;
+        while self.busy() {
+            let now = self.now;
+            self.step_cycle(now);
+            self.ticks += 1;
+            last = now;
+            self.now = now + 1;
+            assert!(!wd.check(now, self.fingerprint()), "system deadlock at {now}");
+            assert!(self.now - start < RUNAWAY, "system did not drain within {RUNAWAY} cycles");
+        }
+        last
+    }
+
+    /// Drive event-driven up to (but not including) `deadline`, idle
+    /// periods included — the driver for periodic scenarios (an armed
+    /// `rt_3D` launching every PVCT period wakes the system by itself).
+    /// Equivalent to `for now in self.now()..deadline { step }`.
+    pub fn run_until(&mut self, deadline: Cycle) -> Cycle {
+        let mut wd = Watchdog::new(100_000);
+        while self.now < deadline {
+            let now = self.now;
+            self.step_cycle(now);
+            self.ticks += 1;
+            let next = if self.busy() {
+                assert!(!wd.check(now, self.fingerprint()), "system deadlock at {now}");
+                self.next_event(now)
+            } else if let Some(w) = self.idle_wake(now) {
+                w
+            } else {
+                // Fully passive: no tick before the deadline can change
+                // anything, so jump straight there.
+                deadline
+            };
+            self.now = next.max(now + 1).min(deadline);
+        }
+        self.now
+    }
+
+    /// Per-cycle reference for [`IdmaSystem::run_until`].
+    pub fn run_until_exact(&mut self, deadline: Cycle) -> Cycle {
+        while self.now < deadline {
+            self.step();
+        }
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::frontend::{
+        decode, encode, write_descriptor, DescFlags, DescFrontend, InstFrontend, Opcode,
+        RegFrontend, RegVariant,
+    };
+    use crate::frontend::regs;
+    use crate::mem::MemModel;
+    use crate::protocol::ProtocolKind;
+    use crate::transfer::{NdTransfer, Transfer1D};
+
+    fn sram_system(dw: u64, nax: usize) -> IdmaSystem {
+        let e = EngineBuilder::new(32, dw, nax).build().unwrap();
+        IdmaSystem::new(e, vec![Endpoint::new(MemModel::sram(dw))])
+    }
+
+    #[test]
+    fn direct_submission_runs_engine_only() {
+        let mut sys = sram_system(4, 4);
+        let data: Vec<u8> = (0..200).map(|i| i as u8).collect();
+        sys.mems[0].data.write(0x100, &data);
+        let t = Transfer1D::copy(0, 0x100, 0x9000, 200, ProtocolKind::Axi4);
+        assert!(sys.submit(NdJob::new(7, NdTransfer::d1(t))));
+        let end = sys.run_until_idle();
+        assert!(end > 0);
+        assert_eq!(sys.mems[0].data.read_vec(0x9000, 200), data);
+        let done = sys.take_done();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].job, 7);
+        assert_eq!(done[0].frontend, None, "direct submissions carry no front-end tag");
+    }
+
+    #[test]
+    fn reg_frontend_programs_natively_and_completes() {
+        let mut sys = sram_system(8, 8);
+        let i = sys.add_frontend(Box::new(RegFrontend::new(RegVariant::R32, 0)));
+        let data: Vec<u8> = (0..64).map(|x| (x * 3) as u8).collect();
+        sys.mems[0].data.write(0x1000, &data);
+        let fe = sys.frontend_mut::<RegFrontend>(i);
+        fe.write_reg(0, regs::SRC, 0x1000);
+        fe.write_reg(0, regs::DST, 0x2000);
+        fe.write_reg(0, regs::LEN, 64);
+        let id = fe.read_reg(0, regs::TRANSFER_ID);
+        assert_eq!(id, 1);
+        sys.run_until_idle();
+        assert_eq!(sys.mems[0].data.read_vec(0x2000, 64), data);
+        assert_eq!(sys.frontend_dyn(i).status(), 1, "completion routed back");
+        let done = sys.take_done();
+        assert_eq!(done.len(), 1);
+        assert_eq!((done[0].frontend, done[0].job), (Some(i), 1));
+    }
+
+    #[test]
+    fn mixed_frontends_arbitrate_and_route_completions() {
+        let mut sys = sram_system(8, 8);
+        let reg = sys.add_frontend(Box::new(RegFrontend::new(RegVariant::R32, 0)));
+        let desc = sys.add_frontend(Box::new(DescFrontend::new(3)));
+        let inst = sys.add_frontend(Box::new(InstFrontend::new(0)));
+        assert_eq!(sys.num_frontends(), 3);
+        let mut blobs = Vec::new();
+        for (k, base) in [(0u8, 0x1000u64), (1, 0x2000), (2, 0x3000)] {
+            let data: Vec<u8> = (0..128).map(|x| (x as u8).wrapping_mul(7) ^ k).collect();
+            sys.mems[0].data.write(base, &data);
+            blobs.push(data);
+        }
+        // reg_32: register writes + TRANSFER_ID read.
+        let fe = sys.frontend_mut::<RegFrontend>(reg);
+        fe.write_reg(0, regs::SRC, 0x1000);
+        fe.write_reg(0, regs::DST, 0x8000);
+        fe.write_reg(0, regs::LEN, 128);
+        assert_eq!(fe.read_reg(0, regs::TRANSFER_ID), 1);
+        // desc_64: one descriptor in the control-plane SPM + head store.
+        write_descriptor(
+            &mut sys.ctrl_mem,
+            0x40,
+            0,
+            0x2000,
+            0x9000,
+            128,
+            DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
+        );
+        assert!(sys.frontend_mut::<DescFrontend>(desc).launch_chain(0, 0x40));
+        // inst_64: dmsrc / dmdst / dmcpy.
+        let fe = sys.frontend_mut::<InstFrontend>(inst);
+        fe.execute(0, decode(encode(Opcode::DmSrc, 0, 1, 2)).unwrap(), 0x3000, 0);
+        fe.execute(1, decode(encode(Opcode::DmDst, 0, 1, 2)).unwrap(), 0xA000, 0);
+        assert_eq!(fe.execute(2, decode(encode(Opcode::DmCpy, 5, 1, 2)).unwrap(), 128, 0), Some(1));
+        sys.run_until_idle();
+        for (dst, blob) in [(0x8000u64, &blobs[0]), (0x9000, &blobs[1]), (0xA000, &blobs[2])] {
+            assert_eq!(&sys.mems[0].data.read_vec(dst, 128), blob);
+        }
+        let done = sys.take_done();
+        assert_eq!(done.len(), 3);
+        for idx in [reg, desc, inst] {
+            assert_eq!(sys.frontend_dyn(idx).status(), 1, "front-end {idx} notified");
+            assert_eq!(
+                done.iter().filter(|d| d.frontend == Some(idx)).count(),
+                1,
+                "exactly one completion routed to front-end {idx}"
+            );
+        }
+    }
+
+    #[test]
+    fn event_and_exact_drivers_agree() {
+        let build = || {
+            let mut sys = sram_system(8, 2);
+            let i = sys.add_frontend(Box::new(DescFrontend::new(25)));
+            let mut at = 0x80u64;
+            for k in 0..4u64 {
+                let next = if k == 3 { 0 } else { at + 64 };
+                let data: Vec<u8> = (0..96).map(|x| (x + k * 17) as u8).collect();
+                sys.mems[0].data.write(0x1000 + k * 0x100, &data);
+                write_descriptor(
+                    &mut sys.ctrl_mem,
+                    at,
+                    next,
+                    0x1000 + k * 0x100,
+                    0x9000 + k * 0x100,
+                    96,
+                    DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
+                );
+                at += 64;
+            }
+            assert!(sys.frontend_mut::<DescFrontend>(i).launch_chain(0, 0x80));
+            sys
+        };
+        let mut a = build();
+        let mut b = build();
+        let end_a = a.run_until_idle_exact();
+        let end_b = b.run_until_idle();
+        assert_eq!(end_a, end_b, "event-driven facade must be cycle-exact");
+        assert_eq!(a.take_done(), b.take_done());
+        for k in 0..4u64 {
+            assert_eq!(
+                a.mems[0].data.read_vec(0x9000 + k * 0x100, 96),
+                b.mems[0].data.read_vec(0x9000 + k * 0x100, 96),
+            );
+        }
+        assert!(b.ticks() < end_b, "descriptor fetches must be cycle-skipped");
+    }
+
+    #[test]
+    fn advance_to_relocates_idle_clock() {
+        let mut sys = sram_system(4, 2);
+        sys.advance_to(15);
+        assert_eq!(sys.now(), 15);
+        let t = Transfer1D::copy(0, 0, 0x100, 16, ProtocolKind::Axi4);
+        assert!(sys.submit(NdJob::new(1, NdTransfer::d1(t))));
+        let end = sys.run_until_idle();
+        assert!(end >= 15);
+    }
+}

@@ -9,10 +9,11 @@
 
 use crate::backend::{Backend, BackendCfg, PortCfg};
 use crate::baseline::XilinxAxiDma;
+use crate::engine::IdmaEngine;
 use crate::frontend::{write_descriptor, DescFlags, DescFrontend};
 use crate::mem::{Endpoint, MemModel};
 use crate::protocol::ProtocolKind;
-use crate::sim::Watchdog;
+use crate::system::IdmaSystem;
 
 /// Cheshire system parameters.
 #[derive(Debug, Clone)]
@@ -58,17 +59,30 @@ impl Cheshire {
         .unwrap()
     }
 
-    /// Copy `n` transfers of `len` bytes each through the full desc_64
-    /// path (descriptor chain in SPM → fetch → execute), measuring the
-    /// engine's bus utilization. Data integrity is asserted.
-    pub fn measure_idma(&self, len: u64, n: u64) -> f64 {
-        let mut be = self.backend();
-        let mut mems = [Endpoint::new(MemModel::custom(
+    /// Build the §3.3 system: a `desc_64` front-end over the 64-bit AXI4
+    /// back-end wrapped in an [`IdmaSystem`], with the descriptor chain
+    /// living in the facade's control-plane SPM.
+    pub fn system(&self) -> IdmaSystem {
+        let engine = IdmaEngine::new(Vec::new(), self.backend());
+        let mems = vec![Endpoint::new(MemModel::custom(
             "dram",
             self.mem_latency,
             self.nax.max(16),
             self.dw,
         ))];
+        // desc_64 fetch latency: SPM access + descriptor beats; chained
+        // contiguous descriptors prefetch at port throughput.
+        let mut fe = DescFrontend::new(2 + 64 / self.dw);
+        fe.fetch_throughput = (40 / self.dw).max(1);
+        IdmaSystem::new(engine, mems).with_frontend(Box::new(fe))
+    }
+
+    /// Copy `n` transfers of `len` bytes each through the full desc_64
+    /// path (descriptor chain in SPM → fetch → execute), measuring the
+    /// engine's bus utilization. Data integrity is asserted. The run is
+    /// event-driven through [`IdmaSystem::run_until_idle`].
+    pub fn measure_idma(&self, len: u64, n: u64) -> f64 {
+        let mut sys = self.system();
         // Source data.
         let total = len * n;
         let src_base = 0x8000_0000u64;
@@ -76,16 +90,15 @@ impl Cheshire {
         let mut src = vec![0u8; total as usize];
         let mut rng = crate::sim::XorShift64::new(len ^ 0xC4E5);
         rng.fill(&mut src);
-        mems[0].data.write(src_base, &src);
-        // Descriptor chain in SPM (fetched by the front-end's manager
-        // port; the SPM is a separate low-latency memory).
-        let mut spm = crate::mem::SparseMemory::new();
+        sys.mems[0].data.write(src_base, &src);
+        // Descriptor chain in the control-plane SPM (fetched by the
+        // front-end's manager port, separate from the data endpoints).
         let desc_base = 0x1000u64;
         for i in 0..n {
             let at = desc_base + i * 64;
             let next = if i + 1 == n { 0 } else { at + 64 };
             write_descriptor(
-                &mut spm,
+                &mut sys.ctrl_mem,
                 at,
                 next,
                 src_base + i * len,
@@ -94,42 +107,12 @@ impl Cheshire {
                 DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
             );
         }
-        // desc_64 fetch latency: SPM access + descriptor beats; chained
-        // contiguous descriptors prefetch at port throughput.
-        let mut fe = DescFrontend::new(2 + 64 / self.dw);
-        fe.fetch_throughput = (40 / self.dw).max(1);
-        assert!(fe.launch_chain(0, desc_base));
-        let mut wd = Watchdog::new(100_000);
-        let mut now = 0u64;
-        let mut first_data = None;
-        loop {
-            fe.tick(now, &spm);
-            if let Some(j) = fe.pop(now) {
-                // retry until the backend accepts
-                let mut t = j.nd.inner;
-                t.id = j.job;
-                while !be.try_submit(now, t) {
-                    be.tick(now, &mut mems);
-                    now += 1;
-                }
-                if first_data.is_none() {
-                    first_data = Some(now);
-                }
-            }
-            be.tick(now, &mut mems);
-            for c in be.take_completions() {
-                fe.notify_complete(c.tid);
-            }
-            if !fe.busy() && !be.busy() && fe.status() == n {
-                break;
-            }
-            assert!(!wd.check(now, be.fingerprint() ^ fe.status()), "cheshire deadlock");
-            now += 1;
-            assert!(now < 20_000_000, "runaway");
-        }
+        assert!(sys.frontend_mut::<DescFrontend>(0).launch_chain(0, desc_base));
+        sys.run_until_idle();
+        assert_eq!(sys.frontend_dyn(0).status(), n, "all descriptors completed");
         // Byte exactness end-to-end.
-        assert_eq!(mems[0].data.read_vec(dst_base, total as usize), src);
-        be.stats.bus_utilization(self.dw)
+        assert_eq!(sys.mems[0].data.read_vec(dst_base, total as usize), src);
+        sys.engine.backend.stats.bus_utilization(self.dw)
     }
 
     /// Theoretical utilization limit: beat quantization of unaligned /

@@ -11,11 +11,12 @@
 //! path) scales the results to Fig. 11's GEMM/SpMV/SpMM speedups.
 
 use crate::backend::{Backend, BackendCfg, PortCfg};
+use crate::engine::IdmaEngine;
 use crate::frontend::{decode, encode, InstFrontend, Opcode};
 use crate::mem::{Endpoint, MemModel};
 use crate::protocol::ProtocolKind;
 use crate::runtime::Runtime;
-use crate::sim::Watchdog;
+use crate::system::IdmaSystem;
 use crate::workloads::sparse::SuiteSparseLike;
 
 /// Manticore cluster/chiplet parameters.
@@ -99,29 +100,37 @@ impl Manticore {
         .unwrap()
     }
 
+    /// Build the §3.5 cluster DMA as an [`IdmaSystem`]: an `inst_64`
+    /// front-end over the AXI/OBI back-end, HBM + banked L1 endpoints.
+    pub fn system(&self) -> IdmaSystem {
+        let engine = IdmaEngine::new(Vec::new(), self.backend());
+        let mems = vec![
+            Endpoint::new(MemModel::custom("HBM", self.hbm_latency, 96, self.dw)),
+            Endpoint::new(MemModel::custom("L1", 2, 16, self.dw)),
+        ];
+        let mut fe = InstFrontend::new(0);
+        fe.set_default_protocols(ProtocolKind::Axi4, ProtocolKind::Obi);
+        IdmaSystem::new(engine, mems).with_frontend(Box::new(fe))
+    }
+
     /// Simulate one cluster staging an `n×n` f64 GEMM tile pair from HBM
     /// through the `inst_64` front-end (dmsrc/dmdst/dmcpy — three
     /// instructions per 1D transfer) and, when a [`Runtime`] is given,
     /// computing the tile on the `gemm_f64_n` artifact from the bytes
-    /// that physically arrived in L1.
+    /// that physically arrived in L1. The data-movement core issues one
+    /// instruction per cycle against the facade clock; the drain is
+    /// event-driven ([`IdmaSystem::run_until_idle`]).
     pub fn gemm_tile_sim(&self, n: usize, rt: Option<&mut Runtime>) -> TileSim {
-        let mut be = self.backend();
-        let mut mems = [
-            Endpoint::new(MemModel::custom("HBM", self.hbm_latency, 96, self.dw)),
-            Endpoint::new(MemModel::custom("L1", 2, 16, self.dw)),
-        ];
+        let mut sys = self.system();
         // Operands in HBM.
         let mut rng = crate::sim::XorShift64::new(n as u64);
         let a: Vec<f64> = (0..n * n).map(|_| rng.unit_f64() * 2.0 - 1.0).collect();
         let b: Vec<f64> = (0..n * n).map(|_| rng.unit_f64() * 2.0 - 1.0).collect();
-        mems[0].data.write_f64s(Self::HBM, &a);
-        mems[0].data.write_f64s(Self::HBM + (n * n * 8) as u64, &b);
+        sys.mems[0].data.write_f64s(Self::HBM, &a);
+        sys.mems[0].data.write_f64s(Self::HBM + (n * n * 8) as u64, &b);
 
         // inst_64: three instructions per 1D transfer, two transfers.
-        let mut fe = InstFrontend::new(0);
-        fe.set_default_protocols(ProtocolKind::Axi4, ProtocolKind::Obi);
         let bytes = (n * n * 8) as u64;
-        let mut now = 0u64;
         for i in 0..2u64 {
             let src = Self::HBM + i * bytes;
             let dst = Self::L1 + i * bytes;
@@ -131,40 +140,26 @@ impl Manticore {
                 (Opcode::DmCpy, bytes, 0),
             ] {
                 let d = decode(encode(op, 1, 2, 3)).unwrap();
-                while fe.execute(now, d, r1, r2).is_none() {
-                    be.tick(now, &mut mems);
-                    now += 1;
+                // Back-pressured `dmcpy` stalls the offload response:
+                // the system keeps ticking until the queue frees.
+                loop {
+                    let now = sys.now();
+                    if sys.frontend_mut::<InstFrontend>(0).execute(now, d, r1, r2).is_some() {
+                        break;
+                    }
+                    sys.step();
                 }
-                now += 1; // one instruction per cycle
+                sys.step(); // one instruction per cycle
             }
         }
-        let launch_insts = fe.inst_count;
-        // Drain front-end into the back-end and run.
-        let mut wd = Watchdog::new(100_000);
-        loop {
-            if let Some(j) = fe.pop(now) {
-                let mut t = j.nd.inner;
-                t.id = j.job;
-                while !be.try_submit(now, t) {
-                    be.tick(now, &mut mems);
-                    now += 1;
-                }
-            }
-            be.tick(now, &mut mems);
-            for c in be.take_completions() {
-                fe.notify_complete(c.tid);
-            }
-            if !fe.busy() && !be.busy() {
-                break;
-            }
-            assert!(!wd.check(now, be.fingerprint()), "manticore deadlock");
-            now += 1;
-        }
+        let launch_insts = sys.frontend::<InstFrontend>(0).inst_count;
+        // Drain the staged transfers event-driven.
+        let end = sys.run_until_idle();
 
         // Compute the tile on the physically-moved L1 bytes.
         let verified = if let Some(rt) = rt {
-            let a_l1 = mems[1].data.read_f64s(Self::L1, n * n);
-            let b_l1 = mems[1].data.read_f64s(Self::L1 + bytes, n * n);
+            let a_l1 = sys.mems[1].data.read_f64s(Self::L1, n * n);
+            let b_l1 = sys.mems[1].data.read_f64s(Self::L1 + bytes, n * n);
             assert_eq!(a_l1, a, "operand A must arrive byte-exact");
             let exe = rt.get(&format!("gemm_f64_{n}")).unwrap();
             let out = exe
@@ -185,7 +180,7 @@ impl Manticore {
             false
         };
 
-        TileSim { dma_cycles: now, bytes: 2 * bytes, launch_insts, verified }
+        TileSim { dma_cycles: end, bytes: 2 * bytes, launch_insts, verified }
     }
 
     /// Fig. 11: the chiplet-level model. For each workload and tile

@@ -13,7 +13,7 @@ use crate::mem::{Endpoint, MemModel};
 use crate::midend::{DistSide, MidEnd, MpDist, MpSplit, NdJob, SplitSide};
 use crate::model::area::synthesize_area;
 use crate::protocol::ProtocolKind;
-use crate::sim::{Cycle, Watchdog, XorShift64};
+use crate::sim::{Cycle, Scheduler, Watchdog, XorShift64};
 use crate::transfer::{NdTransfer, Transfer1D, TransferOpts};
 use crate::workloads::double_buffer::{overlap_cycles, serial_cycles, DoubleBufferPhase};
 
@@ -209,88 +209,141 @@ impl DistributedIdma {
             + self.dist.len() as f64 * crate::model::area::midend_area_ge("mp_dist", 0, 0)
     }
 
+    /// One simulated cycle: feed the splitter, tick every node, move
+    /// jobs down the tree, retire back-end completions.
+    fn step(
+        &mut self,
+        now: Cycle,
+        mems: &mut [Endpoint],
+        pending: &mut std::collections::VecDeque<Transfer1D>,
+    ) {
+        let levels = self.backends.len().trailing_zeros() as usize;
+        // Feed the splitter.
+        if let Some(t) = pending.front() {
+            if self.split.can_accept() {
+                let mut t = *t;
+                pending.pop_front();
+                self.tid += 1;
+                t.id = self.tid;
+                let ok = self.split.accept(now, NdJob::new(t.id, NdTransfer::d1(t)));
+                debug_assert!(ok);
+            }
+        }
+        self.split.tick(now);
+        for d in self.dist.iter_mut() {
+            d.tick(now);
+        }
+        // splitter → root distributor
+        if self.dist[0].can_accept() {
+            if let Some(j) = self.split.pop(now) {
+                self.dist[0].accept(now, j);
+            }
+        }
+        // tree hand-offs: node i at level k feeds nodes at level k+1
+        for k in 0..levels.saturating_sub(1) {
+            let level_base = (1usize << k) - 1;
+            let next_base = (1usize << (k + 1)) - 1;
+            for i in 0..(1 << k) {
+                for port in 0..2 {
+                    let child = next_base + i * 2 + port;
+                    let (a, b) = self.dist.split_at_mut(next_base);
+                    let parent = &mut a[level_base + i];
+                    let child_node = &mut b[child - next_base];
+                    if child_node.can_accept() {
+                        if let Some(j) = parent.pop_port(now, port) {
+                            child_node.accept(now, j);
+                        }
+                    }
+                }
+            }
+        }
+        // leaf distributors → back-ends
+        let leaf_base = (1usize << levels.saturating_sub(1)) - 1;
+        if levels > 0 {
+            for i in 0..(1 << (levels - 1)) {
+                for port in 0..2 {
+                    let be = i * 2 + port;
+                    if self.backends[be].can_submit() {
+                        if let Some(j) = self.dist[leaf_base + i].pop_port(now, port) {
+                            let mut t = j.nd.inner;
+                            t.id = (self.tid << 20) | (be as u64) << 10 | j.job;
+                            self.tid += 1;
+                            let ok = self.backends[be].try_submit(now, t);
+                            debug_assert!(ok);
+                        }
+                    }
+                }
+            }
+        }
+        for be in self.backends.iter_mut() {
+            be.tick(now, mems);
+            be.take_completions();
+        }
+    }
+
+    /// True while anything is staged or in flight.
+    fn busy(&self, pending: &std::collections::VecDeque<Transfer1D>) -> bool {
+        !pending.is_empty()
+            || self.split.busy()
+            || self.dist.iter().any(|d| d.busy())
+            || self.backends.iter().any(|b| b.busy())
+    }
+
+    /// Progress fingerprint over all back-ends (watchdog food).
+    fn fingerprint(&self) -> u64 {
+        self.backends.iter().fold(0u64, |a, b| a ^ b.fingerprint().rotate_left(7))
+    }
+
+    /// Conservative wake hint: per cycle while the split/dist tree is
+    /// staging pieces, else the earliest busy back-end's event horizon —
+    /// the latency-hiding L2 waits dominate the 512 KiB copy, so this is
+    /// where the cycle-skipping pays off.
+    fn next_event(&self, now: Cycle, mems: &[Endpoint], feeding: bool) -> Cycle {
+        if feeding || self.split.busy() || self.dist.iter().any(|d| d.busy()) {
+            return now + 1;
+        }
+        self.backends
+            .iter()
+            .filter(|b| b.busy())
+            .map(|b| b.next_event(now, mems))
+            .min()
+            .unwrap_or(now + 1)
+    }
+
     /// Run a batch of linear transfers through split → dist tree →
-    /// back-ends until everything retires. Returns total cycles.
+    /// back-ends until everything retires, event-driven. Returns total
+    /// cycles (identical to [`DistributedIdma::run_exact`]).
     pub fn run(&mut self, transfers: Vec<Transfer1D>, mems: &mut [Endpoint]) -> u64 {
         let mut pending: std::collections::VecDeque<Transfer1D> = transfers.into();
-        let levels = self.backends.len().trailing_zeros() as usize;
         let mut now: Cycle = 0;
         let mut wd = Watchdog::new(200_000);
+        let mut sched = Scheduler::new();
         loop {
-            // Feed the splitter.
-            if let Some(t) = pending.front() {
-                if self.split.can_accept() {
-                    let mut t = *t;
-                    pending.pop_front();
-                    self.tid += 1;
-                    t.id = self.tid;
-                    let ok = self.split.accept(now, NdJob::new(t.id, NdTransfer::d1(t)));
-                    debug_assert!(ok);
-                }
-            }
-            self.split.tick(now);
-            for d in self.dist.iter_mut() {
-                d.tick(now);
-            }
-            // splitter → root distributor
-            if self.dist[0].can_accept() {
-                if let Some(j) = self.split.pop(now) {
-                    self.dist[0].accept(now, j);
-                }
-            }
-            // tree hand-offs: node i at level k feeds nodes at level k+1
-            for k in 0..levels.saturating_sub(1) {
-                let level_base = (1usize << k) - 1;
-                let next_base = (1usize << (k + 1)) - 1;
-                for i in 0..(1 << k) {
-                    for port in 0..2 {
-                        let child = next_base + i * 2 + port;
-                        let (a, b) = self.dist.split_at_mut(next_base);
-                        let parent = &mut a[level_base + i];
-                        let child_node = &mut b[child - next_base];
-                        if child_node.can_accept() {
-                            if let Some(j) = parent.pop_port(now, port) {
-                                child_node.accept(now, j);
-                            }
-                        }
-                    }
-                }
-            }
-            // leaf distributors → back-ends
-            let leaf_base = (1usize << levels.saturating_sub(1)) - 1;
-            if levels > 0 {
-                for i in 0..(1 << (levels - 1)) {
-                    for port in 0..2 {
-                        let be = i * 2 + port;
-                        if self.backends[be].can_submit() {
-                            if let Some(j) = self.dist[leaf_base + i].pop_port(now, port) {
-                                let mut t = j.nd.inner;
-                                t.id = (self.tid << 20) | (be as u64) << 10 | j.job;
-                                self.tid += 1;
-                                let ok = self.backends[be].try_submit(now, t);
-                                debug_assert!(ok);
-                            }
-                        }
-                    }
-                }
-            }
-            for be in self.backends.iter_mut() {
-                be.tick(now, mems);
-                be.take_completions();
-            }
-            let busy = !pending.is_empty()
-                || self.split.busy()
-                || self.dist.iter().any(|d| d.busy())
-                || self.backends.iter().any(|b| b.busy());
-            if !busy {
+            self.step(now, mems, &mut pending);
+            if !self.busy(&pending) {
                 return now;
             }
-            let fp = self
-                .backends
-                .iter()
-                .fold(0u64, |a, b| a ^ b.fingerprint().rotate_left(7));
-            assert!(!wd.check(now, fp), "distributed engine deadlock at {now}");
+            assert!(!wd.check(now, self.fingerprint()), "distributed engine deadlock at {now}");
+            sched.schedule(self.next_event(now, mems, !pending.is_empty()));
+            now = sched.pop_after(now).expect("event wheel empty while engine busy");
+            assert!(now < 50_000_000, "distributed engine runaway");
+        }
+    }
+
+    /// Per-cycle reference for [`DistributedIdma::run`] — the
+    /// differential oracle.
+    pub fn run_exact(&mut self, transfers: Vec<Transfer1D>, mems: &mut [Endpoint]) -> u64 {
+        let mut pending: std::collections::VecDeque<Transfer1D> = transfers.into();
+        let mut wd = Watchdog::new(200_000);
+        let mut now: Cycle = 0;
+        loop {
+            self.step(now, mems, &mut pending);
+            if !self.busy(&pending) {
+                return now;
+            }
+            assert!(!wd.check(now, self.fingerprint()), "distributed engine deadlock at {now}");
             now += 1;
+            assert!(now < 50_000_000, "distributed engine runaway");
         }
     }
 }
@@ -328,6 +381,39 @@ mod tests {
         assert!((14.5..16.2).contains(&dot), "dot {dot:.2} (paper 15.8)");
         // ordering: memory-bound kernels benefit most
         assert!(mm < dct && dct < conv && conv < axpy);
+    }
+
+    #[test]
+    fn distributed_run_matches_per_cycle_reference() {
+        let m = MemPool { backends: 4, region: 8192, ..Default::default() };
+        let mk = || {
+            let mut mems = m.endpoints();
+            let mut src = vec![0u8; 48 * 1024];
+            XorShift64::new(0xD1F).fill(&mut src);
+            mems[0].data.write(MemPool::L2_BASE, &src);
+            let t = Transfer1D {
+                id: 0,
+                src: MemPool::L2_BASE,
+                dst: MemPool::L1_BASE,
+                len: 48 * 1024,
+                src_protocol: ProtocolKind::Axi4,
+                dst_protocol: ProtocolKind::Obi,
+                opts: TransferOpts::default(),
+            };
+            (m.engine(), mems, t)
+        };
+        let (mut ea, mut ma, ta) = mk();
+        let (mut eb, mut mb, tb) = mk();
+        let end_a = ea.run_exact(vec![ta], &mut ma);
+        let end_b = eb.run(vec![tb], &mut mb);
+        assert_eq!(end_a, end_b, "event-driven distributed run must be cycle-exact");
+        for i in 0..4usize {
+            assert_eq!(
+                ma[1 + i].data.read_vec(MemPool::L1_BASE, 16 * 1024),
+                mb[1 + i].data.read_vec(MemPool::L1_BASE, 16 * 1024),
+                "backend {i} region bytes differ"
+            );
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::midend::{MidEnd, NdJob, TensorNd};
 use crate::model::area::{frontend_area_ge, midend_area_ge, synthesize_area};
 use crate::protocol::ProtocolKind;
 use crate::runtime::{Runtime, WeightsFile};
-use crate::sim::Watchdog;
+use crate::system::IdmaSystem;
 use crate::transfer::{NdTransfer, Transfer1D, TransferOpts};
 use crate::workloads::double_buffer::{overlap_cycles, DoubleBufferPhase};
 use crate::workloads::mobilenet::{self, map, LayerKind, MobileNetSchedule};
@@ -105,20 +105,26 @@ impl PulpOpen {
         IdmaEngine::new(mids, be)
     }
 
+    /// The §3.1 cluster DMA wrapped in an [`IdmaSystem`] (L2 + TCDM
+    /// endpoints).
+    pub fn system(&self) -> IdmaSystem {
+        IdmaSystem::new(self.engine(), vec![l2_endpoint(self.dw), tcdm_endpoint(self.dw)])
+    }
+
     /// §3.1: copy 8 KiB from the TCDM to L2, returning total cycles
     /// including configuration (paper: 1107, of which 1024 move data).
     pub fn copy_8kib(&self) -> u64 {
-        let mut e = self.engine();
-        let mut mems = [l2_endpoint(self.dw), tcdm_endpoint(self.dw)];
+        let mut sys = self.system();
         let mut src = vec![0u8; 8192];
         let mut rng = crate::sim::XorShift64::new(0x8C0B);
         rng.fill(&mut src);
-        mems[1].data.write(map::TCDM_IN, &src);
+        sys.mems[1].data.write(map::TCDM_IN, &src);
         // Core configures via reg_32_3d: ~10 register ops at ~1.5
         // cycles each through the peripheral interconnect.
         let cfg_cycles = 15u64;
-        let mut t = Transfer1D {
-            id: 0,
+        sys.advance_to(cfg_cycles);
+        let t = Transfer1D {
+            id: 1,
             src: map::TCDM_IN,
             dst: 0x2000,
             len: 8192,
@@ -126,17 +132,12 @@ impl PulpOpen {
             dst_protocol: ProtocolKind::Axi4,
             opts: TransferOpts::default(),
         };
-        t.id = 1;
-        let mut now = cfg_cycles;
-        assert!(e.submit(now, NdJob::new(1, NdTransfer::d1(t))));
-        let mut wd = Watchdog::new(50_000);
-        while e.busy() {
-            e.tick(now, &mut mems);
-            now += 1;
-            assert!(!wd.check(now, e.fingerprint()), "copy deadlock");
-        }
-        assert_eq!(mems[0].data.read_vec(0x2000, 8192), src, "copy must be byte exact");
-        now
+        assert!(sys.submit(NdJob::new(1, NdTransfer::d1(t))));
+        sys.run_until_idle();
+        assert_eq!(sys.mems[0].data.read_vec(0x2000, 8192), src, "copy must be byte exact");
+        // Elapsed-cycle convention (one past the last busy tick), matching
+        // the original per-cycle loop and the mobilenet phase accounting.
+        sys.now()
     }
 
     /// Weight blob offsets in schedule order (layer order).
@@ -189,21 +190,19 @@ impl PulpOpen {
         };
         let sched = MobileNetSchedule::new(self.tiles, &offsets);
 
-        let mut e = self.engine();
-        let mut mems = [l2_endpoint(self.dw), tcdm_endpoint(self.dw)];
-        mems[0].data.write(map::L2_INPUT, &input);
+        let mut sys = self.system();
+        sys.mems[0].data.write(map::L2_INPUT, &input);
         if let Some(w) = &weights {
             // Weights blob placed contiguously at L2_WEIGHTS in file order.
             let mut cursor = map::L2_WEIGHTS;
             for name in w.names() {
                 let s = w.get(name).unwrap();
-                cursor += mems[0].data.write_f32s(cursor, s);
+                cursor += sys.mems[0].data.write_f32s(cursor, s);
             }
         }
 
         // --- per-layer: DMA in → compute → DMA out ---------------------------
         let mut rt = rt;
-        let mut now = 0u64;
         let mut dma_cycles_total = 0u64;
         let mut phases: Vec<Vec<DoubleBufferPhase>> = vec![Vec::new(); layers.len()];
         let mut mchan = Mchan::default();
@@ -217,7 +216,7 @@ impl PulpOpen {
                 sched.transfers.iter().filter(|t| t.layer == li && !t.into_tcdm).collect();
 
             // DMA the layer inputs (weights + activation tiles) in.
-            let t0 = now;
+            let t0 = sys.now();
             for (i, tt) in in_transfers.iter().enumerate() {
                 commands += 1;
                 config_serial += match kind {
@@ -242,24 +241,20 @@ impl PulpOpen {
                     NdTransfer::d1(inner)
                 };
                 let job = (li * 1000 + i) as u64 + 1;
-                while !e.submit(now, NdJob::new(job, nd.clone())) {
-                    e.tick(now, &mut mems);
-                    now += 1;
+                while !sys.submit(NdJob::new(job, nd.clone())) {
+                    sys.step();
                 }
             }
-            while e.busy() {
-                e.tick(now, &mut mems);
-                now += 1;
-            }
-            let dma_in = now - t0;
+            sys.run_until_idle();
+            let dma_in = sys.now() - t0;
 
             // Compute on the physically-moved bytes.
             if let Some(r) = rt.as_deref_mut() {
-                self.compute_layer(r, l, &mut mems);
+                self.compute_layer(r, l, &mut sys.mems);
             }
 
             // DMA the outputs back.
-            let t1 = now;
+            let t1 = sys.now();
             for (i, tt) in out_transfers.iter().enumerate() {
                 commands += 1;
                 config_serial += match kind {
@@ -281,16 +276,12 @@ impl PulpOpen {
                     NdTransfer::d1(inner)
                 };
                 let job = (li * 1000 + 500 + i) as u64 + 1;
-                while !e.submit(now, NdJob::new(job, nd.clone())) {
-                    e.tick(now, &mut mems);
-                    now += 1;
+                while !sys.submit(NdJob::new(job, nd.clone())) {
+                    sys.step();
                 }
             }
-            while e.busy() {
-                e.tick(now, &mut mems);
-                now += 1;
-            }
-            let dma_out = now - t1;
+            sys.run_until_idle();
+            let dma_out = sys.now() - t1;
             let dma_layer = dma_in + dma_out;
             dma_cycles_total += dma_layer;
 
@@ -314,7 +305,7 @@ impl PulpOpen {
 
         // --- verification -----------------------------------------------------
         let (logits, verified) = if weights.is_some() {
-            let out = mems[0].data.read_f32s(self.final_logits_addr(), 10);
+            let out = sys.mems[0].data.read_f32s(self.final_logits_addr(), 10);
             let exp: Vec<f32> = expected
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))

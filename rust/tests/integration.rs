@@ -812,3 +812,292 @@ fn init_behind_copy_keeps_stream_order() {
     let expect: Vec<u8> = (0..128).collect();
     assert_eq!(mems[0].data.read_vec(0x9000, 128), expect, "pattern in order");
 }
+
+// ---------------------------------------------------------------------
+// IdmaSystem facade: frontend→engine differential tests (event-driven
+// run_until_idle vs the per-cycle run_until_idle_exact oracle)
+// ---------------------------------------------------------------------
+
+use idma::engine::IdmaEngine;
+use idma::frontend::{
+    decode, encode, regs, write_descriptor, DescFlags, DescFrontend, InstFrontend, Opcode,
+    RegFrontend, RegVariant,
+};
+use idma::midend::{MidEnd, Rt3D, Rt3DConfig, TensorNd};
+use idma::system::IdmaSystem;
+
+/// Run the same prepared system through both drivers and assert cycle-
+/// and byte-identical observables. `build` must produce identical
+/// systems; `dsts` lists the (addr, len) windows to compare.
+fn assert_system_equivalent(
+    label: &str,
+    build: &dyn Fn() -> IdmaSystem,
+    dsts: &[(u64, usize)],
+) -> (u64, u64) {
+    let mut a = build();
+    let mut b = build();
+    let end_a = a.run_until_idle_exact();
+    let end_b = b.run_until_idle();
+    assert_eq!(end_a, end_b, "{label}: final cycle differs (exact {end_a} vs event {end_b})");
+    assert_eq!(a.take_done(), b.take_done(), "{label}: completion logs differ");
+    for (i, &(addr, len)) in dsts.iter().enumerate() {
+        assert_eq!(
+            a.mems[0].data.read_vec(addr, len),
+            b.mems[0].data.read_vec(addr, len),
+            "{label}: destination window {i} differs"
+        );
+    }
+    for i in 0..a.num_frontends() {
+        assert_eq!(
+            a.frontend_dyn(i).status(),
+            b.frontend_dyn(i).status(),
+            "{label}: front-end {i} status differs"
+        );
+    }
+    (end_b, b.ticks())
+}
+
+fn latent_system(latency: u64, dw: u64, nax: usize, tensor: usize) -> IdmaSystem {
+    let mut builder = idma::engine::EngineBuilder::new(32, dw, nax);
+    if tensor > 1 {
+        builder = builder.tensor(tensor);
+    }
+    let engine = builder.build().unwrap();
+    IdmaSystem::new(engine, vec![Endpoint::new(MemModel::custom("m", latency, 16, dw))])
+}
+
+/// Acceptance scenario 1: a reg_32_3d-driven 2D transfer.
+#[test]
+fn system_reg_driven_event_matches_exact() {
+    let build = || {
+        let mut sys = latent_system(120, 8, 4, 3);
+        let i = sys.add_frontend(Box::new(RegFrontend::new(RegVariant::R32_3D, 0)));
+        let mut data = vec![0u8; 1 << 13];
+        XorShift64::new(0x2E6).fill(&mut data);
+        sys.mems[0].data.write(0x1000, &data);
+        let fe = sys.frontend_mut::<RegFrontend>(i);
+        fe.write_reg(0, regs::SRC, 0x1000);
+        fe.write_reg(0, regs::DST, 0x2_0000);
+        fe.write_reg(0, regs::LEN, 96);
+        fe.write_reg(0, regs::DIMS, 256); // src stride
+        fe.write_reg(0, regs::DIMS + 0x8, 96); // dst stride (packed)
+        fe.write_reg(0, regs::DIMS + 0x10, 8); // reps
+        assert_eq!(fe.read_reg(0, regs::TRANSFER_ID), 1);
+        sys
+    };
+    assert_system_equivalent("reg_32_3d 2D", &build, &[(0x2_0000, 96 * 8)]);
+    // Byte-exactness against the reference gather.
+    let mut sys = build();
+    sys.run_until_idle();
+    let mut expect = Vec::new();
+    for r in 0..8u64 {
+        expect.extend(sys.mems[0].data.read_vec(0x1000 + r * 256, 96));
+    }
+    assert_eq!(sys.mems[0].data.read_vec(0x2_0000, 96 * 8), expect);
+    assert_eq!(sys.frontend_dyn(0).status(), 1);
+}
+
+/// Acceptance scenario 2: a desc_64 descriptor chain, latency-bound —
+/// also pins the ≥4× tick-count reduction through the facade.
+#[test]
+fn system_desc_chain_event_matches_exact_and_skips() {
+    // Latency-bound: 64 B descriptors against 250-cycle memory with a
+    // single outstanding transaction — almost every cycle is an idle
+    // wait (fetch in flight, read latency, write response), exactly the
+    // §3.3 regime the event core exists for.
+    let n = 16u64;
+    let len = 64u64;
+    let build = move || {
+        let mut sys = latent_system(250, 8, 1, 0);
+        let mut fe = DescFrontend::new(40);
+        fe.fetch_throughput = 5;
+        let i = sys.add_frontend(Box::new(fe));
+        let mut data = vec![0u8; (n * len) as usize];
+        XorShift64::new(0xDE5C).fill(&mut data);
+        sys.mems[0].data.write(0x1_0000, &data);
+        for k in 0..n {
+            let at = 0x100 + k * 64;
+            let next = if k + 1 == n { 0 } else { at + 64 };
+            write_descriptor(
+                &mut sys.ctrl_mem,
+                at,
+                next,
+                0x1_0000 + k * len,
+                0x10_0000 + k * len,
+                len,
+                DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
+            );
+        }
+        assert!(sys.frontend_mut::<DescFrontend>(i).launch_chain(0, 0x100));
+        sys
+    };
+    let (end, ticks) =
+        assert_system_equivalent("desc_64 chain", &build, &[(0x10_0000, (n * len) as usize)]);
+    let mut sys = build();
+    sys.run_until_idle();
+    assert_eq!(sys.frontend_dyn(0).status(), n, "whole chain completed");
+    assert!(
+        ticks * 4 <= end,
+        "facade must skip ≥ 3/4 of the {end} simulated cycles, executed {ticks} ticks"
+    );
+}
+
+/// Acceptance scenario 3: an inst_64-driven pair of transfers (1D + 2D).
+#[test]
+fn system_inst_driven_event_matches_exact() {
+    let build = || {
+        let mut sys = latent_system(90, 8, 4, 2);
+        let i = sys.add_frontend(Box::new(InstFrontend::new(0)));
+        let mut data = vec![0u8; 1 << 13];
+        XorShift64::new(0x157).fill(&mut data);
+        sys.mems[0].data.write(0x1000, &data);
+        let fe = sys.frontend_mut::<InstFrontend>(i);
+        let x = |op, r1, r2| {
+            let d = decode(encode(op, 1, 2, 3)).unwrap();
+            (d, r1, r2)
+        };
+        // 1D: dmsrc / dmdst / dmcpy.
+        for (d, r1, r2) in [
+            x(Opcode::DmSrc, 0x1000u64, 0),
+            x(Opcode::DmDst, 0x2_0000, 0),
+            x(Opcode::DmCpy, 1500, 0),
+        ] {
+            assert!(fe.execute(0, d, r1, r2).is_some());
+        }
+        // 2D: + dmstr / dmrep, dmcpy with the 2D flag.
+        for (d, r1, r2) in [
+            x(Opcode::DmSrc, 0x1800, 0),
+            x(Opcode::DmDst, 0x3_0000, 0),
+            x(Opcode::DmStr, 512, 128),
+            x(Opcode::DmRep, 6, 0),
+            x(Opcode::DmCpy, 128, 0x2),
+        ] {
+            assert!(fe.execute(0, d, r1, r2).is_some());
+        }
+        sys
+    };
+    assert_system_equivalent(
+        "inst_64 1D+2D",
+        &build,
+        &[(0x2_0000, 1500), (0x3_0000, 128 * 6)],
+    );
+    let mut sys = build();
+    sys.run_until_idle();
+    assert_eq!(sys.frontend_dyn(0).status(), 2, "both dmcpy jobs completed");
+}
+
+/// Mixed reg+desc+inst front-ends on one engine through the round-robin
+/// arbiter: a first-class configuration, still cycle-exact.
+#[test]
+fn system_mixed_frontends_event_matches_exact() {
+    let build = || {
+        let mut sys = latent_system(60, 8, 4, 2);
+        let reg = sys.add_frontend(Box::new(RegFrontend::new(RegVariant::R32, 0)));
+        let desc = sys.add_frontend(Box::new(DescFrontend::new(12)));
+        let inst = sys.add_frontend(Box::new(InstFrontend::new(0)));
+        let mut data = vec![0u8; 1 << 13];
+        XorShift64::new(0x3A3).fill(&mut data);
+        sys.mems[0].data.write(0x1000, &data);
+        let fe = sys.frontend_mut::<RegFrontend>(reg);
+        fe.write_reg(0, regs::SRC, 0x1000);
+        fe.write_reg(0, regs::DST, 0x4_0000);
+        fe.write_reg(0, regs::LEN, 700);
+        assert_eq!(fe.read_reg(0, regs::TRANSFER_ID), 1);
+        write_descriptor(
+            &mut sys.ctrl_mem,
+            0x80,
+            0,
+            0x1400,
+            0x5_0000,
+            900,
+            DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
+        );
+        assert!(sys.frontend_mut::<DescFrontend>(desc).launch_chain(0, 0x80));
+        let fe = sys.frontend_mut::<InstFrontend>(inst);
+        fe.execute(0, decode(encode(Opcode::DmSrc, 0, 1, 2)).unwrap(), 0x1900, 0);
+        fe.execute(1, decode(encode(Opcode::DmDst, 0, 1, 2)).unwrap(), 0x6_0000, 0);
+        assert!(fe
+            .execute(2, decode(encode(Opcode::DmCpy, 5, 1, 2)).unwrap(), 800, 0)
+            .is_some());
+        sys
+    };
+    assert_system_equivalent(
+        "mixed reg+desc+inst",
+        &build,
+        &[(0x4_0000, 700), (0x5_0000, 900), (0x6_0000, 800)],
+    );
+    let mut sys = build();
+    sys.run_until_idle();
+    for i in 0..3 {
+        assert_eq!(sys.frontend_dyn(i).status(), 1, "front-end {i} completed its job");
+    }
+}
+
+/// `run_until` (the periodic-scenario driver) against its per-cycle
+/// oracle `run_until_exact`: an armed rt_3D launching every period must
+/// produce identical completions, bytes and tick-exact state in both
+/// modes — while the event driver skips the waiting periods.
+#[test]
+fn system_run_until_event_matches_exact_with_rt3d() {
+    let deadline = 2200u64;
+    let build = || {
+        let inner = Transfer1D::copy(0, 0x100, 0x8000, 32, ProtocolKind::Axi4);
+        let template = NdTransfer::d2(inner, 64, 32, 4);
+        let mut rt3d = Rt3D::new();
+        rt3d.program(0, Rt3DConfig { template, period: 500, count: Some(4), phase: 7 });
+        let mids: Vec<Box<dyn MidEnd>> = vec![Box::new(rt3d), Box::new(TensorNd::new(1, true))];
+        let be = Backend::new(BackendCfg {
+            dw_bytes: 4,
+            nax_r: 4,
+            nax_w: 4,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            ..Default::default()
+        })
+        .unwrap();
+        let mut sys = IdmaSystem::new(
+            IdmaEngine::new(mids, be),
+            vec![Endpoint::new(MemModel::custom("m", 30, 8, 4))],
+        );
+        let mut data = vec![0u8; 512];
+        XorShift64::new(0x53B).fill(&mut data);
+        sys.mems[0].data.write(0x100, &data);
+        sys
+    };
+    let mut a = build();
+    let mut b = build();
+    assert_eq!(a.run_until_exact(deadline), b.run_until(deadline), "final clock differs");
+    let done_a = a.take_done();
+    assert_eq!(done_a, b.take_done(), "rt_3D completion logs differ");
+    assert_eq!(done_a.len(), 4, "all four periodic launches completed");
+    assert!(done_a.iter().all(|d| d.frontend.is_none()), "autonomous jobs carry no front-end");
+    assert_eq!(
+        a.mems[0].data.read_vec(0x8000, 128),
+        b.mems[0].data.read_vec(0x8000, 128),
+        "gathered sensor bytes differ"
+    );
+    assert!(
+        b.ticks() * 2 <= deadline,
+        "waiting periods must be skipped: {} ticks over {deadline} cycles",
+        b.ticks()
+    );
+}
+
+/// The ported engine-facade is equivalent for direct (host-less) engine
+/// submissions too — the path copy_8kib and the MobileNet tiling use.
+#[test]
+fn system_direct_submission_event_matches_exact() {
+    let build = || {
+        let mut sys = latent_system(180, 4, 2, 3);
+        let mut data = vec![0u8; 1 << 12];
+        XorShift64::new(0x90D).fill(&mut data);
+        sys.mems[0].data.write(0, &data);
+        let inner = Transfer1D::copy(0, 0x40, 0x8000, 64, ProtocolKind::Axi4);
+        let nd = NdTransfer {
+            inner,
+            dims: vec![NdDim { src_stride: 128, dst_stride: 64, reps: 10 }],
+        };
+        assert!(sys.submit(NdJob::new(3, nd)));
+        sys
+    };
+    assert_system_equivalent("direct ND submission", &build, &[(0x8000, 640)]);
+}
