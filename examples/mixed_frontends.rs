@@ -3,9 +3,12 @@
 //! decoder — each programmed through its *native* surface — feed the
 //! same back-end through the round-robin arbiter inside
 //! [`idma::system::IdmaSystem`]. Completions route back to the
-//! front-end that issued them, and the whole run is event-driven.
+//! front-end that issued them, the whole run is event-driven, and a
+//! telemetry [`Recorder`] traces every job's lifecycle into a Chrome
+//! `trace_events` JSON (load it at `ui.perfetto.dev` or
+//! `chrome://tracing`).
 //!
-//! Run: `cargo run --release --example mixed_frontends`
+//! Run: `cargo run --release --example mixed_frontends [trace.json]`
 
 use idma::engine::EngineBuilder;
 use idma::frontend::{
@@ -14,15 +17,22 @@ use idma::frontend::{
 };
 use idma::mem::{Endpoint, MemModel};
 use idma::protocol::ProtocolKind;
-use idma::system::IdmaSystem;
+use idma::system::IdmaSystemBuilder;
+use idma::telemetry::{shared, Recorder};
 
 fn main() {
-    // One engine (64-bit AXI4, 8 outstanding) behind three front-ends.
+    // One engine (64-bit AXI4, 8 outstanding) behind three front-ends,
+    // with a recorder observing the full submit→accept→beat→done path.
     let engine = EngineBuilder::new(32, 8, 8).build().unwrap();
-    let mut sys = IdmaSystem::new(engine, vec![Endpoint::new(MemModel::sram(8))]);
-    let reg = sys.add_frontend(Box::new(RegFrontend::new(RegVariant::R32, 0)));
-    let desc = sys.add_frontend(Box::new(DescFrontend::new(6)));
-    let inst = sys.add_frontend(Box::new(InstFrontend::new(0)));
+    let rec = shared(Recorder::new());
+    let mut sys = IdmaSystemBuilder::new(engine)
+        .endpoint(Endpoint::new(MemModel::sram(8)))
+        .frontend(Box::new(RegFrontend::new(RegVariant::R32, 0)))
+        .frontend(Box::new(DescFrontend::new(6)))
+        .frontend(Box::new(InstFrontend::new(0)))
+        .sink(rec.clone())
+        .build();
+    let (reg, desc, inst) = (0usize, 1, 2);
 
     // Source payloads.
     for (base, fill) in [(0x1000u64, 0x11u8), (0x2000, 0x22), (0x3000, 0x33)] {
@@ -30,7 +40,7 @@ fn main() {
     }
 
     // reg_32: memory-mapped register writes, launch via TRANSFER_ID read.
-    let fe = sys.frontend_mut::<RegFrontend>(reg);
+    let fe = sys.try_frontend_mut::<RegFrontend>(reg).unwrap();
     fe.write_reg(0, regs::SRC, 0x1000);
     fe.write_reg(0, regs::DST, 0x8000);
     fe.write_reg(0, regs::LEN, 512);
@@ -47,11 +57,11 @@ fn main() {
         512,
         DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
     );
-    assert!(sys.frontend_mut::<DescFrontend>(desc).launch_chain(0, 0x40));
+    assert!(sys.try_frontend_mut::<DescFrontend>(desc).unwrap().launch_chain(0, 0x40));
     println!("desc_64  launched a 1-descriptor chain with a single store");
 
     // inst_64: dmsrc / dmdst / dmcpy — three instructions.
-    let fe = sys.frontend_mut::<InstFrontend>(inst);
+    let fe = sys.try_frontend_mut::<InstFrontend>(inst).unwrap();
     fe.execute(0, decode(encode(Opcode::DmSrc, 0, 1, 2)).unwrap(), 0x3000, 0);
     fe.execute(1, decode(encode(Opcode::DmDst, 0, 1, 2)).unwrap(), 0xA000, 0);
     let id = fe.execute(2, decode(encode(Opcode::DmCpy, 5, 1, 2)).unwrap(), 512, 0).unwrap();
@@ -62,11 +72,35 @@ fn main() {
     println!("\nall three jobs retired by cycle {end} ({} ticks executed):", sys.ticks());
     for d in sys.take_done() {
         let fe = d.frontend.expect("front-end jobs carry their source");
-        println!("  front-end {fe} ({}) job {} done at cycle {}", sys.frontend_dyn(fe).name(), d.job, d.at);
+        println!(
+            "  front-end {fe} ({}) job {}: submitted {} accepted {} first beat {:?} done {}",
+            sys.frontend_dyn(fe).name(),
+            d.job,
+            d.submitted,
+            d.accepted,
+            d.first_beat,
+            d.done,
+        );
     }
     for (i, dst, fill) in [(reg, 0x8000u64, 0x11u8), (desc, 0x9000, 0x22), (inst, 0xA000, 0x33)] {
         assert_eq!(sys.frontend_dyn(i).status(), 1, "front-end {i} completion observed");
         assert_eq!(sys.mems[0].data.read_vec(dst, 512), vec![fill; 512]);
     }
     println!("byte-exact on all three destinations — mixed control planes compose.");
+
+    // Export the recorded lifecycle as a Chrome trace.
+    let rec = rec.borrow();
+    let s = rec.summary();
+    println!(
+        "telemetry: {} jobs, {} B read, {} B written over {} cycles",
+        s.jobs,
+        s.bytes_read,
+        s.bytes_written,
+        s.cycles()
+    );
+    let path = std::env::args().nth(1).unwrap_or_else(|| "trace_mixed_frontends.json".into());
+    match rec.write_chrome_trace(&path) {
+        Ok(()) => println!("chrome trace written to {path} — open in ui.perfetto.dev"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

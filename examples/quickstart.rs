@@ -37,7 +37,7 @@ fn main() {
     // 4. Drain event-driven: the facade jumps over provably idle cycles.
     let end = sys.run_until_idle();
     for d in sys.take_done() {
-        println!("job {} done at cycle {} (errors: {})", d.job, d.at, d.errors);
+        println!("job {} done at cycle {} (errors: {})", d.job, d.done, d.errors());
     }
     assert_eq!(sys.mems[0].data.read_vec(0x8000, 64), payload[0..64].to_vec());
     assert_eq!(sys.mems[0].data.read_u8(0x9000 + 77), 77);

@@ -5,6 +5,7 @@
 use idma::baseline::XilinxAxiDma;
 use idma::sim::bench::{bench, header, smoke, BenchJson};
 use idma::systems::cheshire::Cheshire;
+use idma::telemetry::{shared, Recorder};
 
 fn main() {
     header("Fig. 8 — Cheshire: bus utilization vs transfer length");
@@ -38,10 +39,16 @@ fn main() {
         let _ = c.measure_idma(64, 64);
     });
     println!("\n{r}");
+    // Full-path telemetry on the 64 B point: per-descriptor lifecycle
+    // aggregated into the flat summary embedded in the bench JSON.
+    let rec = shared(Recorder::new());
+    let _ = c.measure_idma_traced(64, 64, rec.clone());
+    let summary = rec.borrow().summary();
     let mut json = BenchJson::new("fig08_cheshire_util")
         .num("util_64b", p64.idma)
         .num("ratio_vs_xilinx_64b", p64.idma / p64.xilinx)
-        .result("sweep_point", &r);
+        .result("sweep_point", &r)
+        .summary(&summary);
     for p in &pts {
         json = json.num(&format!("util_len{}", p.len), p.idma);
     }

@@ -36,4 +36,14 @@ pub struct Completion {
     pub aborted: bool,
     /// Number of bus errors encountered (replays/continues included).
     pub errors: u32,
+    /// Cycle the first read data beat of this transfer arrived
+    /// (`None` for init-stream or zero-length transfers).
+    pub first_read_beat: Option<Cycle>,
+    /// Cycle the first write data beat was sent (`None` if no data
+    /// moved, e.g. a fully aborted transfer).
+    pub first_write_beat: Option<Cycle>,
+    /// Cycle the last write data beat was sent.
+    pub last_write_beat: Option<Cycle>,
+    /// First failing address, when a bus error was observed.
+    pub error_addr: Option<u64>,
 }

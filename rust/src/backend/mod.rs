@@ -37,6 +37,7 @@ use crate::mem::Endpoint;
 use crate::protocol::ProtocolKind;
 use crate::sim::stats::RunStats;
 use crate::sim::{Cycle, Fifo, XorShift64};
+use crate::telemetry::{Probe, TelemetryEvent};
 use crate::transfer::{ErrorAction, InitPattern, Transfer1D};
 
 /// One protocol port of the back-end: a protocol plus the index of the
@@ -185,6 +186,12 @@ struct Track {
     aborted: bool,
     action: ErrorAction,
     init: Option<InitPattern>,
+    /// Telemetry timestamps folded into the [`Completion`] record.
+    first_read_beat: Option<Cycle>,
+    first_write_beat: Option<Cycle>,
+    last_write_beat: Option<Cycle>,
+    /// First failing address, when a bus error was observed.
+    error_addr: Option<u64>,
 }
 
 /// Active transfer in the legalizer stage.
@@ -262,6 +269,8 @@ pub struct Backend {
     wscratch: Vec<u8>,
     /// Aggregate statistics.
     pub stats: RunStats,
+    /// Telemetry emission hook (detached by default).
+    probe: Probe,
     started: bool,
     submitted: u64,
     completed: u64,
@@ -320,6 +329,7 @@ impl Backend {
             error_log: Vec::new(),
             wscratch: Vec::with_capacity(cfg.dw_bytes as usize),
             stats: RunStats::default(),
+            probe: Probe::default(),
             started: false,
             submitted: 0,
             completed: 0,
@@ -414,6 +424,21 @@ impl Backend {
     /// Drain the error-report log (what the front-end would be told).
     pub fn take_error_reports(&mut self) -> Vec<ErrorReport> {
         std::mem::take(&mut self.error_log)
+    }
+
+    /// Attach a telemetry probe: the back-end emits per-port
+    /// [`TelemetryEvent::ReadBeat`] / [`TelemetryEvent::WriteBeat`] and
+    /// [`TelemetryEvent::BusError`] events through it. Pass
+    /// [`Probe::none`] to detach.
+    pub fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
+    }
+
+    /// FIFO occupancy high-water marks `(descriptor, read-burst,
+    /// write-burst)` since construction — telemetry feedback for sizing
+    /// the §3.6 wrapper-module queue parameters.
+    pub fn queue_high_water(&self) -> (usize, usize, usize) {
+        (self.desc_q.high_water(), self.rq.high_water(), self.wq.high_water())
     }
 
     /// Progress fingerprint for watchdogs.
@@ -568,6 +593,10 @@ impl Backend {
             at: now,
             aborted: aborted || tr.aborted,
             errors: tr.errors,
+            first_read_beat: tr.first_read_beat,
+            first_write_beat: tr.first_write_beat,
+            last_write_beat: tr.last_write_beat,
+            error_addr: tr.error_addr,
         });
         self.completed += 1;
         self.stats.transfers_done += 1;
@@ -578,9 +607,16 @@ impl Backend {
         let tid = wp.burst.tid;
         if let Some(t) = self.track.get_mut(&tid) {
             t.errors += 1;
+            t.error_addr.get_or_insert(wp.burst.addr);
         }
         let action = self.error_action_for(&wp.burst);
         self.error_log.push(ErrorReport { tid, addr: wp.burst.addr, is_read: false, action });
+        self.probe.emit(TelemetryEvent::BusError {
+            tid,
+            addr: wp.burst.addr,
+            is_read: false,
+            at: now,
+        });
         match action {
             ErrorAction::Replay => {
                 self.stats.replays += 1;
@@ -730,10 +766,27 @@ impl Backend {
         if ep.push_write_beat(now, data) {
             wp.sent += data.len() as u64;
             self.stats.write.beat(data.len() as u64);
+            let tid = wp.burst.tid;
+            let burst_done = wp.sent == wp.burst.len;
+            if let Some(t) = self.track.get_mut(&tid) {
+                if t.first_write_beat.is_none() {
+                    t.first_write_beat = Some(now);
+                }
+                t.last_write_beat = Some(now);
+            }
+            if self.probe.active() {
+                self.probe.emit(TelemetryEvent::WriteBeat {
+                    tid,
+                    port,
+                    bytes: data.len() as u64,
+                    last: wp.burst.last && burst_done,
+                    at: now,
+                });
+            }
             if !replaying && self.cfg.error_handling {
                 wp.retained.extend_from_slice(data);
             }
-            if wp.sent == wp.burst.len {
+            if burst_done {
                 let wp = self.wcur.take().unwrap();
                 self.issued_writes.push_back(wp);
             }
@@ -769,6 +822,19 @@ impl Backend {
         let Some(beat) = mems[mem].take_read_beat_into(now, spare) else { return };
         debug_assert_eq!(beat.owner, owner);
         self.stats.read.beat(beat.data.len() as u64);
+        if let Some(t) = self.track.get_mut(&front.tid) {
+            if t.first_read_beat.is_none() {
+                t.first_read_beat = Some(now);
+            }
+        }
+        if self.probe.active() {
+            self.probe.emit(TelemetryEvent::ReadBeat {
+                tid: front.tid,
+                port: front.port,
+                bytes: beat.data.len() as u64,
+                at: now,
+            });
+        }
         if self.rewind {
             // Drain-and-discard: these bursts are already queued for
             // re-issue behind the faulting one.
@@ -787,6 +853,7 @@ impl Backend {
                 self.stats.bus_errors += 1;
                 if let Some(t) = self.track.get_mut(&front.tid) {
                     t.errors += 1;
+                    t.error_addr.get_or_insert(front.addr);
                 }
                 let action = self.error_action_for(&front);
                 self.error_log.push(ErrorReport {
@@ -794,6 +861,12 @@ impl Backend {
                     addr: front.addr,
                     is_read: true,
                     action,
+                });
+                self.probe.emit(TelemetryEvent::BusError {
+                    tid: front.tid,
+                    addr: front.addr,
+                    is_read: true,
+                    at: now,
                 });
                 match action {
                     ErrorAction::Replay => {

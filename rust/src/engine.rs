@@ -18,6 +18,7 @@ use crate::mem::Endpoint;
 use crate::midend::{MidEnd, NdJob};
 use crate::protocol::ProtocolKind;
 use crate::sim::Cycle;
+use crate::telemetry::{CompletionRecord, Probe, TelemetryEvent, TransferStatus};
 
 /// Per-job accounting: how many 1D transfers were spawned and retired.
 #[derive(Debug, Default)]
@@ -28,20 +29,18 @@ struct JobAcct {
     sealed: bool,
     aborted: bool,
     errors: u32,
+    /// Cycle the engine accepted the job
+    /// ([`CompletionRecord::accepted`]).
+    accepted: Cycle,
+    /// Earliest data beat over all 1D parts.
+    first_beat: Option<Cycle>,
+    /// First failing address, when any part saw a bus error.
+    error_addr: Option<u64>,
 }
 
-/// A completed front-end job.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct JobDone {
-    /// Front-end job ID.
-    pub job: u64,
-    /// Completion cycle.
-    pub at: Cycle,
-    /// Whether any part was aborted.
-    pub aborted: bool,
-    /// Total bus errors over all 1D parts.
-    pub errors: u32,
-}
+/// Former name of the engine's completion record.
+#[deprecated(note = "use `telemetry::CompletionRecord` (same type)")]
+pub type JobDone = CompletionRecord;
 
 /// A composed iDMA engine: mid-end chain + back-end.
 pub struct IdmaEngine {
@@ -53,8 +52,9 @@ pub struct IdmaEngine {
     tid2job: HashMap<u64, u64>,
     jobs: HashMap<u64, JobAcct>,
     order: VecDeque<u64>,
-    done: Vec<JobDone>,
+    done: Vec<CompletionRecord>,
     input_hold: Option<NdJob>,
+    probe: Probe,
 }
 
 impl IdmaEngine {
@@ -69,7 +69,20 @@ impl IdmaEngine {
             order: VecDeque::new(),
             done: Vec::new(),
             input_hold: None,
+            probe: Probe::default(),
         }
+    }
+
+    /// Attach a telemetry probe: propagated to the back-end (beat and
+    /// bus-error events) and every mid-end; the engine itself emits
+    /// [`TelemetryEvent::JobAccepted`], [`TelemetryEvent::TransferBound`]
+    /// and [`TelemetryEvent::JobDone`].
+    pub fn set_probe(&mut self, probe: Probe) {
+        self.backend.set_probe(probe.clone());
+        for m in self.mids.iter_mut() {
+            m.set_probe(probe.clone());
+        }
+        self.probe = probe;
     }
 
     /// Launch-path latency added by the configured mid-end chain (§4.3).
@@ -91,7 +104,7 @@ impl IdmaEngine {
         if !self.can_accept() {
             return false;
         }
-        self.register_job(j.job);
+        self.register_job(now, j.job);
         match self.mids.first_mut() {
             Some(m) => m.accept(now, j),
             None => {
@@ -101,10 +114,13 @@ impl IdmaEngine {
         }
     }
 
-    fn register_job(&mut self, job: u64) {
+    fn register_job(&mut self, now: Cycle, job: u64) {
         // A new job seals every older unsealed job (jobs flow in order
         // through the linear chain).
-        self.jobs.entry(job).or_default();
+        if !self.jobs.contains_key(&job) {
+            self.jobs.insert(job, JobAcct { accepted: now, ..Default::default() });
+            self.probe.emit(TelemetryEvent::JobAccepted { job, at: now });
+        }
         if self.order.back() != Some(&job) {
             self.order.push_back(job);
         }
@@ -116,6 +132,8 @@ impl IdmaEngine {
         // the accounting here rather than via submit().
         if !self.jobs.contains_key(&j.job) {
             self.order.push_back(j.job);
+            self.jobs.insert(j.job, JobAcct { accepted: now, ..Default::default() });
+            self.probe.emit(TelemetryEvent::JobAccepted { job: j.job, at: now });
         }
         let mut t = j.nd.inner;
         self.tid_next += 1;
@@ -125,6 +143,7 @@ impl IdmaEngine {
             return false;
         }
         self.tid2job.insert(t.id, j.job);
+        self.probe.emit(TelemetryEvent::TransferBound { job: j.job, tid: t.id, at: now });
         let acct = self.jobs.entry(j.job).or_default();
         acct.submitted += 1;
         // Seal all *older* jobs: their expansion is complete, since the
@@ -201,6 +220,10 @@ impl IdmaEngine {
         a.retired += 1;
         a.errors += c.errors;
         a.aborted |= c.aborted;
+        a.first_beat = min_opt(a.first_beat, min_opt(c.first_read_beat, c.first_write_beat));
+        if a.error_addr.is_none() {
+            a.error_addr = c.error_addr;
+        }
     }
 
     fn finish_jobs(&mut self, now: Cycle) {
@@ -212,15 +235,41 @@ impl IdmaEngine {
             if a.sealed && a.retired == a.submitted && a.submitted > 0 {
                 let a = self.jobs.remove(&job).unwrap();
                 self.order.pop_front();
-                self.done.push(JobDone { job, at: now, aborted: a.aborted, errors: a.errors });
+                self.probe.emit(TelemetryEvent::JobDone {
+                    job,
+                    at: now,
+                    aborted: a.aborted,
+                    errors: a.errors,
+                });
+                let status = if a.errors > 0 || a.aborted {
+                    TransferStatus::BusError {
+                        errors: a.errors,
+                        aborted: a.aborted,
+                        addr: a.error_addr,
+                    }
+                } else {
+                    TransferStatus::Ok
+                };
+                self.done.push(CompletionRecord {
+                    frontend: None,
+                    job,
+                    submitted: a.accepted,
+                    accepted: a.accepted,
+                    first_beat: a.first_beat,
+                    done: now,
+                    status,
+                });
             } else {
                 break;
             }
         }
     }
 
-    /// Drain completed front-end jobs.
-    pub fn take_done(&mut self) -> Vec<JobDone> {
+    /// Drain completed front-end jobs. For directly submitted jobs the
+    /// record's `submitted` equals `accepted` (the engine has no view of
+    /// earlier front-end queueing; [`crate::system::IdmaSystem`] fills
+    /// that in).
+    pub fn take_done(&mut self) -> Vec<CompletionRecord> {
         std::mem::take(&mut self.done)
     }
 
@@ -253,6 +302,14 @@ impl IdmaEngine {
             }
         }
         at
+    }
+}
+
+fn min_opt(a: Option<Cycle>, b: Option<Cycle>) -> Option<Cycle> {
+    match (a, b) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (x, None) => x,
+        (None, y) => y,
     }
 }
 
@@ -371,7 +428,10 @@ mod tests {
         let done = e.take_done();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].job, 1);
-        assert!(!done[0].aborted);
+        assert!(done[0].ok());
+        assert_eq!(done[0].submitted, done[0].accepted, "direct submit: no queueing view");
+        assert!(done[0].first_beat.is_some(), "a copy must have moved data");
+        assert!(done[0].first_beat.unwrap() <= done[0].done);
     }
 
     #[test]

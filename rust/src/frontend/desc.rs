@@ -9,6 +9,7 @@ use crate::mem::SparseMemory;
 use crate::midend::NdJob;
 use crate::protocol::ProtocolKind;
 use crate::sim::{Cycle, Fifo};
+use crate::telemetry::{Probe, TelemetryEvent};
 use crate::transfer::{NdTransfer, Transfer1D, TransferOpts};
 
 /// Size of one in-memory descriptor in bytes (five 64-bit words).
@@ -82,6 +83,7 @@ pub struct DescFrontend {
     last_completed: u64,
     /// Descriptors fetched (stats).
     pub fetched: u64,
+    probe: Probe,
 }
 
 impl DescFrontend {
@@ -98,6 +100,7 @@ impl DescFrontend {
             next_id: 0,
             last_completed: 0,
             fetched: 0,
+            probe: Probe::default(),
         }
     }
 
@@ -140,6 +143,7 @@ impl DescFrontend {
                     next,
                     job: NdJob::new(self.next_id, NdTransfer::d1(t)),
                 };
+                self.probe.emit(TelemetryEvent::JobSubmitted { job: self.next_id, at: now });
             }
             State::Emitting { next, job } => {
                 if self.out.can_push() {
@@ -193,6 +197,10 @@ impl super::Frontend for DescFrontend {
 
     fn tick(&mut self, now: Cycle, mem: &SparseMemory) {
         DescFrontend::tick(self, now, mem);
+    }
+
+    fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
     }
 
     fn pop(&mut self, now: Cycle) -> Option<NdJob> {

@@ -12,6 +12,7 @@
 use crate::midend::NdJob;
 use crate::protocol::ProtocolKind;
 use crate::sim::{Cycle, Fifo};
+use crate::telemetry::{Probe, TelemetryEvent};
 use crate::transfer::{NdDim, NdTransfer, Transfer1D, TransferOpts};
 
 /// RISC-V custom-0 major opcode.
@@ -88,6 +89,7 @@ pub struct InstFrontend {
     pub inst_count: u64,
     default_src: ProtocolKind,
     default_dst: ProtocolKind,
+    probe: Probe,
 }
 
 impl InstFrontend {
@@ -105,6 +107,7 @@ impl InstFrontend {
             inst_count: 0,
             default_src: ProtocolKind::Axi4,
             default_dst: ProtocolKind::Axi4,
+            probe: Probe::default(),
         }
     }
 
@@ -165,6 +168,7 @@ impl InstFrontend {
                     });
                 }
                 self.out.push(now, NdJob::new(id, nd));
+                self.probe.emit(TelemetryEvent::JobSubmitted { job: id, at: now });
                 Some(id)
             }
             Opcode::DmStat => Some(self.last_completed),
@@ -204,6 +208,10 @@ impl InstFrontend {
 impl super::Frontend for InstFrontend {
     fn name(&self) -> &'static str {
         "inst_64"
+    }
+
+    fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
     }
 
     fn pop(&mut self, now: Cycle) -> Option<NdJob> {

@@ -53,6 +53,12 @@ pub trait Frontend: Any {
     /// have no manager port and ignore it.
     fn tick(&mut self, _now: Cycle, _mem: &SparseMemory) {}
 
+    /// Attach a telemetry probe: the front-end emits
+    /// [`crate::telemetry::TelemetryEvent::JobSubmitted`] when it
+    /// launches a job. The default ignores the probe (front-ends without
+    /// launch telemetry remain valid implementations).
+    fn set_probe(&mut self, _probe: crate::telemetry::Probe) {}
+
     /// Pop the next job towards the mid-end chain / engine.
     fn pop(&mut self, now: Cycle) -> Option<NdJob>;
 

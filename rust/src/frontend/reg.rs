@@ -10,6 +10,7 @@
 use crate::midend::NdJob;
 use crate::protocol::ProtocolKind;
 use crate::sim::{Cycle, Fifo};
+use crate::telemetry::{Probe, TelemetryEvent};
 use crate::transfer::{NdDim, NdTransfer, Transfer1D, TransferOpts};
 
 /// Front-end variant: word width and hardware-supported dimensions.
@@ -103,6 +104,7 @@ pub struct RegFrontend {
     pub launches: u64,
     default_src_protocol: ProtocolKind,
     default_dst_protocol: ProtocolKind,
+    probe: Probe,
 }
 
 impl RegFrontend {
@@ -122,6 +124,7 @@ impl RegFrontend {
             launches: 0,
             default_src_protocol: ProtocolKind::Axi4,
             default_dst_protocol: ProtocolKind::Axi4,
+            probe: Probe::default(),
         }
     }
 
@@ -198,6 +201,7 @@ impl RegFrontend {
         }
         self.launches += 1;
         self.out.push(now, NdJob::new(id, nd));
+        self.probe.emit(TelemetryEvent::JobSubmitted { job: id, at: now });
         Some(id)
     }
 
@@ -265,6 +269,10 @@ impl RegFrontend {
 impl super::Frontend for RegFrontend {
     fn name(&self) -> &'static str {
         self.variant.name()
+    }
+
+    fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
     }
 
     fn pop(&mut self, now: Cycle) -> Option<NdJob> {

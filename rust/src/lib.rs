@@ -29,6 +29,7 @@ pub mod runtime;
 pub mod sim;
 pub mod system;
 pub mod systems;
+pub mod telemetry;
 pub mod transfer;
 pub mod workloads;
 

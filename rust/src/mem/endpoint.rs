@@ -143,6 +143,10 @@ pub struct Endpoint {
     pub read_beats: u64,
     /// Total write beats accepted (stats).
     pub write_beats: u64,
+    /// High-water mark of in-flight read transactions (telemetry).
+    hwm_r: usize,
+    /// High-water mark of in-flight write transactions (telemetry).
+    hwm_w: usize,
 }
 
 impl Endpoint {
@@ -162,7 +166,16 @@ impl Endpoint {
             next_w_slot: 0,
             read_beats: 0,
             write_beats: 0,
+            hwm_r: 0,
+            hwm_w: 0,
         }
+    }
+
+    /// Outstanding-transaction high-water marks `(reads, writes)` since
+    /// construction — telemetry feedback for sizing NAx against
+    /// [`MemModel::max_outstanding_r`] / `max_outstanding_w`.
+    pub fn outstanding_high_water(&self) -> (usize, usize) {
+        (self.hwm_r, self.hwm_w)
     }
 
     /// Configure port contention (probability a data-beat slot is stolen
@@ -210,6 +223,7 @@ impl Endpoint {
             error,
             owner,
         });
+        self.hwm_r = self.hwm_r.max(self.inflight_r.len());
         true
     }
 
@@ -298,6 +312,7 @@ impl Endpoint {
         let error = self.inject.as_mut().map(|i| i.faults(addr, len)).unwrap_or(false);
         self.writes.push_back(InflightWrite { addr, end: addr + len, cursor: addr, error, owner });
         self.outstanding_w += 1;
+        self.hwm_w = self.hwm_w.max(self.outstanding_w);
         true
     }
 

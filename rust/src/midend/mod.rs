@@ -69,6 +69,12 @@ pub trait MidEnd {
         1
     }
 
+    /// Attach a telemetry probe. Most mid-ends are pass-through and
+    /// ignore it; autonomous mid-ends ([`Rt3D`]) emit
+    /// [`crate::telemetry::TelemetryEvent::JobSubmitted`] for the jobs
+    /// they launch on their own.
+    fn set_probe(&mut self, _probe: crate::telemetry::Probe) {}
+
     /// Pop an output job from `port`.
     fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob>;
 

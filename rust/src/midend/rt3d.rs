@@ -6,6 +6,7 @@
 
 use super::{MidEnd, NdJob};
 use crate::sim::{Cycle, Fifo};
+use crate::telemetry::{Probe, TelemetryEvent};
 use crate::transfer::NdTransfer;
 
 /// Programming of the repeated 3D task (written via the `reg_32_rt_3d`
@@ -37,6 +38,7 @@ pub struct Rt3D {
     /// Launches that could not be queued because of back pressure
     /// (missed deadlines — a real-time health metric).
     pub overruns: u64,
+    probe: Probe,
 }
 
 /// Job-id tag for autonomous rt_3D launches.
@@ -54,6 +56,7 @@ impl Rt3D {
             bypass: Fifo::new(2),
             out: Fifo::new(4),
             overruns: 0,
+            probe: Probe::default(),
         }
     }
 
@@ -107,6 +110,7 @@ impl MidEnd for Rt3D {
                         self.next_job += 1;
                         self.launched += 1;
                         self.out.push(now, NdJob::new(job, cfg.template.clone()));
+                        self.probe.emit(TelemetryEvent::JobSubmitted { job, at: now });
                         self.next_launch += cfg.period;
                     } else if now > self.next_launch + cfg.period {
                         // A whole period elapsed without queue space.
@@ -122,6 +126,10 @@ impl MidEnd for Rt3D {
                 self.out.push(now, j);
             }
         }
+    }
+
+    fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
     }
 
     fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob> {

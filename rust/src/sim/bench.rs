@@ -8,10 +8,14 @@
 //!   binaries in seconds.
 //! * **Machine-readable results** — each bench writes a
 //!   `BENCH_<name>.json` (config, cycles simulated, wall time,
-//!   utilization) through [`BenchJson`], into `IDMA_BENCH_OUT` (or the
-//!   working directory), so future PRs can track the perf trajectory.
+//!   utilization, and a telemetry [`RunSummary`] when the bench records
+//!   one) through [`BenchJson`]. By default the file lands in the
+//!   **repository root** regardless of cargo's bench CWD;
+//!   `IDMA_BENCH_OUT` overrides the output directory.
+//!
+//! [`RunSummary`]: crate::telemetry::RunSummary
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use super::stats::Accumulator;
@@ -135,6 +139,19 @@ impl BenchJson {
             .int(&format!("{key}_iters"), iters)
     }
 
+    /// Embed a telemetry [`crate::telemetry::RunSummary`]: job counts,
+    /// payload bytes, bus errors and the observed cycle window, under
+    /// `telemetry_*` keys.
+    pub fn summary(self, s: &crate::telemetry::RunSummary) -> Self {
+        self.int("telemetry_jobs", s.jobs)
+            .int("telemetry_completed", s.completed)
+            .int("telemetry_aborted", s.aborted)
+            .int("telemetry_bytes_read", s.bytes_read)
+            .int("telemetry_bytes_written", s.bytes_written)
+            .int("telemetry_bus_errors", s.bus_errors)
+            .int("telemetry_cycles", s.cycles())
+    }
+
     /// Serialize to a JSON object string.
     pub fn to_json(&self) -> String {
         let mut out = String::from("{");
@@ -150,13 +167,21 @@ impl BenchJson {
         out
     }
 
-    /// Write `BENCH_<name>.json` and report the path. The output
-    /// directory is created if missing (cargo runs bench binaries with
-    /// the package root as CWD, so relative `IDMA_BENCH_OUT` paths may
-    /// not exist yet). Failures are printed, not fatal — a read-only
-    /// CWD must not fail a bench run.
+    /// Write `BENCH_<name>.json` and report the path. By default the
+    /// file goes to the **repository root** (the parent of the crate's
+    /// manifest directory) so every bench run leaves its record in one
+    /// predictable place regardless of cargo's CWD; `IDMA_BENCH_OUT`
+    /// overrides the directory. It is created if missing. Failures are
+    /// printed, not fatal — a read-only destination must not fail a
+    /// bench run.
     pub fn write(&self) -> Option<PathBuf> {
-        let dir = PathBuf::from(std::env::var("IDMA_BENCH_OUT").unwrap_or_else(|_| ".".into()));
+        let dir = match std::env::var("IDMA_BENCH_OUT") {
+            Ok(d) => PathBuf::from(d),
+            Err(_) => Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .map(Path::to_path_buf)
+                .unwrap_or_else(|| PathBuf::from(".")),
+        };
         if let Err(e) = std::fs::create_dir_all(&dir) {
             eprintln!("could not create {}: {e}", dir.display());
             return None;
@@ -230,6 +255,23 @@ mod tests {
         assert!(s.contains("\"util\":0.5"), "{s}");
         assert!(s.contains("\"cycles\":42"), "{s}");
         assert!(s.contains("\"cfg\":\"a\\\"b\""), "{s}");
+    }
+
+    #[test]
+    fn json_embeds_run_summary() {
+        let s = crate::telemetry::RunSummary {
+            jobs: 2,
+            completed: 2,
+            bytes_read: 64,
+            bytes_written: 64,
+            first_submit: Some(3),
+            last_done: Some(20),
+            ..Default::default()
+        };
+        let j = BenchJson::new("u").summary(&s).to_json();
+        assert!(j.contains("\"telemetry_jobs\":2"), "{j}");
+        assert!(j.contains("\"telemetry_bytes_written\":64"), "{j}");
+        assert!(j.contains("\"telemetry_cycles\":17"), "{j}");
     }
 
     #[test]

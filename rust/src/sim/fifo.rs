@@ -20,13 +20,15 @@ pub struct Fifo<T> {
     pushed: u64,
     /// Total elements ever popped.
     popped: u64,
+    /// Occupancy high-water mark (telemetry: FIFO sizing feedback).
+    hwm: usize,
 }
 
 impl<T> Fifo<T> {
     /// Create a FIFO with `depth` slots (must be ≥ 1).
     pub fn new(depth: usize) -> Self {
         assert!(depth >= 1, "FIFO depth must be at least 1");
-        Self { depth, q: VecDeque::with_capacity(depth), pushed: 0, popped: 0 }
+        Self { depth, q: VecDeque::with_capacity(depth), pushed: 0, popped: 0, hwm: 0 }
     }
 
     /// True if a push would be accepted this cycle (i.e. `ready` is high).
@@ -42,6 +44,7 @@ impl<T> Fifo<T> {
         }
         self.q.push_back((now + 1, v));
         self.pushed += 1;
+        self.hwm = self.hwm.max(self.q.len());
         true
     }
 
@@ -53,6 +56,7 @@ impl<T> Fifo<T> {
         }
         self.q.push_back((now, v));
         self.pushed += 1;
+        self.hwm = self.hwm.max(self.q.len());
         true
     }
 
@@ -97,6 +101,12 @@ impl<T> Fifo<T> {
     /// Total elements ever popped.
     pub fn total_popped(&self) -> u64 {
         self.popped
+    }
+
+    /// Occupancy high-water mark since construction (telemetry: how
+    /// deep this FIFO actually needed to be).
+    pub fn high_water(&self) -> usize {
+        self.hwm
     }
 
     /// Front element regardless of visibility (event-scheduling
@@ -171,6 +181,18 @@ mod tests {
         assert_eq!(f.front(), Some(&3), "front ignores visibility");
         assert_eq!(f.next_visible_at(), Some(11));
         assert!(f.peek(10).is_none(), "peek still honours visibility");
+    }
+
+    #[test]
+    fn high_water_tracks_peak_occupancy() {
+        let mut f = Fifo::new(4);
+        assert_eq!(f.high_water(), 0);
+        assert!(f.push(0, 1u8));
+        assert!(f.push(0, 2));
+        assert_eq!(f.pop(1), Some(1));
+        assert_eq!(f.pop(1), Some(2));
+        assert!(f.push(1, 3));
+        assert_eq!(f.high_water(), 2, "peak was two, current occupancy one");
     }
 
     #[test]

@@ -13,7 +13,8 @@ use crate::engine::IdmaEngine;
 use crate::frontend::{write_descriptor, DescFlags, DescFrontend};
 use crate::mem::{Endpoint, MemModel};
 use crate::protocol::ProtocolKind;
-use crate::system::IdmaSystem;
+use crate::system::{IdmaSystem, IdmaSystemBuilder};
+use crate::telemetry::SharedSink;
 
 /// Cheshire system parameters.
 #[derive(Debug, Clone)]
@@ -74,7 +75,10 @@ impl Cheshire {
         // contiguous descriptors prefetch at port throughput.
         let mut fe = DescFrontend::new(2 + 64 / self.dw);
         fe.fetch_throughput = (40 / self.dw).max(1);
-        IdmaSystem::new(engine, mems).with_frontend(Box::new(fe))
+        IdmaSystemBuilder::new(engine)
+            .endpoints(mems)
+            .frontend(Box::new(fe))
+            .build()
     }
 
     /// Copy `n` transfers of `len` bytes each through the full desc_64
@@ -82,7 +86,22 @@ impl Cheshire {
     /// engine's bus utilization. Data integrity is asserted. The run is
     /// event-driven through [`IdmaSystem::run_until_idle`].
     pub fn measure_idma(&self, len: u64, n: u64) -> f64 {
+        self.measure_idma_sinked(len, n, None)
+    }
+
+    /// [`Cheshire::measure_idma`] with a telemetry sink attached to the
+    /// whole stack — the sink observes every lifecycle event of the run
+    /// (per-descriptor submit/accept/beat/done), e.g. for Chrome-trace
+    /// export via [`crate::telemetry::Recorder::chrome_trace`].
+    pub fn measure_idma_traced(&self, len: u64, n: u64, sink: SharedSink) -> f64 {
+        self.measure_idma_sinked(len, n, Some(sink))
+    }
+
+    fn measure_idma_sinked(&self, len: u64, n: u64, sink: Option<SharedSink>) -> f64 {
         let mut sys = self.system();
+        if let Some(s) = sink {
+            sys.attach_sink(s);
+        }
         // Source data.
         let total = len * n;
         let src_base = 0x8000_0000u64;
@@ -107,7 +126,8 @@ impl Cheshire {
                 DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
             );
         }
-        assert!(sys.frontend_mut::<DescFrontend>(0).launch_chain(0, desc_base));
+        let fe = sys.try_frontend_mut::<DescFrontend>(0).expect("cheshire has one desc_64");
+        assert!(fe.launch_chain(0, desc_base));
         sys.run_until_idle();
         assert_eq!(sys.frontend_dyn(0).status(), n, "all descriptors completed");
         // Byte exactness end-to-end.
@@ -168,6 +188,22 @@ mod tests {
         for p in c.fig8() {
             assert!(p.idma <= p.limit + 1e-9, "len {}: {} > {}", p.len, p.idma, p.limit);
         }
+    }
+
+    #[test]
+    fn traced_measurement_records_every_descriptor() {
+        use crate::telemetry::{shared, Recorder};
+        let c = Cheshire::default();
+        let rec = shared(Recorder::new());
+        let u = c.measure_idma_traced(256, 8, rec.clone());
+        let plain = c.measure_idma(256, 8);
+        assert_eq!(u, plain, "telemetry must not perturb the measurement");
+        let rec = rec.borrow();
+        let s = rec.summary();
+        assert_eq!(s.jobs, 8, "one trace per descriptor");
+        assert_eq!(s.completed, 8);
+        assert_eq!(s.bytes_read, 256 * 8);
+        assert_eq!(s.bytes_written, 256 * 8);
     }
 
     #[test]

@@ -144,7 +144,8 @@ impl Manticore {
                 // the system keeps ticking until the queue frees.
                 loop {
                     let now = sys.now();
-                    if sys.frontend_mut::<InstFrontend>(0).execute(now, d, r1, r2).is_some() {
+                    let fe = sys.try_frontend_mut::<InstFrontend>(0).expect("inst_64 front-end");
+                    if fe.execute(now, d, r1, r2).is_some() {
                         break;
                     }
                     sys.step();
@@ -152,7 +153,8 @@ impl Manticore {
                 sys.step(); // one instruction per cycle
             }
         }
-        let launch_insts = sys.frontend::<InstFrontend>(0).inst_count;
+        let launch_insts =
+            sys.try_frontend::<InstFrontend>(0).expect("inst_64 front-end").inst_count;
         // Drain the staged transfers event-driven.
         let end = sys.run_until_idle();
 

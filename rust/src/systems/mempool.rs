@@ -202,6 +202,15 @@ impl MemPool {
 }
 
 impl DistributedIdma {
+    /// Attach a telemetry probe to every distributed back-end: beat and
+    /// error events from all regions interleave on the shared sink, each
+    /// tagged with its back-end's transfer IDs.
+    pub fn set_probe(&mut self, probe: crate::telemetry::Probe) {
+        for be in self.backends.iter_mut() {
+            be.set_probe(probe.clone());
+        }
+    }
+
     /// Total area of the distributed engine's back-ends + mid-ends.
     pub fn area_ge(&self) -> f64 {
         let be: f64 = self.backends.iter().map(|b| synthesize_area(&b.cfg).total()).sum();

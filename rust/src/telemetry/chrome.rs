@@ -1,0 +1,170 @@
+//! Chrome `trace_events` exporter: turn a [`Recorder`] into a JSON
+//! document loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+//!
+//! Layout: process 1 ("idma jobs") has one track per launch lane —
+//! `direct` submissions, each front-end, and autonomous `rt_3D` jobs —
+//! with up to three spans per job: `queued` (submit → accept), `launch`
+//! (accept → first beat) and `transfer` (first beat → done). Process 2
+//! ("idma ports") has one track per engine port carrying one-cycle
+//! `read`/`write` beat events and `bus_error` instants. One simulation
+//! cycle maps to one trace-time unit.
+
+use std::collections::BTreeSet;
+
+use super::record::Recorder;
+use super::TelemetryEvent;
+use crate::midend::RT_JOB_BIT;
+use crate::system::{FE_JOB_MASK, FE_TAG_SHIFT};
+
+/// Track ID used for autonomous `rt_3D` jobs (kept clear of any
+/// plausible front-end index).
+const RT_LANE: u64 = 0xFFFF;
+
+/// Launch lane (trace `tid`) of a facade-tagged job ID.
+fn lane(job: u64) -> u64 {
+    if job & RT_JOB_BIT != 0 {
+        RT_LANE
+    } else {
+        job >> FE_TAG_SHIFT
+    }
+}
+
+/// Human-readable name of a launch lane.
+fn lane_name(lane: u64) -> String {
+    match lane {
+        RT_LANE => "rt_3D".to_string(),
+        0 => "direct".to_string(),
+        n => format!("frontend {}", n - 1),
+    }
+}
+
+/// Job ID in the launching component's local namespace.
+fn local_id(job: u64) -> u64 {
+    if job & RT_JOB_BIT != 0 {
+        job & !RT_JOB_BIT
+    } else {
+        job & FE_JOB_MASK
+    }
+}
+
+impl Recorder {
+    /// Render the recorded run as a Chrome `trace_events` JSON string
+    /// (`{"traceEvents": [...]}` object form).
+    pub fn chrome_trace(&self) -> String {
+        let mut evs: Vec<String> = Vec::new();
+
+        // Metadata: name the two processes and every used track.
+        let lanes: BTreeSet<u64> = self.jobs().map(|t| lane(t.job)).collect();
+        evs.push(r#"{"name":"process_name","ph":"M","pid":1,"tid":0,"args":{"name":"idma jobs"}}"#.to_string());
+        evs.push(r#"{"name":"process_name","ph":"M","pid":2,"tid":0,"args":{"name":"idma ports"}}"#.to_string());
+        for l in &lanes {
+            evs.push(format!(
+                r#"{{"name":"thread_name","ph":"M","pid":1,"tid":{l},"args":{{"name":"{}"}}}}"#,
+                lane_name(*l)
+            ));
+        }
+        for (p, _) in self.ports() {
+            evs.push(format!(
+                r#"{{"name":"thread_name","ph":"M","pid":2,"tid":{p},"args":{{"name":"port {p}"}}}}"#
+            ));
+        }
+
+        // Per-job lifecycle spans.
+        for t in self.jobs() {
+            let (tid, job) = (lane(t.job), local_id(t.job));
+            let mut span = |name: &str, from: Option<u64>, to: Option<u64>| {
+                let (Some(a), Some(b)) = (from, to) else { return };
+                evs.push(format!(
+                    r#"{{"name":"{name}","ph":"X","ts":{a},"dur":{},"pid":1,"tid":{tid},"args":{{"job":{job},"bytes_read":{},"bytes_written":{},"errors":{},"aborted":{}}}}}"#,
+                    b.saturating_sub(a),
+                    t.bytes_read,
+                    t.bytes_written,
+                    t.errors,
+                    t.aborted,
+                ));
+            };
+            span("queued", t.submitted, t.accepted.or(t.first_beat));
+            span("launch", t.accepted, t.first_beat.or(t.done));
+            span("transfer", t.first_beat, t.done);
+        }
+
+        // Per-port beat events and bus-error instants from the raw log.
+        for ev in self.events() {
+            match *ev {
+                TelemetryEvent::ReadBeat { tid, port, bytes, at } => {
+                    evs.push(format!(
+                        r#"{{"name":"read","ph":"X","ts":{at},"dur":1,"pid":2,"tid":{port},"args":{{"tid":{tid},"bytes":{bytes}}}}}"#
+                    ));
+                }
+                TelemetryEvent::WriteBeat { tid, port, bytes, at, .. } => {
+                    evs.push(format!(
+                        r#"{{"name":"write","ph":"X","ts":{at},"dur":1,"pid":2,"tid":{port},"args":{{"tid":{tid},"bytes":{bytes}}}}}"#
+                    ));
+                }
+                TelemetryEvent::BusError { tid, addr, is_read, at } => {
+                    evs.push(format!(
+                        r#"{{"name":"bus_error","ph":"i","s":"g","ts":{at},"pid":2,"tid":0,"args":{{"tid":{tid},"addr":{addr},"is_read":{is_read}}}}}"#
+                    ));
+                }
+                _ => {}
+            }
+        }
+
+        let mut out = String::from("{\"traceEvents\":[\n");
+        out.push_str(&evs.join(",\n"));
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write [`Recorder::chrome_trace`] to `path`.
+    pub fn write_chrome_trace<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_trace())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TelemetryEvent, TelemetrySink};
+    use super::*;
+
+    #[test]
+    fn trace_has_spans_and_tracks() {
+        let mut r = Recorder::new();
+        let job = 3 | (1 << FE_TAG_SHIFT); // frontend 0, local id 3
+        for ev in [
+            TelemetryEvent::JobSubmitted { job, at: 2 },
+            TelemetryEvent::JobAccepted { job, at: 4 },
+            TelemetryEvent::TransferBound { job, tid: 9, at: 5 },
+            TelemetryEvent::ReadBeat { tid: 9, port: 0, bytes: 8, at: 7 },
+            TelemetryEvent::WriteBeat { tid: 9, port: 1, bytes: 8, last: true, at: 9 },
+            TelemetryEvent::JobDone { job, at: 12, aborted: false, errors: 0 },
+        ] {
+            r.event(&ev);
+        }
+        let s = r.chrome_trace();
+        assert!(s.starts_with("{\"traceEvents\":["));
+        assert!(s.trim_end().ends_with("]}"));
+        for needle in [
+            r#""name":"queued""#,
+            r#""name":"launch""#,
+            r#""name":"transfer""#,
+            r#""name":"frontend 0""#,
+            r#""name":"port 0""#,
+            r#""name":"port 1""#,
+            r#""job":3"#,
+        ] {
+            assert!(s.contains(needle), "missing {needle} in {s}");
+        }
+    }
+
+    #[test]
+    fn rt_jobs_get_their_own_lane() {
+        let mut r = Recorder::new();
+        let job = RT_JOB_BIT | 7;
+        r.event(&TelemetryEvent::JobAccepted { job, at: 0 });
+        r.event(&TelemetryEvent::JobDone { job, at: 5, aborted: false, errors: 0 });
+        let s = r.chrome_trace();
+        assert!(s.contains(r#""name":"rt_3D""#));
+    }
+}

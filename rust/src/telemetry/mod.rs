@@ -1,0 +1,328 @@
+//! Full-path **telemetry**: per-job lifecycle tracing across the
+//! frontend → mid-end → back-end → endpoint path.
+//!
+//! The paper's whole evaluation (Figs. 8, 11, 14; §3.1–§3.4) observes
+//! the DMAE from the outside — bus utilization, transfer latency,
+//! per-system cycle counts. This module makes that observation a
+//! first-class subsystem: a lightweight [`Probe`] is installed on
+//! [`crate::system::IdmaSystem`] (or standalone on
+//! [`crate::engine::IdmaEngine`] / [`crate::backend::Backend`]) and
+//! forwards lifecycle events to a user-supplied [`TelemetrySink`]:
+//!
+//! * job **submitted** (front-end launch),
+//! * job **accepted** (engine descriptor-queue entry),
+//! * transfer **bound** (mid-end decomposition issued a 1D transfer to
+//!   the back-end),
+//! * per-port **read/write beats** (cycle-resolved, with payload bytes),
+//! * **bus errors** (with the failing address), and
+//! * job **done**.
+//!
+//! The built-in [`Recorder`] sink aggregates these into per-job
+//! [`JobTrace`]s and per-port counters and can export a Chrome
+//! `trace_events` JSON (Perfetto / `chrome://tracing`) or a flat
+//! [`RunSummary`] for bench output.
+//!
+//! **Zero-cost when detached**: a [`Probe`] with no sink is a `None`
+//! check on the hot paths and nothing else — no event is constructed,
+//! no clock is read, and no simulation state changes. The event-driven
+//! and per-cycle execution modes stay cycle- and byte-identical whether
+//! or not a sink is attached (pinned by `tests/telemetry.rs`).
+
+mod chrome;
+mod record;
+
+pub use record::{JobTrace, PortCounter, Recorder, RunSummary};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::sim::Cycle;
+
+/// One telemetry event, emitted by a [`Probe`] as the simulation runs.
+///
+/// Job-carrying events use the *facade* job ID namespace: when a probe
+/// is installed through [`crate::system::IdmaSystem`], front-end-local
+/// IDs are tagged with the owning front-end index (see
+/// [`crate::system::FE_TAG_SHIFT`]), so one sink can observe several
+/// front-ends without collisions. Beat-level events carry the back-end
+/// transfer ID (`tid`); the [`TelemetryEvent::TransferBound`] event
+/// links the two namespaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryEvent {
+    /// A front-end launched a job (register `TRANSFER_ID` read,
+    /// descriptor fetched, `dmcpy` executed, or rt_3D timer expiry).
+    JobSubmitted {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Launch cycle.
+        at: Cycle,
+    },
+    /// The engine accepted the job into its descriptor path.
+    JobAccepted {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Acceptance cycle.
+        at: Cycle,
+    },
+    /// The mid-end chain (or the direct path) issued a 1D transfer of
+    /// this job to the back-end under transfer ID `tid`.
+    TransferBound {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Back-end transfer ID the beats of this transfer will carry.
+        tid: u64,
+        /// Issue cycle.
+        at: Cycle,
+    },
+    /// One read data beat arrived from an endpoint.
+    ReadBeat {
+        /// Back-end transfer ID.
+        tid: u64,
+        /// Engine port index the beat used.
+        port: usize,
+        /// Payload bytes carried by the beat.
+        bytes: u64,
+        /// Beat cycle.
+        at: Cycle,
+    },
+    /// One write data beat was sent to an endpoint.
+    WriteBeat {
+        /// Back-end transfer ID.
+        tid: u64,
+        /// Engine port index the beat used.
+        port: usize,
+        /// Payload bytes carried by the beat.
+        bytes: u64,
+        /// Last beat of the last burst of its transfer.
+        last: bool,
+        /// Beat cycle.
+        at: Cycle,
+    },
+    /// An endpoint reported a bus error.
+    BusError {
+        /// Back-end transfer ID.
+        tid: u64,
+        /// Failing address.
+        addr: u64,
+        /// Error on the read (manager) side; `false` = write side.
+        is_read: bool,
+        /// Cycle the error response retired.
+        at: Cycle,
+    },
+    /// The engine retired the whole job.
+    JobDone {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Retire cycle.
+        at: Cycle,
+        /// The error handler aborted the job.
+        aborted: bool,
+        /// Bus errors encountered across the job's transfers.
+        errors: u32,
+    },
+}
+
+/// Receiver of [`TelemetryEvent`]s. Implemented by [`Recorder`]; user
+/// code can implement it for custom online analysis (histograms,
+/// assertions, streaming writers).
+pub trait TelemetrySink {
+    /// Observe one event. Called in simulation order; `at` fields are
+    /// non-decreasing per component but events from different pipeline
+    /// stages of the same cycle arrive in stage order, not ID order.
+    fn event(&mut self, ev: &TelemetryEvent);
+}
+
+/// Shared handle to a sink: cheap to clone into every component probe.
+pub type SharedSink = Rc<RefCell<dyn TelemetrySink>>;
+
+/// Convenience: wrap a sink for [`Probe::attached`] /
+/// [`crate::system::IdmaSystem::attach_sink`].
+pub fn shared<S: TelemetrySink + 'static>(sink: S) -> Rc<RefCell<S>> {
+    Rc::new(RefCell::new(sink))
+}
+
+/// The per-component emission hook. Detached by default
+/// ([`Probe::none`], also `Default`), in which case every [`Probe::emit`]
+/// is a single branch; [`Probe::active`] lets hot paths skip event
+/// construction entirely.
+#[derive(Clone, Default)]
+pub struct Probe {
+    sink: Option<SharedSink>,
+    tag: u64,
+}
+
+impl std::fmt::Debug for Probe {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Probe")
+            .field("attached", &self.sink.is_some())
+            .field("tag", &format_args!("{:#x}", self.tag))
+            .finish()
+    }
+}
+
+impl Probe {
+    /// A detached probe (no sink; all emissions are no-ops).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// A probe forwarding to `sink`.
+    pub fn attached(sink: SharedSink) -> Self {
+        Self { sink: Some(sink), tag: 0 }
+    }
+
+    /// Namespace job IDs: the tag is OR-ed into the `job` field of every
+    /// job-carrying event this probe emits. The facade uses this to map
+    /// front-end-local IDs into its `(frontend + 1) <<`
+    /// [`crate::system::FE_TAG_SHIFT`] namespace.
+    pub fn with_tag(mut self, tag: u64) -> Self {
+        self.tag = tag;
+        self
+    }
+
+    /// True when a sink is attached. Hot paths (per-beat sites) guard
+    /// event construction with this so the detached case stays free.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Emit one event (applying the job-ID tag). No-op when detached.
+    #[inline]
+    pub fn emit(&self, ev: TelemetryEvent) {
+        let Some(sink) = &self.sink else { return };
+        let mut ev = ev;
+        if self.tag != 0 {
+            match &mut ev {
+                TelemetryEvent::JobSubmitted { job, .. }
+                | TelemetryEvent::JobAccepted { job, .. }
+                | TelemetryEvent::TransferBound { job, .. }
+                | TelemetryEvent::JobDone { job, .. } => *job |= self.tag,
+                _ => {}
+            }
+        }
+        sink.borrow_mut().event(&ev);
+    }
+}
+
+/// Final status of a completed job (the explicit alternative to the old
+/// bare-ID completion signals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferStatus {
+    /// All beats retired without an error response.
+    Ok,
+    /// At least one endpoint returned an error response.
+    BusError {
+        /// Error responses observed (replays and continues included).
+        errors: u32,
+        /// The error handler aborted the job (remaining bursts dropped).
+        aborted: bool,
+        /// First failing address, when the error handler captured one.
+        addr: Option<u64>,
+    },
+}
+
+/// Unified completion record: what [`crate::engine::IdmaEngine::take_done`]
+/// and [`crate::system::IdmaSystem::take_done`] return, and what the
+/// telemetry subsystem's per-job traces mirror. Replaces the old
+/// `JobDone` / `SystemDone` pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompletionRecord {
+    /// Index of the front-end that launched the job (facade runs only;
+    /// `None` for directly submitted or mid-end-born jobs).
+    pub frontend: Option<usize>,
+    /// Job ID in the caller's namespace: front-end-local when
+    /// `frontend` is `Some`, otherwise as submitted.
+    pub job: u64,
+    /// Cycle the job entered the control plane (front-end hand-off /
+    /// `submit` call). Equals `accepted` for engine-standalone runs and
+    /// mid-end-born jobs.
+    pub submitted: Cycle,
+    /// Cycle the engine accepted the job into its descriptor path.
+    pub accepted: Cycle,
+    /// Cycle of the job's first data beat (`None` if the job moved no
+    /// data, e.g. a zero-length transfer).
+    pub first_beat: Option<Cycle>,
+    /// Cycle the last write response retired and the job completed.
+    pub done: Cycle,
+    /// Final status (ok / bus error with failing address).
+    pub status: TransferStatus,
+}
+
+impl CompletionRecord {
+    /// True when the job completed without bus errors or abort.
+    pub fn ok(&self) -> bool {
+        matches!(self.status, TransferStatus::Ok)
+    }
+
+    /// Bus errors encountered (0 when [`CompletionRecord::ok`]).
+    pub fn errors(&self) -> u32 {
+        match self.status {
+            TransferStatus::Ok => 0,
+            TransferStatus::BusError { errors, .. } => errors,
+        }
+    }
+
+    /// True when the error handler aborted the job.
+    pub fn aborted(&self) -> bool {
+        match self.status {
+            TransferStatus::Ok => false,
+            TransferStatus::BusError { aborted, .. } => aborted,
+        }
+    }
+
+    /// First failing address, when captured.
+    pub fn error_addr(&self) -> Option<u64> {
+        match self.status {
+            TransferStatus::Ok => None,
+            TransferStatus::BusError { addr, .. } => addr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detached_probe_is_inert() {
+        let p = Probe::none();
+        assert!(!p.active());
+        // Must not panic or allocate a sink.
+        p.emit(TelemetryEvent::JobSubmitted { job: 1, at: 0 });
+    }
+
+    #[test]
+    fn probe_tags_job_events_only() {
+        let rec = shared(Recorder::new());
+        let p = Probe::attached(rec.clone()).with_tag(1 << 48);
+        p.emit(TelemetryEvent::JobSubmitted { job: 3, at: 5 });
+        p.emit(TelemetryEvent::ReadBeat { tid: 7, port: 0, bytes: 8, at: 6 });
+        let r = rec.borrow();
+        let evs = r.events();
+        assert_eq!(evs[0], TelemetryEvent::JobSubmitted { job: 3 | (1 << 48), at: 5 });
+        assert_eq!(evs[1], TelemetryEvent::ReadBeat { tid: 7, port: 0, bytes: 8, at: 6 });
+    }
+
+    #[test]
+    fn completion_record_status_accessors() {
+        let mut r = CompletionRecord {
+            frontend: None,
+            job: 1,
+            submitted: 0,
+            accepted: 0,
+            first_beat: Some(2),
+            done: 9,
+            status: TransferStatus::Ok,
+        };
+        assert!(r.ok());
+        assert_eq!(r.errors(), 0);
+        assert!(!r.aborted());
+        assert_eq!(r.error_addr(), None);
+        r.status = TransferStatus::BusError { errors: 2, aborted: true, addr: Some(0x40) };
+        assert!(!r.ok());
+        assert_eq!(r.errors(), 2);
+        assert!(r.aborted());
+        assert_eq!(r.error_addr(), Some(0x40));
+    }
+}

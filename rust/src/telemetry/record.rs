@@ -1,0 +1,302 @@
+//! The built-in aggregating sink: per-job traces, per-port counters,
+//! and the flat [`RunSummary`] record the benches emit.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::{TelemetryEvent, TelemetrySink};
+use crate::sim::Cycle;
+
+/// Lifecycle trace of one job as observed by a [`Recorder`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct JobTrace {
+    /// Facade-tagged job ID.
+    pub job: u64,
+    /// Front-end launch cycle ([`TelemetryEvent::JobSubmitted`]).
+    pub submitted: Option<Cycle>,
+    /// Engine acceptance cycle ([`TelemetryEvent::JobAccepted`]).
+    pub accepted: Option<Cycle>,
+    /// First data beat (read or write) attributed to the job.
+    pub first_beat: Option<Cycle>,
+    /// Retire cycle ([`TelemetryEvent::JobDone`]).
+    pub done: Option<Cycle>,
+    /// Payload bytes read on behalf of this job (replayed beats count).
+    pub bytes_read: u64,
+    /// Payload bytes written on behalf of this job.
+    pub bytes_written: u64,
+    /// Bus errors reported at completion.
+    pub errors: u32,
+    /// The error handler aborted this job.
+    pub aborted: bool,
+}
+
+/// Cycle-resolved per-port beat counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PortCounter {
+    /// Read data beats observed on this port.
+    pub read_beats: u64,
+    /// Payload bytes those read beats carried.
+    pub read_bytes: u64,
+    /// Write data beats observed on this port.
+    pub write_beats: u64,
+    /// Payload bytes those write beats carried.
+    pub write_bytes: u64,
+    /// Cycle of the first beat seen on this port.
+    pub first_beat: Option<Cycle>,
+    /// Cycle of the last beat seen on this port.
+    pub last_beat: Option<Cycle>,
+}
+
+/// Flat run summary — the record every bench embeds in its
+/// `BENCH_<name>.json` (via
+/// [`crate::sim::bench::BenchJson::summary`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunSummary {
+    /// Jobs observed (submitted, accepted or completed).
+    pub jobs: u64,
+    /// Jobs that retired.
+    pub completed: u64,
+    /// Jobs the error handler aborted.
+    pub aborted: u64,
+    /// Total payload bytes read.
+    pub bytes_read: u64,
+    /// Total payload bytes written.
+    pub bytes_written: u64,
+    /// Total bus errors observed.
+    pub bus_errors: u64,
+    /// Earliest submit cycle.
+    pub first_submit: Option<Cycle>,
+    /// Latest retire cycle.
+    pub last_done: Option<Cycle>,
+}
+
+impl RunSummary {
+    /// Wall-clock cycles from first submit to last completion.
+    pub fn cycles(&self) -> u64 {
+        match (self.first_submit, self.last_done) {
+            (Some(a), Some(b)) => b.saturating_sub(a),
+            _ => 0,
+        }
+    }
+
+    /// Write-side bus utilization in `[0,1]` over the observed window,
+    /// for a `bus_bytes`-wide data path (the Figs. 8/14 metric).
+    pub fn bus_utilization(&self, bus_bytes: u64) -> f64 {
+        let c = self.cycles();
+        if c == 0 || bus_bytes == 0 {
+            return 0.0;
+        }
+        self.bytes_written as f64 / (c * bus_bytes) as f64
+    }
+}
+
+/// The built-in [`TelemetrySink`]: aggregates events into per-job
+/// [`JobTrace`]s and per-port [`PortCounter`]s, keeps the raw event log
+/// (for the Chrome exporter), and folds everything into a
+/// [`RunSummary`].
+///
+/// Deterministic: iteration orders are `BTreeMap`-sorted, so two
+/// cycle-identical runs produce identical recorders — the differential
+/// telemetry tests rely on this.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Recorder {
+    jobs: BTreeMap<u64, JobTrace>,
+    ports: BTreeMap<usize, PortCounter>,
+    tid2job: HashMap<u64, u64>,
+    events: Vec<TelemetryEvent>,
+    bus_errors: u64,
+}
+
+impl Recorder {
+    /// Create an empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Per-job traces, ordered by (tagged) job ID.
+    pub fn jobs(&self) -> impl Iterator<Item = &JobTrace> {
+        self.jobs.values()
+    }
+
+    /// Trace of one (tagged) job ID.
+    pub fn job(&self, job: u64) -> Option<&JobTrace> {
+        self.jobs.get(&job)
+    }
+
+    /// Per-port counters, ordered by port index.
+    pub fn ports(&self) -> impl Iterator<Item = (usize, &PortCounter)> {
+        self.ports.iter().map(|(&p, c)| (p, c))
+    }
+
+    /// Raw event log in arrival order.
+    pub fn events(&self) -> &[TelemetryEvent] {
+        &self.events
+    }
+
+    /// Total bus errors observed.
+    pub fn bus_errors(&self) -> u64 {
+        self.bus_errors
+    }
+
+    /// Fold the recorded run into a flat [`RunSummary`].
+    pub fn summary(&self) -> RunSummary {
+        let mut s = RunSummary { jobs: self.jobs.len() as u64, bus_errors: self.bus_errors, ..Default::default() };
+        for t in self.jobs.values() {
+            if t.done.is_some() {
+                s.completed += 1;
+            }
+            if t.aborted {
+                s.aborted += 1;
+            }
+            s.bytes_read += t.bytes_read;
+            s.bytes_written += t.bytes_written;
+            s.first_submit = min_opt(s.first_submit, t.submitted.or(t.accepted));
+            s.last_done = max_opt(s.last_done, t.done);
+        }
+        s
+    }
+
+    fn trace(&mut self, job: u64) -> &mut JobTrace {
+        self.jobs.entry(job).or_insert_with(|| JobTrace { job, ..Default::default() })
+    }
+}
+
+fn min_opt(a: Option<Cycle>, b: Option<Cycle>) -> Option<Cycle> {
+    match (a, b) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+fn max_opt(a: Option<Cycle>, b: Option<Cycle>) -> Option<Cycle> {
+    match (a, b) {
+        (Some(a), Some(b)) => Some(a.max(b)),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+impl TelemetrySink for Recorder {
+    fn event(&mut self, ev: &TelemetryEvent) {
+        self.events.push(*ev);
+        match *ev {
+            TelemetryEvent::JobSubmitted { job, at } => {
+                let t = self.trace(job);
+                if t.submitted.is_none() {
+                    t.submitted = Some(at);
+                }
+            }
+            TelemetryEvent::JobAccepted { job, at } => {
+                let t = self.trace(job);
+                if t.accepted.is_none() {
+                    t.accepted = Some(at);
+                }
+            }
+            TelemetryEvent::TransferBound { job, tid, .. } => {
+                self.tid2job.insert(tid, job);
+                self.trace(job);
+            }
+            TelemetryEvent::ReadBeat { tid, port, bytes, at } => {
+                let c = self.ports.entry(port).or_default();
+                c.read_beats += 1;
+                c.read_bytes += bytes;
+                c.first_beat = min_opt(c.first_beat, Some(at));
+                c.last_beat = max_opt(c.last_beat, Some(at));
+                if let Some(&job) = self.tid2job.get(&tid) {
+                    let t = self.trace(job);
+                    t.bytes_read += bytes;
+                    if t.first_beat.is_none() {
+                        t.first_beat = Some(at);
+                    }
+                }
+            }
+            TelemetryEvent::WriteBeat { tid, port, bytes, at, .. } => {
+                let c = self.ports.entry(port).or_default();
+                c.write_beats += 1;
+                c.write_bytes += bytes;
+                c.first_beat = min_opt(c.first_beat, Some(at));
+                c.last_beat = max_opt(c.last_beat, Some(at));
+                if let Some(&job) = self.tid2job.get(&tid) {
+                    let t = self.trace(job);
+                    t.bytes_written += bytes;
+                    if t.first_beat.is_none() {
+                        t.first_beat = Some(at);
+                    }
+                }
+            }
+            TelemetryEvent::BusError { .. } => {
+                self.bus_errors += 1;
+            }
+            TelemetryEvent::JobDone { job, at, aborted, errors } => {
+                let t = self.trace(job);
+                t.done = Some(at);
+                t.aborted = aborted;
+                t.errors = errors;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(rec: &mut Recorder, evs: &[TelemetryEvent]) {
+        for ev in evs {
+            rec.event(ev);
+        }
+    }
+
+    #[test]
+    fn lifecycle_aggregates_into_job_trace() {
+        let mut r = Recorder::new();
+        feed(
+            &mut r,
+            &[
+                TelemetryEvent::JobSubmitted { job: 1, at: 2 },
+                TelemetryEvent::JobAccepted { job: 1, at: 4 },
+                TelemetryEvent::TransferBound { job: 1, tid: 10, at: 5 },
+                TelemetryEvent::ReadBeat { tid: 10, port: 0, bytes: 8, at: 9 },
+                TelemetryEvent::WriteBeat { tid: 10, port: 0, bytes: 8, last: true, at: 12 },
+                TelemetryEvent::JobDone { job: 1, at: 15, aborted: false, errors: 0 },
+            ],
+        );
+        let t = r.job(1).expect("trace exists");
+        assert_eq!(t.submitted, Some(2));
+        assert_eq!(t.accepted, Some(4));
+        assert_eq!(t.first_beat, Some(9));
+        assert_eq!(t.done, Some(15));
+        assert_eq!(t.bytes_read, 8);
+        assert_eq!(t.bytes_written, 8);
+        let (_, c) = r.ports().next().unwrap();
+        assert_eq!((c.read_beats, c.write_beats), (1, 1));
+        assert_eq!(c.first_beat, Some(9));
+        assert_eq!(c.last_beat, Some(12));
+        let s = r.summary();
+        assert_eq!(s.jobs, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.cycles(), 13);
+        assert!(s.bus_utilization(8) > 0.0 && s.bus_utilization(8) <= 1.0);
+    }
+
+    #[test]
+    fn bus_errors_counted() {
+        let mut r = Recorder::new();
+        feed(
+            &mut r,
+            &[
+                TelemetryEvent::BusError { tid: 1, addr: 0x40, is_read: true, at: 3 },
+                TelemetryEvent::BusError { tid: 1, addr: 0x48, is_read: false, at: 5 },
+            ],
+        );
+        assert_eq!(r.bus_errors(), 2);
+        assert_eq!(r.summary().bus_errors, 2);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Recorder::new().summary();
+        assert_eq!(s.cycles(), 0);
+        assert_eq!(s.bus_utilization(8), 0.0);
+    }
+}

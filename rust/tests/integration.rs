@@ -875,7 +875,7 @@ fn system_reg_driven_event_matches_exact() {
         let mut data = vec![0u8; 1 << 13];
         XorShift64::new(0x2E6).fill(&mut data);
         sys.mems[0].data.write(0x1000, &data);
-        let fe = sys.frontend_mut::<RegFrontend>(i);
+        let fe = sys.try_frontend_mut::<RegFrontend>(i).unwrap();
         fe.write_reg(0, regs::SRC, 0x1000);
         fe.write_reg(0, regs::DST, 0x2_0000);
         fe.write_reg(0, regs::LEN, 96);
@@ -928,7 +928,7 @@ fn system_desc_chain_event_matches_exact_and_skips() {
                 DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
             );
         }
-        assert!(sys.frontend_mut::<DescFrontend>(i).launch_chain(0, 0x100));
+        assert!(sys.try_frontend_mut::<DescFrontend>(i).unwrap().launch_chain(0, 0x100));
         sys
     };
     let (end, ticks) =
@@ -951,7 +951,7 @@ fn system_inst_driven_event_matches_exact() {
         let mut data = vec![0u8; 1 << 13];
         XorShift64::new(0x157).fill(&mut data);
         sys.mems[0].data.write(0x1000, &data);
-        let fe = sys.frontend_mut::<InstFrontend>(i);
+        let fe = sys.try_frontend_mut::<InstFrontend>(i).unwrap();
         let x = |op, r1, r2| {
             let d = decode(encode(op, 1, 2, 3)).unwrap();
             (d, r1, r2)
@@ -998,7 +998,7 @@ fn system_mixed_frontends_event_matches_exact() {
         let mut data = vec![0u8; 1 << 13];
         XorShift64::new(0x3A3).fill(&mut data);
         sys.mems[0].data.write(0x1000, &data);
-        let fe = sys.frontend_mut::<RegFrontend>(reg);
+        let fe = sys.try_frontend_mut::<RegFrontend>(reg).unwrap();
         fe.write_reg(0, regs::SRC, 0x1000);
         fe.write_reg(0, regs::DST, 0x4_0000);
         fe.write_reg(0, regs::LEN, 700);
@@ -1012,8 +1012,8 @@ fn system_mixed_frontends_event_matches_exact() {
             900,
             DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
         );
-        assert!(sys.frontend_mut::<DescFrontend>(desc).launch_chain(0, 0x80));
-        let fe = sys.frontend_mut::<InstFrontend>(inst);
+        assert!(sys.try_frontend_mut::<DescFrontend>(desc).unwrap().launch_chain(0, 0x80));
+        let fe = sys.try_frontend_mut::<InstFrontend>(inst).unwrap();
         fe.execute(0, decode(encode(Opcode::DmSrc, 0, 1, 2)).unwrap(), 0x1900, 0);
         fe.execute(1, decode(encode(Opcode::DmDst, 0, 1, 2)).unwrap(), 0x6_0000, 0);
         assert!(fe

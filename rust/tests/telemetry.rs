@@ -1,0 +1,310 @@
+//! Telemetry subsystem integration tests: conservation invariants,
+//! event ordering, differential recorder identity between the
+//! event-driven and per-cycle drivers, zero-perturbation with no sink,
+//! Chrome-trace JSON validity, and bus-error surfacing in the unified
+//! completion records.
+
+use idma::engine::EngineBuilder;
+use idma::frontend::{regs, RegFrontend, RegVariant};
+use idma::mem::{Endpoint, ErrorInjector, MemModel};
+use idma::midend::NdJob;
+use idma::protocol::ProtocolKind;
+use idma::sim::XorShift64;
+use idma::system::{IdmaSystem, IdmaSystemBuilder};
+use idma::telemetry::{shared, Recorder};
+use idma::transfer::{ErrorAction, NdTransfer, Transfer1D};
+
+/// Build a single-reg-frontend system over a latent endpoint and launch
+/// `n` copies of `len` bytes each through the native register surface.
+fn reg_system(len: u64, n: u64, latency: u64) -> IdmaSystem {
+    let engine = EngineBuilder::new(32, 8, 4).build().unwrap();
+    let mut sys = IdmaSystemBuilder::new(engine)
+        .endpoint(Endpoint::new(MemModel::custom("m", latency, 8, 8)))
+        .frontend(Box::new(RegFrontend::new(RegVariant::R32, 0)))
+        .build();
+    let mut data = vec![0u8; (len * n) as usize];
+    XorShift64::new(len ^ 0x7E1E).fill(&mut data);
+    sys.mems[0].data.write(0x1000, &data);
+    let fe = sys.try_frontend_mut::<RegFrontend>(0).unwrap();
+    for k in 0..n {
+        fe.write_reg(0, regs::SRC, 0x1000 + k * len);
+        fe.write_reg(0, regs::DST, 0x8_0000 + k * len);
+        fe.write_reg(0, regs::LEN, len);
+        assert_eq!(fe.read_reg(0, regs::TRANSFER_ID), k + 1);
+    }
+    sys
+}
+
+/// Invariant: for an error-free copy, every job's recorded bytes read
+/// equal its bytes written equal the transfer length, lifecycle cycles
+/// are ordered, and the summary's bus utilization stays in [0, 1].
+#[test]
+fn conservation_and_ordering_invariants() {
+    let (len, n) = (192u64, 5u64);
+    let mut sys = reg_system(len, n, 40);
+    let rec = shared(Recorder::new());
+    sys.attach_sink(rec.clone());
+    sys.run_until_idle();
+    let done = sys.take_done();
+    assert_eq!(done.len(), n as usize);
+    for d in &done {
+        assert!(d.ok(), "error-free run");
+        assert!(d.submitted <= d.accepted, "submit precedes accept");
+        let fb = d.first_beat.expect("data moved");
+        assert!(d.accepted <= fb && fb <= d.done, "accept ≤ first beat ≤ done");
+    }
+    let rec = rec.borrow();
+    let traces: Vec<_> = rec.jobs().collect();
+    assert_eq!(traces.len(), n as usize);
+    for t in &traces {
+        assert_eq!(t.bytes_read, len, "job {:#x}: bytes read", t.job);
+        assert_eq!(t.bytes_written, len, "job {:#x}: bytes written", t.job);
+        let (s, a) = (t.submitted.unwrap(), t.accepted.unwrap());
+        let (fb, dn) = (t.first_beat.unwrap(), t.done.unwrap());
+        assert!(s <= a && a <= fb && fb <= dn, "job {:#x}: lifecycle order", t.job);
+    }
+    let s = rec.summary();
+    assert_eq!(s.jobs, n);
+    assert_eq!(s.completed, n);
+    assert_eq!(s.bytes_read, len * n);
+    assert_eq!(s.bytes_written, len * n);
+    assert_eq!(s.bus_errors, 0);
+    let u = s.bus_utilization(8);
+    assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range");
+    // Per-port counters conserve the same totals.
+    let (read, written): (u64, u64) =
+        rec.ports().fold((0, 0), |(r, w), (_, c)| (r + c.read_bytes, w + c.write_bytes));
+    assert_eq!(read, len * n);
+    assert_eq!(written, len * n);
+}
+
+/// The recorder itself is part of the differential contract: the
+/// event-driven driver and the per-cycle oracle must produce *identical*
+/// recorders — same events, same traces, same counters.
+#[test]
+fn recorder_identical_between_event_and_exact_drivers() {
+    let run = |exact: bool| {
+        let mut sys = reg_system(256, 3, 75);
+        let rec = shared(Recorder::new());
+        sys.attach_sink(rec.clone());
+        let end = if exact { sys.run_until_idle_exact() } else { sys.run_until_idle() };
+        (end, sys.take_done(), rec)
+    };
+    let (end_a, done_a, rec_a) = run(true);
+    let (end_b, done_b, rec_b) = run(false);
+    assert_eq!(end_a, end_b, "final cycle differs");
+    assert_eq!(done_a, done_b, "completion records differ");
+    assert_eq!(*rec_a.borrow(), *rec_b.borrow(), "recorded telemetry differs");
+}
+
+/// With no sink attached the instrumented build must behave exactly like
+/// an uninstrumented one: same cycles, same completion records, same
+/// bytes — the zero-cost-when-detached guarantee.
+#[test]
+fn no_sink_run_is_cycle_and_byte_identical() {
+    let run = |with_sink: bool| {
+        let mut sys = reg_system(512, 4, 120);
+        if with_sink {
+            sys.attach_sink(shared(Recorder::new()));
+        }
+        let end = sys.run_until_idle();
+        (end, sys.ticks(), sys.take_done(), sys.mems[0].data.read_vec(0x8_0000, 512 * 4))
+    };
+    assert_eq!(run(false), run(true), "sink attachment perturbed the simulation");
+}
+
+/// High-water marks surface through the whole stack: back-end queues and
+/// endpoint outstanding-transaction tracking both observed non-zero
+/// occupancy after a real run.
+#[test]
+fn high_water_marks_track_occupancy() {
+    let mut sys = reg_system(1024, 2, 60);
+    sys.run_until_idle();
+    let (desc, rq, wq) = sys.engine.backend.queue_high_water();
+    assert!(desc >= 1, "descriptor queue saw at least one entry");
+    assert!(rq >= 1 && wq >= 1, "dataflow FIFOs saw beats (r {rq}, w {wq})");
+    let (hr, hw) = sys.mems[0].outstanding_high_water();
+    assert!(hr >= 1, "endpoint saw outstanding reads");
+    assert!(hw >= 1, "endpoint saw outstanding writes");
+}
+
+/// Bus errors surface everywhere they should: the BusError event stream,
+/// the recorder's error counter, and the unified completion record's
+/// status — including the failing address.
+#[test]
+fn bus_error_surfaces_in_completion_and_events() {
+    let engine = EngineBuilder::new(32, 4, 4).error_handling().build().unwrap();
+    let mut sys = IdmaSystemBuilder::new(engine)
+        .endpoint(Endpoint::new(MemModel::sram(4)))
+        .build();
+    let rec = shared(Recorder::new());
+    sys.attach_sink(rec.clone());
+    let good: Vec<u8> = (0..200).map(|i| i as u8).collect();
+    sys.mems[0].data.write(0x1000, &good);
+    sys.mems[0].inject =
+        Some(ErrorInjector { ranges: vec![(0x1040, 0x1041)], ..Default::default() });
+    let mut bad = Transfer1D::copy(1, 0x1000, 0x8000, 200, ProtocolKind::Axi4);
+    bad.opts.on_error = ErrorAction::Abort;
+    bad.opts.max_burst = Some(64);
+    assert!(sys.submit(NdJob::new(1, NdTransfer::d1(bad))));
+    sys.run_until_idle();
+    let done = sys.take_done();
+    assert_eq!(done.len(), 1);
+    let d = &done[0];
+    assert!(!d.ok(), "injected error must surface in the status");
+    assert!(d.errors() >= 1);
+    assert!(d.aborted(), "ErrorAction::Abort");
+    let addr = d.error_addr().expect("failing address captured");
+    assert!((0x1000..0x1100).contains(&addr), "address {addr:#x} in the faulted burst");
+    let rec = rec.borrow();
+    assert!(rec.bus_errors() >= 1, "BusError events recorded");
+    let t = rec.jobs().next().expect("job trace exists");
+    assert!(t.aborted);
+    assert!(t.errors >= 1);
+}
+
+/// The Chrome exporter produces valid JSON with the expected span
+/// structure (checked with the minimal validator below — no serde in
+/// this offline environment).
+#[test]
+fn chrome_trace_is_valid_json_with_lifecycle_spans() {
+    let mut sys = reg_system(128, 3, 30);
+    let rec = shared(Recorder::new());
+    sys.attach_sink(rec.clone());
+    sys.run_until_idle();
+    let trace = rec.borrow().chrome_trace();
+    let mut p = Json::new(&trace);
+    p.value();
+    p.skip_ws();
+    assert!(p.done(), "trailing garbage after JSON value: {}", p.rest());
+    assert!(trace.starts_with("{\"traceEvents\":["), "envelope: {}", &trace[..40.min(trace.len())]);
+    for needle in ["\"queued\"", "\"launch\"", "\"transfer\"", "\"ph\":\"X\"", "\"ph\":\"M\""] {
+        assert!(trace.contains(needle), "trace missing {needle}");
+    }
+}
+
+// --- minimal JSON validator (panics on malformed input) ----------------
+
+struct Json<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Json<'a> {
+    fn new(s: &'a str) -> Self {
+        Self { s: s.as_bytes(), i: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.i == self.s.len()
+    }
+
+    fn rest(&self) -> String {
+        String::from_utf8_lossy(&self.s[self.i..self.s.len().min(self.i + 40)]).into_owned()
+    }
+
+    fn peek(&self) -> u8 {
+        assert!(self.i < self.s.len(), "unexpected end of JSON");
+        self.s[self.i]
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) {
+        assert_eq!(self.peek(), c, "expected {:?} at byte {}: {}", c as char, self.i, self.rest());
+        self.i += 1;
+    }
+
+    fn value(&mut self) {
+        self.skip_ws();
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string(),
+            b't' => self.literal(b"true"),
+            b'f' => self.literal(b"false"),
+            b'n' => self.literal(b"null"),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => panic!("unexpected byte {:?} at {}: {}", c as char, self.i, self.rest()),
+        }
+    }
+
+    fn object(&mut self) {
+        self.expect(b'{');
+        self.skip_ws();
+        if self.peek() == b'}' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.skip_ws();
+            self.string();
+            self.skip_ws();
+            self.expect(b':');
+            self.value();
+            self.skip_ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return;
+                }
+                c => panic!("expected , or }} got {:?}: {}", c as char, self.rest()),
+            }
+        }
+    }
+
+    fn array(&mut self) {
+        self.expect(b'[');
+        self.skip_ws();
+        if self.peek() == b']' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.value();
+            self.skip_ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return;
+                }
+                c => panic!("expected , or ] got {:?}: {}", c as char, self.rest()),
+            }
+        }
+    }
+
+    fn string(&mut self) {
+        self.expect(b'"');
+        while self.peek() != b'"' {
+            if self.peek() == b'\\' {
+                self.i += 1;
+            }
+            self.i += 1;
+        }
+        self.i += 1;
+    }
+
+    fn literal(&mut self, lit: &[u8]) {
+        assert!(self.s[self.i..].starts_with(lit), "bad literal: {}", self.rest());
+        self.i += lit.len();
+    }
+
+    fn number(&mut self) {
+        if self.peek() == b'-' {
+            self.i += 1;
+        }
+        let start = self.i;
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        assert!(self.i > start, "empty number: {}", self.rest());
+    }
+}
