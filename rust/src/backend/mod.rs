@@ -227,6 +227,9 @@ pub struct ErrorReport {
     pub tid: u64,
     /// Legalized burst base address.
     pub addr: u64,
+    /// Length of the faulting burst in bytes (lets recovery layers
+    /// replay exactly the damaged address range).
+    pub len: u64,
     /// Direction of the fault.
     pub is_read: bool,
     /// Action that was applied.
@@ -610,7 +613,13 @@ impl Backend {
             t.error_addr.get_or_insert(wp.burst.addr);
         }
         let action = self.error_action_for(&wp.burst);
-        self.error_log.push(ErrorReport { tid, addr: wp.burst.addr, is_read: false, action });
+        self.error_log.push(ErrorReport {
+            tid,
+            addr: wp.burst.addr,
+            len: wp.burst.len,
+            is_read: false,
+            action,
+        });
         self.probe.emit(TelemetryEvent::BusError {
             tid,
             addr: wp.burst.addr,
@@ -672,6 +681,43 @@ impl Backend {
         // In-flight reads of this tid will be drained and discarded by
         // the read-beat stage (it checks `track[tid].aborted`).
         self.complete_transfer(now, tid, true);
+    }
+
+    /// Forcibly abort a transfer whose in-flight bursts will **never**
+    /// drain (e.g. a permanently stalled endpoint). On top of the normal
+    /// abort path this also discards the in-flight read/write bursts
+    /// themselves and their drain tombstone — the usual drain-and-discard
+    /// recovery assumes the endpoint still delivers beats, which a hung
+    /// device does not. The caller must quiesce the endpoint as well
+    /// ([`Endpoint::force_reset`]) so no orphaned beats surface later.
+    pub fn force_abort(&mut self, now: Cycle, tid: u64) {
+        if !self.track.contains_key(&tid) {
+            // Still queued (or unknown): the legalizer never saw it, so
+            // no burst state exists — drop the descriptor and synthesize
+            // the aborted completion directly.
+            self.desc_q.retain(|t| t.id != tid);
+            self.completions.push(Completion {
+                tid,
+                at: now,
+                aborted: true,
+                errors: 0,
+                first_read_beat: None,
+                first_write_beat: None,
+                last_write_beat: None,
+                error_addr: None,
+            });
+            self.completed += 1;
+            self.stats.transfers_done += 1;
+            self.stats.end = self.stats.end.max(now);
+            return;
+        }
+        self.abort_transfer(now, tid);
+        self.issued_reads.retain(|b| b.tid != tid);
+        self.issued_writes.retain(|wp| wp.burst.tid != tid);
+        self.aborted_tids.remove(&tid);
+        if self.issued_reads.is_empty() {
+            self.rewind = false;
+        }
     }
 
     fn write_stage(&mut self, now: Cycle, mems: &mut [Endpoint]) {
@@ -859,6 +905,7 @@ impl Backend {
                 self.error_log.push(ErrorReport {
                     tid: front.tid,
                     addr: front.addr,
+                    len: front.len,
                     is_read: true,
                     action,
                 });
@@ -886,7 +933,11 @@ impl Backend {
                     }
                     ErrorAction::Continue => {
                         // Skip this burst; cancel the range-matched write
-                        // burst (coupled mode guarantees it exists).
+                        // burst (coupled mode guarantees it exists). A
+                        // mid-burst beat fault may have pushed clean early
+                        // beats of this seq — drop them so they never
+                        // leak into the next write burst's stream.
+                        self.buffer.drop_from_seq(front.seq);
                         self.cancelled_w.push(front.seq);
                     }
                     ErrorAction::Abort => self.abort_transfer(now, front.tid),

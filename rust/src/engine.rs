@@ -9,10 +9,10 @@
 //! per cycle), assigns backend-level transfer IDs, and aggregates 1D
 //! completions back into front-end job completions.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::collections::VecDeque;
 
-use crate::backend::{Backend, BackendCfg, Completion, PortCfg};
+use crate::backend::{Backend, BackendCfg, Completion, ErrorReport, PortCfg};
 use crate::error::Result;
 use crate::mem::Endpoint;
 use crate::midend::{MidEnd, NdJob};
@@ -36,7 +36,13 @@ struct JobAcct {
     first_beat: Option<Cycle>,
     /// First failing address, when any part saw a bus error.
     error_addr: Option<u64>,
+    /// A watchdog force-aborted this job ([`IdmaEngine::timeout_job`]).
+    timed_out: bool,
 }
+
+/// Per-job cap on retained [`ErrorReport`]s — enough for any realistic
+/// recovery decision while bounding memory on pathological fault storms.
+const ERROR_DETAIL_CAP: usize = 64;
 
 /// Former name of the engine's completion record.
 #[deprecated(note = "use `telemetry::CompletionRecord` (same type)")]
@@ -55,6 +61,12 @@ pub struct IdmaEngine {
     done: Vec<CompletionRecord>,
     input_hold: Option<NdJob>,
     probe: Probe,
+    /// Jobs force-aborted by a watchdog: late mid-end expansions of
+    /// these jobs are swallowed instead of resurrecting the accounting.
+    killed: HashSet<u64>,
+    /// Per-job burst-level error reports (drained from the back-end each
+    /// tick, for the resilience layer's partial-replay decisions).
+    error_detail: HashMap<u64, Vec<ErrorReport>>,
 }
 
 impl IdmaEngine {
@@ -70,6 +82,8 @@ impl IdmaEngine {
             done: Vec::new(),
             input_hold: None,
             probe: Probe::default(),
+            killed: HashSet::new(),
+            error_detail: HashMap::new(),
         }
     }
 
@@ -128,6 +142,11 @@ impl IdmaEngine {
 
     fn push_backend(&mut self, now: Cycle, j: NdJob) -> bool {
         debug_assert!(j.nd.dims.is_empty());
+        // Late expansions of a watchdog-killed job are swallowed: the
+        // job's record was already emitted and must not be resurrected.
+        if self.killed.contains(&j.job) {
+            return true;
+        }
         // Jobs born inside the chain (rt_3D autonomous launches) enter
         // the accounting here rather than via submit().
         if !self.jobs.contains_key(&j.job) {
@@ -163,6 +182,7 @@ impl IdmaEngine {
     /// move jobs across every ready/valid boundary.
     pub fn tick(&mut self, now: Cycle, mems: &mut [Endpoint]) {
         self.backend.tick(now, mems);
+        self.drain_error_reports();
         // Tick mid-ends and move jobs downstream (last mid-end feeds the
         // back-end; stage i feeds stage i+1).
         for m in self.mids.iter_mut() {
@@ -214,6 +234,64 @@ impl IdmaEngine {
         self.input_hold.is_none() && self.mids.iter().all(|m| !m.busy())
     }
 
+    /// Map the back-end's burst-level error reports onto jobs (must run
+    /// before completions are retired, while `tid2job` still holds the
+    /// mapping). Capped per job; the resilience layer drains them via
+    /// [`IdmaEngine::take_error_detail`].
+    fn drain_error_reports(&mut self) {
+        for r in self.backend.take_error_reports() {
+            if let Some(&job) = self.tid2job.get(&r.tid) {
+                let v = self.error_detail.entry(job).or_default();
+                if v.len() < ERROR_DETAIL_CAP {
+                    v.push(r);
+                }
+            }
+        }
+    }
+
+    /// Drain the burst-level [`ErrorReport`]s collected for `job`
+    /// (empty when the job saw no errors, or when more than
+    /// a bounded number of reports were dropped on a fault storm —
+    /// callers must treat a count mismatch with
+    /// [`CompletionRecord::errors`] as "error list incomplete").
+    pub fn take_error_detail(&mut self, job: u64) -> Vec<ErrorReport> {
+        self.error_detail.remove(&job).unwrap_or_default()
+    }
+
+    /// Watchdog hook: force-abort every in-flight transfer of `job` and
+    /// finish it with [`TransferStatus::TimedOut`]. In-flight bursts are
+    /// dropped rather than drained (a stalled endpoint would never
+    /// deliver them) — the caller must also reset the affected
+    /// endpoints ([`crate::mem::Endpoint::force_reset`]). Completion
+    /// records are produced synchronously (no further tick needed),
+    /// subject to the engine's in-order completion rule: the record is
+    /// withheld while an older job is still in flight. Returns `false`
+    /// when the job is unknown or already finished.
+    pub fn timeout_job(&mut self, now: Cycle, job: u64) -> bool {
+        if !self.jobs.contains_key(&job) {
+            return false;
+        }
+        self.killed.insert(job);
+        if self.input_hold.as_ref().map(|j| j.job) == Some(job) {
+            self.input_hold = None;
+        }
+        let tids: Vec<u64> =
+            self.tid2job.iter().filter(|&(_, &j)| j == job).map(|(&t, _)| t).collect();
+        for tid in tids {
+            self.backend.force_abort(now, tid);
+        }
+        self.drain_error_reports();
+        for c in self.backend.take_completions() {
+            self.retire(now, c);
+        }
+        let a = self.jobs.get_mut(&job).expect("checked above");
+        a.timed_out = true;
+        a.sealed = true;
+        self.probe.emit(TelemetryEvent::JobTimedOut { job, at: now });
+        self.finish_jobs(now);
+        true
+    }
+
     fn retire(&mut self, _now: Cycle, c: Completion) {
         let job = self.tid2job.remove(&c.tid).expect("unknown tid retired");
         let a = self.jobs.get_mut(&job).expect("job acct");
@@ -232,16 +310,18 @@ impl IdmaEngine {
                 self.order.pop_front();
                 continue;
             };
-            if a.sealed && a.retired == a.submitted && a.submitted > 0 {
+            if a.sealed && a.retired == a.submitted && (a.submitted > 0 || a.timed_out) {
                 let a = self.jobs.remove(&job).unwrap();
                 self.order.pop_front();
                 self.probe.emit(TelemetryEvent::JobDone {
                     job,
                     at: now,
-                    aborted: a.aborted,
+                    aborted: a.aborted || a.timed_out,
                     errors: a.errors,
                 });
-                let status = if a.errors > 0 || a.aborted {
+                let status = if a.timed_out {
+                    TransferStatus::TimedOut { errors: a.errors }
+                } else if a.errors > 0 || a.aborted {
                     TransferStatus::BusError {
                         errors: a.errors,
                         aborted: a.aborted,
@@ -257,6 +337,7 @@ impl IdmaEngine {
                     accepted: a.accepted,
                     first_beat: a.first_beat,
                     done: now,
+                    retries: 0,
                     status,
                 });
             } else {
@@ -476,6 +557,29 @@ mod tests {
         }
         let done = e.take_done();
         assert_eq!(done.iter().map(|d| d.job).collect::<Vec<_>>(), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn timeout_job_force_aborts_stalled_transfer() {
+        let mut e = EngineBuilder::new(32, 4, 4).build().unwrap();
+        let mut m = [Endpoint::new(MemModel::custom("t", 4, 8, 4))];
+        m[0].inject = Some(crate::mem::ErrorInjector::stall(0));
+        m[0].data.write(0, &[1u8; 64]);
+        let t = Transfer1D::copy(0, 0, 0x100, 64, ProtocolKind::Axi4);
+        assert!(e.submit(0, NdJob::new(1, NdTransfer::d1(t))));
+        for now in 0..50 {
+            e.tick(now, &mut m);
+        }
+        assert!(e.busy(), "stalled endpoint keeps the job in flight");
+        assert!(e.timeout_job(50, 1), "known in-flight job");
+        assert!(!e.timeout_job(50, 1), "second timeout is a no-op");
+        m[0].force_reset();
+        let done = e.take_done();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].timed_out());
+        assert!(done[0].aborted());
+        assert!(!e.busy(), "forced abort retires the job");
+        assert!(m[0].idle(), "endpoint quiesced after force_reset");
     }
 
     #[test]

@@ -16,7 +16,14 @@
 use std::collections::VecDeque;
 
 use super::{MemModel, SparseMemory};
-use crate::sim::Cycle;
+use crate::sim::{Cycle, XorShift64};
+
+/// Byte pattern returned by faulting read beats. A distinctive poison
+/// (rather than zeros) makes silent propagation of error data visible in
+/// tests and memory dumps: any `0xDE` run in a destination buffer is a
+/// strong hint that corrupt beats were consumed without checking the
+/// error flag.
+pub const POISON: u8 = 0xDE;
 
 /// A transient fault: bursts overlapping the range fail `remaining`
 /// times, then succeed (exercises the error handler's replay path).
@@ -31,7 +38,12 @@ pub struct TransientFault {
 }
 
 /// Deterministic error injector: bursts touching a configured range (or
-/// hashed to fall under the random probability) fail.
+/// hashed to fall under the random probability) fail. Beyond the
+/// burst-level faults, three *fabric misbehaviour* modes feed the
+/// resilience subsystem: per-beat probabilistic faults, latency spikes
+/// on request acceptance, and a permanent stall from a given cycle. All
+/// stochastic decisions are [`XorShift64`]-seeded hashes of the address
+/// and cycle, so runs are bit-reproducible.
 #[derive(Debug, Clone, Default)]
 pub struct ErrorInjector {
     /// Permanently faulting address ranges `[start, end)`.
@@ -42,12 +54,72 @@ pub struct ErrorInjector {
     pub random_p: f64,
     /// Seed for the hash.
     pub seed: u64,
+    /// Probability any individual data beat faults (deterministic hash of
+    /// beat address + cycle + seed). A tripped beat flags the rest of its
+    /// burst, matching burst-level error reporting on real fabrics.
+    pub beat_p: f64,
+    /// Probability a burst request suffers a latency spike.
+    pub spike_p: f64,
+    /// Extra cycles a latency spike adds to the affected burst.
+    pub spike_cycles: u64,
+    /// From this cycle on the endpoint stops delivering beats and
+    /// responses entirely (a hung device / unreachable fabric segment).
+    pub stall_at: Option<Cycle>,
 }
 
 impl ErrorInjector {
     /// Fault a range for exactly `n` accesses.
     pub fn transient(start: u64, end: u64, n: u32) -> Self {
         Self { transient: vec![TransientFault { start, end, remaining: n }], ..Default::default() }
+    }
+
+    /// Seeded per-beat fault injection with probability `p`.
+    pub fn beat_faults(p: f64, seed: u64) -> Self {
+        Self { beat_p: p, seed, ..Default::default() }
+    }
+
+    /// Seeded latency spikes: with probability `p` a burst request takes
+    /// `extra` additional cycles to produce data / retire its response.
+    pub fn latency_spikes(p: f64, extra: u64, seed: u64) -> Self {
+        Self { spike_p: p, spike_cycles: extra, seed, ..Default::default() }
+    }
+
+    /// Permanent stall starting at cycle `at`.
+    pub fn stall(at: Cycle) -> Self {
+        Self { stall_at: Some(at), ..Default::default() }
+    }
+
+    /// Deterministic per-decision coin flip: hash `(seed, addr, now)`
+    /// into a fresh [`XorShift64`] stream and draw once.
+    fn coin(&self, p: f64, addr: u64, now: Cycle, salt: u64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mix = self.seed
+            ^ addr.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ now.rotate_left(32)
+            ^ salt.rotate_left(13);
+        XorShift64::new(mix).chance(p)
+    }
+
+    /// Whether the data beat at `addr` delivered on cycle `now` faults.
+    pub fn beat_faults_at(&self, now: Cycle, addr: u64) -> bool {
+        self.coin(self.beat_p, addr, now, 0xBEA7)
+    }
+
+    /// Extra latency (0 or `spike_cycles`) for a burst request accepted
+    /// at `now` for address `addr`.
+    pub fn spike_at(&self, now: Cycle, addr: u64) -> u64 {
+        if self.coin(self.spike_p, addr, now, 0x5B1C) {
+            self.spike_cycles
+        } else {
+            0
+        }
+    }
+
+    /// Whether the endpoint is permanently stalled at `now`.
+    pub fn stalled(&self, now: Cycle) -> bool {
+        matches!(self.stall_at, Some(s) if now >= s)
     }
 
     /// Whether a burst `[addr, addr+len)` faults (mutates transient state).
@@ -117,7 +189,14 @@ struct InflightWrite {
     cursor: u64,
     error: bool,
     owner: u32,
+    /// Extra response latency from an injected spike.
+    extra: u64,
 }
+
+/// Conservative wake hint distance for a permanently stalled endpoint:
+/// far enough that event-driven drivers never busy-tick a hung device,
+/// yet safely below `Cycle::MAX` arithmetic.
+const STALL_HORIZON: Cycle = 1 << 40;
 
 /// A timed, single-ported memory endpoint.
 #[derive(Debug, Clone)]
@@ -186,6 +265,25 @@ impl Endpoint {
         self
     }
 
+    /// Whether the endpoint is permanently stalled at `now` (injected
+    /// hang): no beats or responses are delivered from that cycle on.
+    pub fn stalled(&self, now: Cycle) -> bool {
+        self.inject.as_ref().is_some_and(|i| i.stalled(now))
+    }
+
+    /// Drop all in-flight transaction state (outstanding reads, write
+    /// streams, pending responses) without touching the backing store or
+    /// statistics. Used by the resilience layer after force-aborting a
+    /// hung transfer so a quarantined or recovered endpoint starts from
+    /// a quiescent state; any requester still waiting on this endpoint
+    /// must be aborted by the caller first.
+    pub fn force_reset(&mut self) {
+        self.inflight_r.clear();
+        self.writes.clear();
+        self.write_resps.clear();
+        self.outstanding_w = 0;
+    }
+
     fn stolen(&self, now: Cycle, salt: u64) -> bool {
         if self.contention <= 0.0 {
             return false;
@@ -216,8 +314,9 @@ impl Endpoint {
             return false;
         }
         let error = self.inject.as_mut().map(|i| i.faults(addr, len)).unwrap_or(false);
+        let spike = self.inject.as_ref().map(|i| i.spike_at(now, addr)).unwrap_or(0);
         self.inflight_r.push_back(InflightRead {
-            ready_at: now + self.model.latency,
+            ready_at: now + self.model.latency + spike,
             end: addr + len,
             cursor: addr,
             error,
@@ -229,7 +328,7 @@ impl Endpoint {
 
     /// Owner of the read beat available this cycle, if any.
     pub fn read_beat_owner(&self, now: Cycle) -> Option<u32> {
-        if self.next_r_slot > now || self.stolen(now, 0x5EAD) {
+        if self.next_r_slot > now || self.stolen(now, 0x5EAD) || self.stalled(now) {
             return None;
         }
         self.inflight_r.front().filter(|b| b.ready_at <= now).map(|b| b.owner)
@@ -239,7 +338,7 @@ impl Endpoint {
     /// deliver this cycle (lets narrow consumers apply exact back
     /// pressure instead of worst-case bus-width reservations).
     pub fn peek_read_beat_len(&self, now: Cycle) -> Option<u64> {
-        if self.next_r_slot > now || self.stolen(now, 0x5EAD) {
+        if self.next_r_slot > now || self.stolen(now, 0x5EAD) || self.stalled(now) {
             return None;
         }
         let b = self.inflight_r.front()?;
@@ -260,12 +359,21 @@ impl Endpoint {
     /// [`Self::take_read_beat`] reusing a recycled allocation for the
     /// beat payload (hot path: zero allocations per cycle).
     pub fn take_read_beat_into(&mut self, now: Cycle, mut data: Vec<u8>) -> Option<ReadBeat> {
-        if self.next_r_slot > now || self.stolen(now, 0x5EAD) {
+        if self.next_r_slot > now || self.stolen(now, 0x5EAD) || self.stalled(now) {
             return None;
         }
+        let beat_fault = match (&self.inject, self.inflight_r.front()) {
+            (Some(i), Some(b)) if !b.error => i.beat_faults_at(now, b.cursor),
+            _ => false,
+        };
         let b = self.inflight_r.front_mut()?;
         if b.ready_at > now {
             return None;
+        }
+        if beat_fault {
+            // A mid-burst beat fault flags the rest of the burst, so the
+            // `last` beat (where error handlers act) carries the error.
+            b.error = true;
         }
         // Beat window: up to the next bus-width boundary.
         let width = self.model.width;
@@ -276,9 +384,11 @@ impl Endpoint {
         data.resize(n, 0);
         self.data.read(b.cursor, &mut data);
         if b.error {
-            // Faulting reads return garbage (zeros here) — data must not
-            // be trusted; the error flag travels with the beat.
-            data.fill(0);
+            // Faulting reads return a distinctive poison pattern — data
+            // must not be trusted; the error flag travels with the beat,
+            // and any POISON run surfacing in a destination buffer marks
+            // silent error-data propagation.
+            data.fill(POISON);
         }
         let beat = ReadBeat { data, addr: b.cursor, last: end == b.end, error: b.error, owner: b.owner };
         b.cursor = end;
@@ -305,12 +415,19 @@ impl Endpoint {
 
     /// Issue a write burst request (AXI AW). Data beats follow in order.
     pub fn try_write_req(&mut self, now: Cycle, addr: u64, len: u64, owner: u32) -> bool {
-        let _ = now;
         if !self.can_accept_write() {
             return false;
         }
         let error = self.inject.as_mut().map(|i| i.faults(addr, len)).unwrap_or(false);
-        self.writes.push_back(InflightWrite { addr, end: addr + len, cursor: addr, error, owner });
+        let extra = self.inject.as_ref().map(|i| i.spike_at(now, addr)).unwrap_or(0);
+        self.writes.push_back(InflightWrite {
+            addr,
+            end: addr + len,
+            cursor: addr,
+            error,
+            owner,
+            extra,
+        });
         self.outstanding_w += 1;
         self.hwm_w = self.hwm_w.max(self.outstanding_w);
         true
@@ -318,7 +435,7 @@ impl Endpoint {
 
     /// Owner of the write burst whose next data beat would be accepted.
     pub fn write_beat_owner(&self, now: Cycle) -> Option<u32> {
-        if self.next_w_slot > now || self.stolen(now, 0x3417E) {
+        if self.next_w_slot > now || self.stolen(now, 0x3417E) || self.stalled(now) {
             return None;
         }
         self.writes.front().map(|w| w.owner)
@@ -336,11 +453,18 @@ impl Endpoint {
     /// [`Self::write_beat_capacity`]). Returns `false` if no beat slot is
     /// available this cycle.
     pub fn push_write_beat(&mut self, now: Cycle, data: &[u8]) -> bool {
-        if self.next_w_slot > now || self.stolen(now, 0x3417E) {
+        if self.next_w_slot > now || self.stolen(now, 0x3417E) || self.stalled(now) {
             return false;
         }
+        let beat_fault = match (&self.inject, self.writes.front()) {
+            (Some(i), Some(w)) if !w.error => i.beat_faults_at(now, w.cursor),
+            _ => false,
+        };
         let resp_lat = self.model.write_resp_latency;
         let Some(w) = self.writes.front_mut() else { return false };
+        if beat_fault {
+            w.error = true;
+        }
         let width = self.model.width;
         let window_end = (w.cursor / width + 1) * width;
         let cap = window_end.min(w.end) - w.cursor;
@@ -359,8 +483,9 @@ impl Endpoint {
         w.cursor += data.len() as u64;
         if w.cursor >= w.end {
             let resp = WriteResp { addr: w.addr, error: w.error, owner: w.owner };
+            let extra = w.extra;
             self.writes.pop_front();
-            self.write_resps.push_back((now + resp_lat, resp));
+            self.write_resps.push_back((now + resp_lat + extra, resp));
         }
         self.next_w_slot = now + 1;
         self.write_beats += 1;
@@ -370,6 +495,9 @@ impl Endpoint {
     /// Owner of the write response due this cycle, if any (shared
     /// endpoints: engines only pop their own responses).
     pub fn write_resp_owner(&self, now: Cycle) -> Option<u32> {
+        if self.stalled(now) {
+            return None;
+        }
         match self.write_resps.front() {
             Some((due, r)) if *due <= now => Some(r.owner),
             _ => None,
@@ -378,6 +506,9 @@ impl Endpoint {
 
     /// Retire a write response if one is due.
     pub fn pop_write_resp(&mut self, now: Cycle) -> Option<WriteResp> {
+        if self.stalled(now) {
+            return None;
+        }
         match self.write_resps.front() {
             Some((due, _)) if *due <= now => {
                 self.outstanding_w -= 1;
@@ -400,12 +531,21 @@ impl Endpoint {
     /// actual beat further, in which case the caller simply retries at
     /// the returned cycle. `None` when no read is in flight.
     pub fn next_read_beat_at(&self, now: Cycle) -> Option<Cycle> {
+        if self.stalled(now) {
+            // A hung endpoint makes no progress; report a far-future wake
+            // so event-driven drivers don't busy-tick it. External
+            // supervision (watchdog timeouts) must break the stall.
+            return self.inflight_r.front().map(|_| now + STALL_HORIZON);
+        }
         self.inflight_r.front().map(|b| b.ready_at.max(self.next_r_slot).max(now + 1))
     }
 
     /// Earliest cycle (strictly after `now`) at which the front write
     /// response becomes due. `None` when no response is pending.
     pub fn next_write_resp_at(&self, now: Cycle) -> Option<Cycle> {
+        if self.stalled(now) {
+            return self.write_resps.front().map(|_| now + STALL_HORIZON);
+        }
         self.write_resps.front().map(|(due, _)| (*due).max(now + 1))
     }
 
@@ -529,6 +669,88 @@ mod tests {
         let r = e.pop_write_resp(5).unwrap();
         assert!(r.error);
         assert_eq!(e.data.read_vec(100, 4), vec![0, 0, 0, 0], "faulting write swallowed");
+    }
+
+    #[test]
+    fn faulting_reads_return_poison() {
+        let mut e = ep(1, 4);
+        e.data.write(100, &[0x11; 8]);
+        e.inject = Some(ErrorInjector { ranges: vec![(100, 200)], ..Default::default() });
+        assert!(e.try_read_req(0, 100, 8, 0));
+        let b1 = e.take_read_beat(1).unwrap();
+        let b2 = e.take_read_beat(2).unwrap();
+        assert!(b1.error && b2.error && b2.last);
+        assert_eq!(b1.data, vec![POISON; 4], "faulting data is poisoned, not zeroed");
+        assert_eq!(b2.data, vec![POISON; 4]);
+    }
+
+    #[test]
+    fn beat_faults_are_deterministic_and_flag_rest_of_burst() {
+        let run = || {
+            let mut e = ep(0, 4);
+            e.data.write(0, &[0x22; 64]);
+            e.inject = Some(ErrorInjector::beat_faults(0.5, 0x1234_5678));
+            let mut flags = Vec::new();
+            for burst in 0..4u64 {
+                assert!(e.try_read_req(burst * 100, burst * 16, 16, 0));
+                let mut c = burst * 100;
+                loop {
+                    let Some(b) = e.take_read_beat(c) else {
+                        c += 1;
+                        continue;
+                    };
+                    flags.push(b.error);
+                    if b.last {
+                        break;
+                    }
+                    c += 1;
+                }
+            }
+            flags
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "beat faults must be seed-deterministic");
+        assert!(a.iter().any(|&f| f), "p=0.5 over 16 beats should trip at least once");
+        // Once a beat faults, every later beat of that burst is flagged.
+        for burst in a.chunks(4) {
+            let first = burst.iter().position(|&f| f);
+            if let Some(i) = first {
+                assert!(burst[i..].iter().all(|&f| f), "error must persist to last beat");
+            }
+        }
+    }
+
+    #[test]
+    fn latency_spike_defers_read_data() {
+        let mut e = ep(2, 4);
+        e.data.write(0, &[9; 4]);
+        e.inject = Some(ErrorInjector::latency_spikes(1.0, 50, 7));
+        assert!(e.try_read_req(0, 0, 4, 0));
+        assert_eq!(e.next_read_beat_at(0), Some(52), "latency 2 + spike 50");
+        assert!(e.take_read_beat(51).is_none());
+        let b = e.take_read_beat(52).unwrap();
+        assert!(!b.error, "spikes delay, they do not corrupt");
+        assert_eq!(b.data, vec![9; 4]);
+    }
+
+    #[test]
+    fn stalled_endpoint_stops_delivering_and_reports_far_wake() {
+        let mut e = ep(1, 4);
+        e.data.write(0, &[5; 4]);
+        e.inject = Some(ErrorInjector::stall(10));
+        assert!(e.try_read_req(0, 0, 4, 0));
+        let b = e.take_read_beat(5);
+        assert!(b.is_some(), "before stall_at the endpoint behaves normally");
+        assert!(e.try_read_req(6, 0, 4, 0));
+        for c in 10..20 {
+            assert!(e.take_read_beat(c).is_none(), "stalled at {c}");
+        }
+        let wake = e.next_read_beat_at(15).unwrap();
+        assert!(wake >= 15 + STALL_HORIZON, "stalled wake must be far future");
+        assert!(!e.idle());
+        e.force_reset();
+        assert!(e.idle(), "force_reset drops in-flight state");
     }
 
     #[test]

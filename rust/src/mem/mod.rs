@@ -5,6 +5,6 @@ mod endpoint;
 mod model;
 mod sparse;
 
-pub use endpoint::{Endpoint, ErrorInjector, ReadBeat, TransientFault, WriteResp};
+pub use endpoint::{Endpoint, ErrorInjector, ReadBeat, TransientFault, WriteResp, POISON};
 pub use model::MemModel;
 pub use sparse::{SparseMemory, PAGE_SIZE};

@@ -1,0 +1,455 @@
+//! Deterministic fault-injection campaign: seeded fault scenarios ×
+//! the five §3 system instantiations, each case supervised by a
+//! [`Supervisor`], swept in parallel via [`crate::sim::sweep`] and
+//! reduced to a machine-readable JSON report.
+//!
+//! Determinism: every random decision (payloads, beat-fault coins,
+//! retry jitter) derives from [`CampaignCfg::seed`] through
+//! [`XorShift64`], and [`crate::sim::sweep`] returns results in input
+//! order — so two runs with the same configuration produce the same
+//! JSON byte-for-byte, regardless of thread count.
+
+use crate::mem::ErrorInjector;
+use crate::midend::NdJob;
+use crate::protocol::ProtocolKind;
+use crate::sim::sweep::{sweep, sweep_default};
+use crate::sim::XorShift64;
+use crate::system::IdmaSystem;
+use crate::systems::cheshire::Cheshire;
+use crate::systems::control_pulp::ControlPulp;
+use crate::systems::manticore::Manticore;
+use crate::systems::mempool::MemPool;
+use crate::systems::pulp_open::PulpOpen;
+use crate::telemetry::TransferStatus;
+use crate::transfer::{ErrorAction, NdTransfer, Transfer1D, TransferOpts};
+
+use super::{HealthState, RetryPolicy, Supervisor};
+
+/// The five §3 case-study systems, in campaign order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// desc_64 SoC DMA (single DRAM endpoint, AXI4 → AXI4).
+    Cheshire,
+    /// sDMAE power-controller DMA (sensor window → TCDM).
+    ControlPulp,
+    /// Snitch cluster DMA (HBM → banked L1).
+    Manticore,
+    /// One region of the distributed manycore DMA (L2 → L1, flat view).
+    MemPool,
+    /// ULP cluster DMA (L2 → TCDM).
+    PulpOpen,
+}
+
+impl SystemKind {
+    /// All systems, in sweep order.
+    pub const ALL: [SystemKind; 5] = [
+        SystemKind::Cheshire,
+        SystemKind::ControlPulp,
+        SystemKind::Manticore,
+        SystemKind::MemPool,
+        SystemKind::PulpOpen,
+    ];
+
+    /// Stable lowercase name (JSON key material).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Cheshire => "cheshire",
+            SystemKind::ControlPulp => "control_pulp",
+            SystemKind::Manticore => "manticore",
+            SystemKind::MemPool => "mempool",
+            SystemKind::PulpOpen => "pulp_open",
+        }
+    }
+}
+
+/// Seeded fault scenarios applied to each system's source-side
+/// endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultScenario {
+    /// No injector: establishes the clean-run reference behaviour.
+    Baseline,
+    /// A transient faulting address window over the first job's source
+    /// range, self-clearing after two hits — the partial-replay case.
+    TransientRange,
+    /// Seeded probabilistic per-beat data corruption on reads and
+    /// writes.
+    BeatFaults,
+    /// Seeded probabilistic latency spikes (no data corruption): jobs
+    /// must still complete cleanly, just slower.
+    LatencySpikes,
+    /// The endpoint stops responding early in the run — the watchdog
+    /// case: every job must resolve as `TimedOut` (or fail fast once
+    /// the endpoint is quarantined) within its deadline.
+    PermanentStall,
+}
+
+impl FaultScenario {
+    /// All scenarios, in sweep order.
+    pub const ALL: [FaultScenario; 5] = [
+        FaultScenario::Baseline,
+        FaultScenario::TransientRange,
+        FaultScenario::BeatFaults,
+        FaultScenario::LatencySpikes,
+        FaultScenario::PermanentStall,
+    ];
+
+    /// Stable lowercase name (JSON key material).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultScenario::Baseline => "baseline",
+            FaultScenario::TransientRange => "transient_range",
+            FaultScenario::BeatFaults => "beat_faults",
+            FaultScenario::LatencySpikes => "latency_spikes",
+            FaultScenario::PermanentStall => "permanent_stall",
+        }
+    }
+}
+
+/// Campaign configuration.
+#[derive(Debug, Clone)]
+pub struct CampaignCfg {
+    /// Master seed: payloads, injector coins and retry jitter all
+    /// derive from it.
+    pub seed: u64,
+    /// Supervised jobs per (system, scenario) case.
+    pub jobs_per_case: u64,
+    /// Payload bytes per job.
+    pub job_bytes: u64,
+    /// Per-job watchdog deadline in cycles.
+    pub deadline: u64,
+    /// Sweep worker threads (`0` = one per core).
+    pub threads: usize,
+}
+
+impl Default for CampaignCfg {
+    fn default() -> Self {
+        Self { seed: 0xCA4D_0007, jobs_per_case: 4, job_bytes: 2048, deadline: 200_000, threads: 0 }
+    }
+}
+
+/// Aggregated outcome of one (system, scenario) case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// System name.
+    pub system: &'static str,
+    /// Scenario name.
+    pub scenario: &'static str,
+    /// Jobs submitted.
+    pub jobs: u64,
+    /// Jobs that completed `Ok` without any retry.
+    pub ok_clean: u64,
+    /// Jobs that completed `Ok` after at least one retry round.
+    pub recovered: u64,
+    /// Jobs that ended in a final `BusError` (retries exhausted or
+    /// failed fast against a quarantined endpoint).
+    pub failed: u64,
+    /// Jobs force-aborted by the watchdog.
+    pub timed_out: u64,
+    /// Retry rounds across all jobs.
+    pub retries: u64,
+    /// Destination bytes verified byte-identical to the source image
+    /// (checked for every `Ok` job).
+    pub bytes_verified: u64,
+    /// `Ok` jobs whose destination did NOT match the source — must be
+    /// zero; anything else is a recovery-correctness bug.
+    pub verify_failures: u64,
+    /// Endpoints left quarantined.
+    pub quarantined_endpoints: u64,
+    /// Facade clock when the case resolved.
+    pub cycles: u64,
+}
+
+impl CaseResult {
+    fn json(&self) -> String {
+        format!(
+            "{{\"system\":\"{}\",\"scenario\":\"{}\",\"jobs\":{},\"ok_clean\":{},\
+             \"recovered\":{},\"failed\":{},\"timed_out\":{},\"retries\":{},\
+             \"bytes_verified\":{},\"verify_failures\":{},\"quarantined_endpoints\":{},\
+             \"cycles\":{}}}",
+            self.system,
+            self.scenario,
+            self.jobs,
+            self.ok_clean,
+            self.recovered,
+            self.failed,
+            self.timed_out,
+            self.retries,
+            self.bytes_verified,
+            self.verify_failures,
+            self.quarantined_endpoints,
+            self.cycles
+        )
+    }
+}
+
+/// Full campaign output.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// The configuration the campaign ran with.
+    pub cfg: CampaignCfg,
+    /// One result per (system, scenario), in
+    /// [`SystemKind::ALL`] × [`FaultScenario::ALL`] order.
+    pub cases: Vec<CaseResult>,
+}
+
+impl CampaignReport {
+    /// Render the deterministic JSON report.
+    pub fn to_json(&self) -> String {
+        let cases: Vec<String> = self.cases.iter().map(CaseResult::json).collect();
+        let sum = |f: fn(&CaseResult) -> u64| self.cases.iter().map(f).sum::<u64>();
+        format!(
+            "{{\"campaign\":\"resilience\",\"seed\":{},\"jobs_per_case\":{},\
+             \"job_bytes\":{},\"deadline\":{},\"cases\":[{}],\
+             \"totals\":{{\"jobs\":{},\"ok_clean\":{},\"recovered\":{},\"failed\":{},\
+             \"timed_out\":{},\"retries\":{},\"verify_failures\":{}}}}}",
+            self.cfg.seed,
+            self.cfg.jobs_per_case,
+            self.cfg.job_bytes,
+            self.cfg.deadline,
+            cases.join(","),
+            sum(|c| c.jobs),
+            sum(|c| c.ok_clean),
+            sum(|c| c.recovered),
+            sum(|c| c.failed),
+            sum(|c| c.timed_out),
+            sum(|c| c.retries),
+            sum(|c| c.verify_failures),
+        )
+    }
+}
+
+/// Where a system keeps its source/destination data and which endpoint
+/// the fault injector attaches to (always the source side — the "far",
+/// less reliable memory).
+struct Plan {
+    src_base: u64,
+    dst_base: u64,
+    src_proto: ProtocolKind,
+    dst_proto: ProtocolKind,
+    src_ep: usize,
+    dst_ep: usize,
+}
+
+fn build(kind: SystemKind) -> (IdmaSystem, Plan) {
+    match kind {
+        SystemKind::Cheshire => (
+            Cheshire::default().resilient_system(),
+            Plan {
+                src_base: 0x8000_0000,
+                dst_base: 0x9000_0000,
+                src_proto: ProtocolKind::Axi4,
+                dst_proto: ProtocolKind::Axi4,
+                src_ep: 0,
+                dst_ep: 0,
+            },
+        ),
+        SystemKind::ControlPulp => (
+            ControlPulp::default().resilient_system(),
+            Plan {
+                src_base: 0x4000_0000,
+                dst_base: 0x0010_0000,
+                src_proto: ProtocolKind::Axi4,
+                dst_proto: ProtocolKind::Obi,
+                src_ep: 0,
+                dst_ep: 1,
+            },
+        ),
+        SystemKind::Manticore => (
+            Manticore::default().resilient_system(),
+            Plan {
+                src_base: 0x8000_0000,
+                dst_base: 0x0010_0000,
+                src_proto: ProtocolKind::Axi4,
+                dst_proto: ProtocolKind::Obi,
+                src_ep: 0,
+                dst_ep: 1,
+            },
+        ),
+        SystemKind::MemPool => (
+            MemPool::default().flat_system(),
+            Plan {
+                src_base: 0x8000_0000,
+                dst_base: 0x1000_0000,
+                src_proto: ProtocolKind::Axi4,
+                dst_proto: ProtocolKind::Obi,
+                src_ep: 0,
+                dst_ep: 1,
+            },
+        ),
+        SystemKind::PulpOpen => (
+            PulpOpen::default().resilient_system(),
+            Plan {
+                src_base: 0x1C00_0000,
+                dst_base: 0x1000_0000,
+                src_proto: ProtocolKind::Axi4,
+                dst_proto: ProtocolKind::Obi,
+                src_ep: 0,
+                dst_ep: 1,
+            },
+        ),
+    }
+}
+
+fn injector(scen: FaultScenario, cfg: &CampaignCfg, salt: u64, plan: &Plan) -> Option<ErrorInjector> {
+    match scen {
+        FaultScenario::Baseline => None,
+        FaultScenario::TransientRange => Some(ErrorInjector::transient(
+            plan.src_base,
+            plan.src_base + cfg.job_bytes / 2,
+            2,
+        )),
+        FaultScenario::BeatFaults => Some(ErrorInjector::beat_faults(0.02, cfg.seed ^ salt)),
+        FaultScenario::LatencySpikes => {
+            Some(ErrorInjector::latency_spikes(0.05, 200, cfg.seed ^ salt ^ 0x5B1C))
+        }
+        FaultScenario::PermanentStall => Some(ErrorInjector::stall(64)),
+    }
+}
+
+/// Run one (system, scenario) case to resolution.
+pub fn run_case(cfg: &CampaignCfg, kind: SystemKind, scen: FaultScenario) -> CaseResult {
+    let (mut sys, plan) = build(kind);
+    let salt = ((kind as u64) << 8) | scen as u64;
+    sys.mems[plan.src_ep].inject = injector(scen, cfg, salt, &plan);
+    let policy = RetryPolicy { seed: cfg.seed ^ (salt << 32), ..Default::default() };
+    let mut sup = Supervisor::new(sys, policy).with_deadline(cfg.deadline);
+
+    let mut rng = XorShift64::new(cfg.seed ^ (salt << 16) ^ 0x5EED_CAFE);
+    let mut srcs: Vec<Vec<u8>> = Vec::new();
+    for i in 0..cfg.jobs_per_case {
+        let mut buf = vec![0u8; cfg.job_bytes as usize];
+        rng.fill(&mut buf);
+        sup.sys.mems[plan.src_ep].data.write(plan.src_base + i * cfg.job_bytes, &buf);
+        srcs.push(buf);
+        let t = Transfer1D {
+            id: 0,
+            src: plan.src_base + i * cfg.job_bytes,
+            dst: plan.dst_base + i * cfg.job_bytes,
+            len: cfg.job_bytes,
+            src_protocol: plan.src_proto,
+            dst_protocol: plan.dst_proto,
+            opts: TransferOpts { on_error: ErrorAction::Continue, ..Default::default() },
+        };
+        sup.submit(NdJob::new(i + 1, NdTransfer::d1(t)));
+    }
+    sup.run();
+
+    let mut res = CaseResult {
+        system: kind.name(),
+        scenario: scen.name(),
+        jobs: cfg.jobs_per_case,
+        ok_clean: 0,
+        recovered: 0,
+        failed: 0,
+        timed_out: 0,
+        retries: 0,
+        bytes_verified: 0,
+        verify_failures: 0,
+        quarantined_endpoints: 0,
+        cycles: 0,
+    };
+    for r in sup.take_done() {
+        let i = (r.job - 1) as usize;
+        res.retries += r.retries as u64;
+        match r.status {
+            TransferStatus::Ok => {
+                if r.retries > 0 {
+                    res.recovered += 1;
+                } else {
+                    res.ok_clean += 1;
+                }
+                let got = sup.sys.mems[plan.dst_ep]
+                    .data
+                    .read_vec(plan.dst_base + i as u64 * cfg.job_bytes, cfg.job_bytes as usize);
+                if got == srcs[i] {
+                    res.bytes_verified += cfg.job_bytes;
+                } else {
+                    res.verify_failures += 1;
+                }
+            }
+            TransferStatus::BusError { .. } => res.failed += 1,
+            TransferStatus::TimedOut { .. } => res.timed_out += 1,
+        }
+    }
+    res.quarantined_endpoints = sup
+        .endpoint_health()
+        .iter()
+        .filter(|h| h.state == HealthState::Quarantined)
+        .count() as u64;
+    res.cycles = sup.sys.now();
+    res
+}
+
+/// Run the full campaign: [`SystemKind::ALL`] × [`FaultScenario::ALL`],
+/// swept across worker threads, results in deterministic input order.
+pub fn run_campaign(cfg: &CampaignCfg) -> CampaignReport {
+    let mut items: Vec<(SystemKind, FaultScenario)> = Vec::new();
+    for k in SystemKind::ALL {
+        for s in FaultScenario::ALL {
+            items.push((k, s));
+        }
+    }
+    let f = |_i: usize, c: &(SystemKind, FaultScenario)| run_case(cfg, c.0, c.1);
+    let cases =
+        if cfg.threads == 0 { sweep_default(&items, f) } else { sweep(&items, cfg.threads, f) };
+    CampaignReport { cfg: cfg.clone(), cases }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CampaignCfg {
+        CampaignCfg { jobs_per_case: 2, job_bytes: 512, deadline: 30_000, ..Default::default() }
+    }
+
+    #[test]
+    fn baseline_case_is_all_clean() {
+        let r = run_case(&small_cfg(), SystemKind::Cheshire, FaultScenario::Baseline);
+        assert_eq!(r.ok_clean, 2, "{r:?}");
+        assert_eq!(r.recovered + r.failed + r.timed_out, 0, "{r:?}");
+        assert_eq!(r.bytes_verified, 1024);
+        assert_eq!(r.verify_failures, 0);
+    }
+
+    #[test]
+    fn transient_case_recovers_byte_identical() {
+        let r = run_case(&small_cfg(), SystemKind::Manticore, FaultScenario::TransientRange);
+        assert!(r.recovered >= 1, "first job must need recovery: {r:?}");
+        assert_eq!(r.ok_clean + r.recovered, r.jobs, "{r:?}");
+        assert_eq!(r.verify_failures, 0, "{r:?}");
+        assert!(r.retries >= 1);
+    }
+
+    #[test]
+    fn stall_case_times_out_and_quarantines() {
+        let r = run_case(&small_cfg(), SystemKind::PulpOpen, FaultScenario::PermanentStall);
+        assert_eq!(r.ok_clean, 0, "{r:?}");
+        assert_eq!(r.timed_out + r.failed, r.jobs, "every job resolves: {r:?}");
+        assert!(r.timed_out >= 1, "{r:?}");
+        assert!(r.quarantined_endpoints >= 1, "{r:?}");
+        assert!(r.cycles < 30_000 + 25_000, "resolved near the deadline: {r:?}");
+    }
+
+    #[test]
+    fn latency_spikes_do_not_corrupt() {
+        let r = run_case(&small_cfg(), SystemKind::MemPool, FaultScenario::LatencySpikes);
+        assert_eq!(r.ok_clean, r.jobs, "{r:?}");
+        assert_eq!(r.verify_failures, 0);
+    }
+
+    #[test]
+    fn same_seed_same_json() {
+        // The acceptance determinism gate, in miniature: two full runs
+        // with the same seed must render byte-identical reports, and
+        // the thread count must not matter.
+        let mut cfg = small_cfg();
+        cfg.threads = 1;
+        let a = run_campaign(&cfg).to_json();
+        cfg.threads = 2;
+        let b = run_campaign(&cfg).to_json();
+        assert_eq!(a, b);
+        assert!(a.contains("\"campaign\":\"resilience\""));
+        assert!(a.contains("\"verify_failures\":0"));
+    }
+}

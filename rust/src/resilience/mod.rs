@@ -1,0 +1,261 @@
+//! Resilience layer: retry/backoff policies, watchdog deadlines,
+//! partial-transfer replay and endpoint health tracking on top of the
+//! [`crate::system::IdmaSystem`] facade.
+//!
+//! The paper's error-handling hardware (§2.4) recovers *within* a
+//! transfer: the back-end can replay or drop individual faulting bursts.
+//! This module models the layer a real deployment stacks *above* that —
+//! the driver/firmware policy that decides what to do when a whole job
+//! comes back damaged:
+//!
+//! * [`RetryPolicy`] — bounded re-submission with fixed or exponential
+//!   backoff and deterministic jitter (seeded [`crate::sim::XorShift64`],
+//!   so every run is reproducible).
+//! * **Partial replay** — when the back-end reports exactly which burst
+//!   ranges failed (`Continue` holes), the [`Supervisor`] re-copies only
+//!   those byte ranges instead of the whole job. Coupled-mode
+//!   legalization guarantees read burst *k* and write burst *k* cover
+//!   the same offset range, so the hole is exactly the reported range.
+//! * **Watchdog deadlines** — each supervised job gets a wall-cycle
+//!   budget; a stalled endpoint trips
+//!   [`crate::engine::IdmaEngine::timeout_job`], which force-aborts the
+//!   job and completes it with [`TransferStatus::TimedOut`].
+//! * [`EndpointHealth`] — consecutive-failure tracking per endpoint with
+//!   `Healthy → Degraded → Quarantined` transitions; quarantined
+//!   endpoints fail new jobs fast instead of burning retry budget.
+//! * [`campaign`] — a deterministic fault-injection campaign runner
+//!   sweeping seeded fault scenarios across the five `systems/*`
+//!   instantiations via [`crate::sim::sweep`].
+//!
+//! [`TransferStatus::TimedOut`]: crate::telemetry::TransferStatus::TimedOut
+
+pub mod campaign;
+mod supervisor;
+
+pub use campaign::{run_campaign, CampaignCfg, CampaignReport, FaultScenario, SystemKind};
+pub use supervisor::Supervisor;
+
+use crate::sim::XorShift64;
+
+/// Backoff schedule for retries, in facade cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backoff {
+    /// Constant delay before every retry.
+    Fixed(u64),
+    /// `base * factor^(attempt-1)`, saturating at `cap`.
+    Exponential {
+        /// Delay before the first retry.
+        base: u64,
+        /// Multiplier per subsequent retry.
+        factor: u64,
+        /// Upper bound on the computed delay.
+        cap: u64,
+    },
+}
+
+/// Retry policy for supervised jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total submission attempts per job (first try included). `1`
+    /// disables retries.
+    pub max_attempts: u32,
+    /// Delay schedule between attempts.
+    pub backoff: Backoff,
+    /// Deterministic jitter added to each delay: uniform in
+    /// `0..=jitter` cycles, drawn from the policy's seeded RNG. Avoids
+    /// lock-step retry storms when many jobs fail together.
+    pub jitter: u64,
+    /// Allow partial-range replay when the error reports identify the
+    /// damaged ranges exactly; otherwise every retry re-copies the
+    /// whole job.
+    pub allow_partial: bool,
+    /// Seed for the jitter RNG (reproducible campaigns).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            backoff: Backoff::Fixed(64),
+            jitter: 16,
+            allow_partial: true,
+            seed: 0x1D3A_5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay in cycles before retry number `attempt` (1-based), jitter
+    /// included.
+    pub fn delay(&self, attempt: u32, rng: &mut XorShift64) -> u64 {
+        let base = match self.backoff {
+            Backoff::Fixed(c) => c,
+            Backoff::Exponential { base, factor, cap } => base
+                .saturating_mul(factor.saturating_pow(attempt.saturating_sub(1)))
+                .min(cap),
+        };
+        let j = if self.jitter > 0 { rng.below(self.jitter + 1) } else { 0 };
+        base.saturating_add(j)
+    }
+}
+
+/// Health classification of one endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthState {
+    /// No recent failures.
+    #[default]
+    Healthy,
+    /// Consecutive failures reached [`HealthPolicy::degrade_after`]; the
+    /// endpoint still serves jobs but is suspect.
+    Degraded,
+    /// Consecutive failures reached [`HealthPolicy::quarantine_after`]
+    /// (or a watchdog timeout implicated the endpoint). New jobs
+    /// touching it fail fast; the state is sticky.
+    Quarantined,
+}
+
+/// Thresholds for the `Healthy → Degraded → Quarantined` ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthPolicy {
+    /// Consecutive failures before an endpoint is marked degraded.
+    pub degrade_after: u32,
+    /// Consecutive failures before quarantine. A watchdog timeout
+    /// quarantines immediately (a stall is not worth probing again).
+    pub quarantine_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self { degrade_after: 2, quarantine_after: 5 }
+    }
+}
+
+/// Failure history of one endpoint, updated by the [`Supervisor`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EndpointHealth {
+    /// Current classification.
+    pub state: HealthState,
+    /// Failures since the last success.
+    pub consecutive_failures: u32,
+    /// Lifetime failed attempts attributed to this endpoint.
+    pub failures: u64,
+    /// Lifetime successful attempts that touched this endpoint.
+    pub successes: u64,
+}
+
+impl EndpointHealth {
+    /// Record a failed attempt. Returns `true` when this failure newly
+    /// quarantined the endpoint (the caller emits the telemetry event).
+    pub fn on_failure(&mut self, p: &HealthPolicy) -> bool {
+        self.failures += 1;
+        self.consecutive_failures += 1;
+        if self.state == HealthState::Quarantined {
+            return false;
+        }
+        if self.consecutive_failures >= p.quarantine_after {
+            self.state = HealthState::Quarantined;
+            return true;
+        }
+        if self.consecutive_failures >= p.degrade_after {
+            self.state = HealthState::Degraded;
+        }
+        false
+    }
+
+    /// Quarantine outright (watchdog timeout). Returns `true` when the
+    /// state changed.
+    pub fn quarantine(&mut self) -> bool {
+        self.failures += 1;
+        self.consecutive_failures += 1;
+        if self.state == HealthState::Quarantined {
+            return false;
+        }
+        self.state = HealthState::Quarantined;
+        true
+    }
+
+    /// Record a successful attempt: clears the consecutive counter and
+    /// recovers `Degraded` endpoints. Quarantine is sticky.
+    pub fn on_success(&mut self) {
+        self.successes += 1;
+        self.consecutive_failures = 0;
+        if self.state == HealthState::Degraded {
+            self.state = HealthState::Healthy;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_backoff_with_jitter_bounds() {
+        let p = RetryPolicy { backoff: Backoff::Fixed(100), jitter: 10, ..Default::default() };
+        let mut rng = XorShift64::new(7);
+        for attempt in 1..=5 {
+            let d = p.delay(attempt, &mut rng);
+            assert!((100..=110).contains(&d), "attempt {attempt}: {d}");
+        }
+    }
+
+    #[test]
+    fn exponential_backoff_doubles_then_caps() {
+        let p = RetryPolicy {
+            backoff: Backoff::Exponential { base: 32, factor: 2, cap: 100 },
+            jitter: 0,
+            ..Default::default()
+        };
+        let mut rng = XorShift64::new(1);
+        assert_eq!(p.delay(1, &mut rng), 32);
+        assert_eq!(p.delay(2, &mut rng), 64);
+        assert_eq!(p.delay(3, &mut rng), 100, "capped");
+        assert_eq!(p.delay(10, &mut rng), 100, "saturating, no overflow");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let p = RetryPolicy::default();
+        let a: Vec<u64> = {
+            let mut rng = XorShift64::new(p.seed);
+            (1..=8).map(|i| p.delay(i, &mut rng)).collect()
+        };
+        let b: Vec<u64> = {
+            let mut rng = XorShift64::new(p.seed);
+            (1..=8).map(|i| p.delay(i, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn health_ladder_degrades_quarantines_and_recovers() {
+        let hp = HealthPolicy::default();
+        let mut h = EndpointHealth::default();
+        assert_eq!(h.state, HealthState::Healthy);
+        h.on_failure(&hp);
+        assert_eq!(h.state, HealthState::Healthy);
+        h.on_failure(&hp);
+        assert_eq!(h.state, HealthState::Degraded);
+        h.on_success();
+        assert_eq!(h.state, HealthState::Healthy, "degraded recovers");
+        assert_eq!(h.consecutive_failures, 0);
+        let mut newly = false;
+        for _ in 0..5 {
+            newly = h.on_failure(&hp);
+        }
+        assert!(newly, "fifth consecutive failure quarantines");
+        assert_eq!(h.state, HealthState::Quarantined);
+        assert!(!h.on_failure(&hp), "already quarantined: not 'newly'");
+        h.on_success();
+        assert_eq!(h.state, HealthState::Quarantined, "quarantine is sticky");
+    }
+
+    #[test]
+    fn watchdog_timeout_quarantines_immediately() {
+        let mut h = EndpointHealth::default();
+        assert!(h.quarantine());
+        assert_eq!(h.state, HealthState::Quarantined);
+        assert!(!h.quarantine());
+    }
+}

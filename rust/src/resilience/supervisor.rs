@@ -1,0 +1,762 @@
+//! The [`Supervisor`]: a driver/firmware-level recovery loop wrapped
+//! around one [`IdmaSystem`].
+//!
+//! The supervisor owns the facade and drives it in bounded
+//! `run_until` chunks, interleaving three duties between chunks:
+//!
+//! 1. **Release** — submit jobs and due retries (backpressure defers
+//!    them one cycle).
+//! 2. **Collect** — drain completion records, update endpoint health
+//!    and either finalize each job or schedule its next attempt
+//!    (partial-range replay when the error reports allow, full-job
+//!    replay otherwise).
+//! 3. **Deadlines** — force-abort jobs past their wall-cycle budget via
+//!    [`crate::engine::IdmaEngine::timeout_job`], quarantine and reset
+//!    the endpoints involved.
+//!
+//! Retries are resubmitted under fresh engine-side IDs (the
+//! [`RETRY_BASE`] / [`FRAG_BASE`] namespaces) because the engine's
+//! watchdog kill-list swallows any resurrection of a timed-out ID; the
+//! final [`CompletionRecord`] always reports the original user job ID,
+//! the first submission cycle and the retry count.
+
+use std::collections::HashMap;
+
+use crate::backend::ErrorReport;
+use crate::midend::NdJob;
+use crate::protocol::ProtocolKind;
+use crate::sim::{Cycle, XorShift64};
+use crate::system::IdmaSystem;
+use crate::telemetry::{
+    CompletionRecord, Probe, SharedSink, TelemetryEvent, TransferStatus,
+};
+use crate::transfer::{ErrorAction, NdTransfer, Transfer1D};
+
+use super::{EndpointHealth, HealthPolicy, HealthState, RetryPolicy};
+
+/// Engine-side ID namespace for full-job retries. User job IDs must
+/// stay below this (the facade additionally requires IDs below
+/// `1 << `[`crate::system::FE_TAG_SHIFT`]).
+pub const RETRY_BASE: u64 = 1 << 46;
+/// Engine-side ID namespace for partial-replay fragments.
+pub const FRAG_BASE: u64 = 1 << 47;
+
+/// `run_until` chunk size. Must stay well below the facade's per-call
+/// deadlock-watchdog limit (100 k cycles): a permanently stalled
+/// endpoint legitimately makes no progress, and chunking keeps each
+/// no-progress window below the assertion threshold until the
+/// supervisor's own deadline machinery fires.
+const CHUNK: Cycle = 20_000;
+
+/// Stride for busy-phase advancement inside one chunk: bounds how far
+/// the clock can overshoot the moment the facade drains.
+const STRIDE: Cycle = 1_024;
+
+/// Hard cap on supervised simulated cycles — catches job sets that can
+/// never resolve (a stalled endpoint and no deadline configured).
+const RUNAWAY: u64 = 100_000_000;
+
+/// More merged damage ranges than this and a full-job replay is cheaper
+/// than fragment bookkeeping.
+const MAX_FRAGMENTS: usize = 16;
+
+/// Per-job recovery state.
+struct Managed {
+    nd: NdJob,
+    /// Retry rounds scheduled so far (full or partial).
+    retries: u32,
+    first_submit: Cycle,
+    deadline: Option<Cycle>,
+    /// Engine-side IDs currently submitted for this job.
+    inflight: Vec<u64>,
+    /// Fragments of the current partial-replay round not yet completed.
+    frag_outstanding: u32,
+    /// A fragment of the current round failed; siblings are ignored.
+    frag_failed: bool,
+    /// Whether the first attempt went out (retries use fresh IDs).
+    submitted_once: bool,
+    /// Status of the most recent failed attempt (reported on give-up).
+    last_status: TransferStatus,
+    /// The wall-cycle deadline fired; finalize as timed out.
+    timed_out: bool,
+}
+
+/// A queued (re)submission.
+struct Pending {
+    due: Cycle,
+    user: u64,
+    /// `None` = full job; `Some((offset, len))` = partial-replay
+    /// fragment over that byte range of the original 1D transfer.
+    frag: Option<(u64, u64)>,
+}
+
+/// Retry/watchdog/health supervisor over one [`IdmaSystem`].
+pub struct Supervisor {
+    /// The supervised facade (public: tests and campaigns pre-load
+    /// endpoint memory and inspect it afterwards).
+    pub sys: IdmaSystem,
+    /// Retry policy applied to every supervised job.
+    pub policy: RetryPolicy,
+    /// Endpoint health thresholds.
+    pub health_policy: HealthPolicy,
+    /// Wall-cycle budget per job, measured from its first submission.
+    /// `None` disables the watchdog (a permanent stall then trips the
+    /// runaway assertion instead of resolving).
+    pub deadline: Option<u64>,
+    rng: XorShift64,
+    probe: Probe,
+    jobs: HashMap<u64, Managed>,
+    /// Engine-side ID → user job ID for everything in flight.
+    cur2user: HashMap<u64, u64>,
+    pending: Vec<Pending>,
+    health: Vec<EndpointHealth>,
+    done: Vec<CompletionRecord>,
+    next_retry_id: u64,
+    next_frag_id: u64,
+}
+
+impl Supervisor {
+    /// Wrap `sys` with the given retry policy. The jitter RNG is seeded
+    /// from the policy, so identical configurations replay identically.
+    pub fn new(sys: IdmaSystem, policy: RetryPolicy) -> Self {
+        let n = sys.mems.len();
+        Self {
+            sys,
+            policy,
+            health_policy: HealthPolicy::default(),
+            deadline: None,
+            rng: XorShift64::new(policy.seed),
+            probe: Probe::none(),
+            jobs: HashMap::new(),
+            cur2user: HashMap::new(),
+            pending: Vec::new(),
+            health: vec![EndpointHealth::default(); n],
+            done: Vec::new(),
+            next_retry_id: 0,
+            next_frag_id: 0,
+        }
+    }
+
+    /// Set the per-job wall-cycle budget.
+    pub fn with_deadline(mut self, cycles: u64) -> Self {
+        self.deadline = Some(cycles);
+        self
+    }
+
+    /// Replace the endpoint health thresholds.
+    pub fn with_health_policy(mut self, hp: HealthPolicy) -> Self {
+        self.health_policy = hp;
+        self
+    }
+
+    /// Attach a telemetry sink to the supervisor (retry/quarantine
+    /// events) and the underlying system (full lifecycle events).
+    pub fn attach_sink(&mut self, sink: SharedSink) {
+        self.probe = Probe::attached(sink.clone());
+        self.sys.attach_sink(sink);
+    }
+
+    /// Health records, indexed like [`IdmaSystem::mems`].
+    pub fn endpoint_health(&self) -> &[EndpointHealth] {
+        &self.health
+    }
+
+    /// Enqueue a job under supervision. Returns the user job ID. IDs
+    /// must be unique and below [`RETRY_BASE`].
+    pub fn submit(&mut self, j: NdJob) -> u64 {
+        assert!(j.job < RETRY_BASE, "user job IDs must stay below the retry namespace");
+        assert!(!self.jobs.contains_key(&j.job), "duplicate supervised job ID");
+        let now = self.sys.now();
+        let user = j.job;
+        self.jobs.insert(
+            user,
+            Managed {
+                nd: j,
+                retries: 0,
+                first_submit: now,
+                deadline: self.deadline.map(|d| now + d),
+                inflight: Vec::new(),
+                frag_outstanding: 0,
+                frag_failed: false,
+                submitted_once: false,
+                last_status: TransferStatus::Ok,
+                timed_out: false,
+            },
+        );
+        self.pending.push(Pending { due: now, user, frag: None });
+        user
+    }
+
+    /// Unresolved supervised jobs.
+    pub fn in_flight(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Drain the final records of resolved jobs (one per user job, in
+    /// resolution order).
+    pub fn take_done(&mut self) -> Vec<CompletionRecord> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Drive the system until every supervised job has resolved
+    /// (succeeded, exhausted its retries, failed fast on a quarantined
+    /// endpoint, or timed out). Returns the facade clock.
+    pub fn run(&mut self) -> Cycle {
+        let start = self.sys.now();
+        loop {
+            let now = self.sys.now();
+            self.release_due(now);
+            if self.jobs.is_empty() {
+                break;
+            }
+            let mut horizon = now + CHUNK;
+            for p in &self.pending {
+                horizon = horizon.min(p.due.max(now + 1));
+            }
+            for m in self.jobs.values() {
+                if let Some(d) = m.deadline {
+                    if !m.timed_out {
+                        horizon = horizon.min(d.max(now + 1));
+                    }
+                }
+            }
+            if self.sys.busy() {
+                // Advance in strides, stopping as soon as the facade
+                // drains — `run_until` idle-skips to its deadline, which
+                // would otherwise inflate every resolution time to a
+                // chunk boundary.
+                let mut t = now;
+                while t < horizon {
+                    t = (t + STRIDE).min(horizon);
+                    self.sys.run_until(t);
+                    if !self.sys.busy() {
+                        break;
+                    }
+                }
+            } else {
+                // Idle: nothing changes before the next supervisor
+                // event (retry due / deadline / chunk), so jump there.
+                self.sys.run_until(horizon);
+            }
+            let now = self.sys.now();
+            self.collect(now);
+            self.check_deadlines(now);
+            assert!(
+                now - start < RUNAWAY,
+                "supervisor runaway: unresolved jobs and no deadline configured"
+            );
+        }
+        self.sys.now()
+    }
+
+    /// Convenience: supervise a single job to resolution and return its
+    /// final record.
+    pub fn run_job(&mut self, j: NdJob) -> CompletionRecord {
+        let user = self.submit(j);
+        self.run();
+        let i = self.done.iter().position(|r| r.job == user).expect("run() resolves the job");
+        self.done.remove(i)
+    }
+
+    /// Endpoints a job touches (source skipped for `Init` fills),
+    /// resolved through the back-end's port map.
+    fn endpoints_of(&self, nd: &NdJob) -> Vec<usize> {
+        let cfg = &self.sys.engine.backend.cfg;
+        let t = &nd.nd.inner;
+        let mut v = Vec::new();
+        if t.src_protocol != ProtocolKind::Init {
+            if let Some(p) = cfg.port_for(t.src_protocol) {
+                v.push(cfg.ports[p].mem);
+            }
+        }
+        if let Some(p) = cfg.port_for(t.dst_protocol) {
+            let m = cfg.ports[p].mem;
+            if !v.contains(&m) {
+                v.push(m);
+            }
+        }
+        v
+    }
+
+    fn touches_quarantined(&self, user: u64) -> bool {
+        self.endpoints_of(&self.jobs[&user].nd)
+            .iter()
+            .any(|&e| self.health[e].state == HealthState::Quarantined)
+    }
+
+    /// Submit everything due; defer on backpressure by one cycle.
+    fn release_due(&mut self, now: Cycle) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].due > now {
+                i += 1;
+                continue;
+            }
+            let user = self.pending[i].user;
+            if !self.jobs.contains_key(&user) {
+                self.pending.swap_remove(i);
+                continue;
+            }
+            // Quarantined endpoint: fail fast instead of burning cycles.
+            if self.touches_quarantined(user) {
+                self.pending.swap_remove(i);
+                self.fail_fast(now, user);
+                continue;
+            }
+            let frag = self.pending[i].frag;
+            let id = match frag {
+                Some(_) => {
+                    self.next_frag_id += 1;
+                    FRAG_BASE | (self.next_frag_id - 1)
+                }
+                None if self.jobs[&user].submitted_once => {
+                    self.next_retry_id += 1;
+                    RETRY_BASE | (self.next_retry_id - 1)
+                }
+                None => user,
+            };
+            let j = {
+                let m = &self.jobs[&user];
+                match frag {
+                    None => {
+                        let mut j = m.nd.clone();
+                        j.job = id;
+                        j
+                    }
+                    Some((off, len)) => {
+                        let mut t: Transfer1D = m.nd.nd.inner;
+                        t.id = 0;
+                        t.src += off;
+                        t.dst += off;
+                        t.len = len;
+                        NdJob::new(id, NdTransfer::d1(t))
+                    }
+                }
+            };
+            if self.sys.submit(j) {
+                let m = self.jobs.get_mut(&user).unwrap();
+                m.submitted_once = true;
+                m.inflight.push(id);
+                self.cur2user.insert(id, user);
+                self.pending.swap_remove(i);
+            } else {
+                self.pending[i].due = now + 1;
+                i += 1;
+            }
+        }
+    }
+
+    /// Drain facade completions and act on each.
+    fn collect(&mut self, now: Cycle) {
+        for r in self.sys.take_done() {
+            self.on_record(now, r);
+        }
+    }
+
+    fn on_record(&mut self, now: Cycle, r: CompletionRecord) {
+        let id = r.job;
+        let Some(user) = self.cur2user.remove(&id) else { return };
+        let reports = self.sys.engine.take_error_detail(id);
+        if !self.jobs.contains_key(&user) {
+            return; // straggler of an already-finalized job
+        }
+        let is_frag = id & FRAG_BASE != 0;
+        {
+            let m = self.jobs.get_mut(&user).unwrap();
+            m.inflight.retain(|&x| x != id);
+            if is_frag && m.frag_outstanding > 0 {
+                m.frag_outstanding -= 1;
+            }
+        }
+
+        // "Recovered": clean, or every error was replayed in-backend
+        // without an abort (the error list must be complete to trust
+        // that judgement).
+        let recovered = match r.status {
+            TransferStatus::Ok => true,
+            TransferStatus::BusError { errors, aborted, .. } => {
+                !aborted
+                    && !reports.is_empty()
+                    && reports.len() == errors as usize
+                    && reports.iter().all(|e| e.action == ErrorAction::Replay)
+            }
+            TransferStatus::TimedOut { .. } => false,
+        };
+
+        if recovered {
+            for e in self.endpoints_of(&self.jobs[&user].nd) {
+                self.health[e].on_success();
+            }
+            if is_frag {
+                let m = &self.jobs[&user];
+                if m.frag_outstanding == 0 && !m.frag_failed {
+                    let rec = self.synth_record(user, now, TransferStatus::Ok);
+                    self.finalize(user, rec);
+                }
+            } else {
+                let m = &self.jobs[&user];
+                let rec = CompletionRecord {
+                    frontend: None,
+                    job: user,
+                    submitted: m.first_submit,
+                    retries: m.retries,
+                    ..r
+                };
+                self.finalize(user, rec);
+            }
+            return;
+        }
+
+        if let TransferStatus::TimedOut { .. } = r.status {
+            // The deadline path already quarantined and reset; the
+            // withheld record has now surfaced.
+            let m = &self.jobs[&user];
+            let rec = CompletionRecord {
+                frontend: None,
+                job: user,
+                submitted: m.first_submit,
+                retries: m.retries,
+                ..r
+            };
+            self.finalize(user, rec);
+            return;
+        }
+
+        // Bus-error failure: update health, then retry or give up.
+        self.note_failure(now, user, &reports);
+        self.jobs.get_mut(&user).unwrap().last_status = r.status;
+        if is_frag {
+            let m = self.jobs.get_mut(&user).unwrap();
+            if m.frag_failed {
+                return; // a sibling fragment already decided
+            }
+            m.frag_failed = true;
+        }
+        let exhausted = {
+            let m = &self.jobs[&user];
+            m.retries + 1 >= self.policy.max_attempts
+        };
+        if exhausted || self.touches_quarantined(user) {
+            let m = &self.jobs[&user];
+            let rec = if is_frag {
+                self.synth_record(user, now, m.last_status)
+            } else {
+                CompletionRecord {
+                    frontend: None,
+                    job: user,
+                    submitted: m.first_submit,
+                    retries: m.retries,
+                    ..r
+                }
+            };
+            self.finalize(user, rec);
+            return;
+        }
+
+        // Schedule the next round. A failed fragment always escalates
+        // to a full replay (the partial theory was wrong).
+        let holes = if is_frag {
+            None
+        } else {
+            self.hole_ranges(user, &r, &reports)
+        };
+        let m = self.jobs.get_mut(&user).unwrap();
+        m.retries += 1;
+        let attempt = m.retries;
+        let due = now + self.policy.delay(attempt, &mut self.rng);
+        match holes {
+            Some(ranges) => {
+                m.frag_outstanding = ranges.len() as u32;
+                m.frag_failed = false;
+                for (off, len) in ranges {
+                    self.pending.push(Pending { due, user, frag: Some((off, len)) });
+                }
+            }
+            None => {
+                m.frag_outstanding = 0;
+                m.frag_failed = false;
+                self.pending.push(Pending { due, user, frag: None });
+            }
+        }
+        self.probe.emit(TelemetryEvent::RetryScheduled { job: user, attempt, at: now });
+    }
+
+    /// The merged damaged byte ranges of a failed attempt, or `None`
+    /// when only a full replay is safe. Partial replay requires: the
+    /// policy allows it, the job is 1D with a real (non-`Init`) source,
+    /// nothing was aborted, the error list is complete, and every
+    /// `Continue` hole resolves to a range inside the transfer. In
+    /// coupled (error-handling) legalization read burst *k* and write
+    /// burst *k* cover the same byte offsets, so a reported burst range
+    /// identifies the destination hole exactly.
+    fn hole_ranges(
+        &self,
+        user: u64,
+        r: &CompletionRecord,
+        reports: &[ErrorReport],
+    ) -> Option<Vec<(u64, u64)>> {
+        if !self.policy.allow_partial {
+            return None;
+        }
+        let m = &self.jobs[&user];
+        let t = &m.nd.nd.inner;
+        if !m.nd.nd.dims.is_empty() || t.src_protocol == ProtocolKind::Init {
+            return None;
+        }
+        let TransferStatus::BusError { errors, aborted, .. } = r.status else { return None };
+        if aborted || reports.is_empty() || reports.len() != errors as usize {
+            return None;
+        }
+        let mut holes = Vec::new();
+        for e in reports {
+            match e.action {
+                ErrorAction::Replay => continue, // recovered in-backend
+                ErrorAction::Abort => return None,
+                ErrorAction::Continue => {}
+            }
+            let base = if e.is_read { t.src } else { t.dst };
+            let off = e.addr.checked_sub(base)?;
+            if e.len == 0 || off.checked_add(e.len)? > t.len {
+                return None;
+            }
+            holes.push((off, e.len));
+        }
+        if holes.is_empty() {
+            return None;
+        }
+        let merged = merge_ranges(holes);
+        if merged.len() > MAX_FRAGMENTS {
+            return None;
+        }
+        Some(merged)
+    }
+
+    /// Attribute a failed attempt to the implicated endpoints (per
+    /// error-report direction; all of the job's endpoints when no
+    /// detail survived) and emit quarantine transitions.
+    fn note_failure(&mut self, now: Cycle, user: u64, reports: &[ErrorReport]) {
+        let t = self.jobs[&user].nd.nd.inner;
+        let mut eps: Vec<usize> = Vec::new();
+        if reports.is_empty() {
+            eps = self.endpoints_of(&self.jobs[&user].nd);
+        } else {
+            let cfg = &self.sys.engine.backend.cfg;
+            for e in reports {
+                let proto = if e.is_read { t.src_protocol } else { t.dst_protocol };
+                if let Some(p) = cfg.port_for(proto) {
+                    let m = cfg.ports[p].mem;
+                    if !eps.contains(&m) {
+                        eps.push(m);
+                    }
+                }
+            }
+        }
+        for e in eps {
+            if self.health[e].on_failure(&self.health_policy) {
+                self.probe.emit(TelemetryEvent::EndpointQuarantined { endpoint: e, at: now });
+            }
+        }
+    }
+
+    /// Finalize a job without submitting it (quarantined endpoint).
+    fn fail_fast(&mut self, now: Cycle, user: u64) {
+        let status = match self.jobs[&user].last_status {
+            s @ TransferStatus::BusError { .. } => s,
+            _ => TransferStatus::BusError { errors: 0, aborted: true, addr: None },
+        };
+        let rec = self.synth_record(user, now, status);
+        self.finalize(user, rec);
+    }
+
+    /// A record for resolutions that don't map 1:1 onto one engine
+    /// completion (fragment rounds, fail-fast, queued-only timeouts).
+    fn synth_record(&self, user: u64, now: Cycle, status: TransferStatus) -> CompletionRecord {
+        let m = &self.jobs[&user];
+        CompletionRecord {
+            frontend: None,
+            job: user,
+            submitted: m.first_submit,
+            accepted: m.first_submit,
+            first_beat: None,
+            done: now,
+            retries: m.retries,
+            status,
+        }
+    }
+
+    fn finalize(&mut self, user: u64, rec: CompletionRecord) {
+        self.jobs.remove(&user);
+        self.pending.retain(|p| p.user != user);
+        self.done.push(rec);
+    }
+
+    /// Fire expired per-job deadlines: force-abort everything in flight
+    /// for the job, drop its queued retries, quarantine and reset its
+    /// endpoints. The `TimedOut` record surfaces through the engine's
+    /// normal (in-order) completion path; a job with nothing in flight
+    /// finalizes immediately.
+    fn check_deadlines(&mut self, now: Cycle) {
+        let expired: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, m)| !m.timed_out && m.deadline.is_some_and(|d| now >= d))
+            .map(|(&u, _)| u)
+            .collect();
+        for user in expired {
+            let ids = self.jobs[&user].inflight.clone();
+            let mut any = false;
+            for id in ids {
+                any |= self.sys.engine.timeout_job(now, id);
+            }
+            self.pending.retain(|p| p.user != user);
+            for e in self.endpoints_of(&self.jobs[&user].nd) {
+                if self.health[e].quarantine() {
+                    self.probe.emit(TelemetryEvent::EndpointQuarantined { endpoint: e, at: now });
+                }
+                self.sys.mems[e].force_reset();
+            }
+            let m = self.jobs.get_mut(&user).unwrap();
+            m.timed_out = true;
+            if !any {
+                let errors = match m.last_status {
+                    TransferStatus::BusError { errors, .. } => errors,
+                    _ => 0,
+                };
+                let rec = self.synth_record(user, now, TransferStatus::TimedOut { errors });
+                self.finalize(user, rec);
+            }
+        }
+    }
+}
+
+/// Merge overlapping/adjacent `(offset, len)` ranges, sorted by offset.
+fn merge_ranges(mut v: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for (s, l) in v {
+        if let Some(last) = out.last_mut() {
+            if s <= last.0 + last.1 {
+                let end = (s + l).max(last.0 + last.1);
+                last.1 = end - last.0;
+                continue;
+            }
+        }
+        out.push((s, l));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::mem::{Endpoint, ErrorInjector, MemModel};
+    use crate::system::IdmaSystem;
+    use crate::transfer::TransferOpts;
+
+    fn test_system(inject: Option<ErrorInjector>) -> IdmaSystem {
+        let engine = EngineBuilder::new(32, 4, 4).error_handling().build().unwrap();
+        let mut ep = Endpoint::new(MemModel::custom("m", 4, 8, 4));
+        ep.inject = inject;
+        IdmaSystem::new(engine, vec![ep])
+    }
+
+    fn job(id: u64, src: u64, dst: u64, len: u64) -> NdJob {
+        let t = Transfer1D {
+            id: 0,
+            src,
+            dst,
+            len,
+            src_protocol: ProtocolKind::Axi4,
+            dst_protocol: ProtocolKind::Axi4,
+            opts: TransferOpts { on_error: ErrorAction::Continue, ..Default::default() },
+        };
+        NdJob::new(id, NdTransfer::d1(t))
+    }
+
+    #[test]
+    fn merge_ranges_merges_overlaps_and_sorts() {
+        let m = merge_ranges(vec![(100, 50), (0, 10), (140, 20), (200, 4)]);
+        assert_eq!(m, vec![(0, 10), (100, 60), (200, 4)]);
+    }
+
+    #[test]
+    fn clean_job_passes_through_with_zero_retries() {
+        let mut sup = Supervisor::new(test_system(None), RetryPolicy::default());
+        let mut src = vec![0u8; 256];
+        XorShift64::new(1).fill(&mut src);
+        sup.sys.mems[0].data.write(0x1000, &src);
+        let r = sup.run_job(job(1, 0x1000, 0x2000, 256));
+        assert!(r.ok(), "{:?}", r.status);
+        assert_eq!(r.retries, 0);
+        assert_eq!(sup.sys.mems[0].data.read_vec(0x2000, 256), src);
+        assert_eq!(sup.endpoint_health()[0].successes, 1);
+    }
+
+    #[test]
+    fn transient_fault_is_partially_replayed_byte_identical() {
+        // Fault the first burst of the source range once; the supervisor
+        // must re-copy only the damaged range and converge on the exact
+        // fault-free image.
+        let mut src = vec![0u8; 512];
+        XorShift64::new(2).fill(&mut src);
+
+        let mut clean = Supervisor::new(test_system(None), RetryPolicy::default());
+        clean.sys.mems[0].data.write(0x1000, &src);
+        let cr = clean.run_job(job(1, 0x1000, 0x4000, 512));
+        assert!(cr.ok());
+        let want = clean.sys.mems[0].data.read_vec(0x4000, 512);
+        assert_eq!(want, src);
+
+        let inj = ErrorInjector::transient(0x1000, 0x1020, 1);
+        let mut sup = Supervisor::new(test_system(Some(inj)), RetryPolicy::default());
+        sup.sys.mems[0].data.write(0x1000, &src);
+        let r = sup.run_job(job(1, 0x1000, 0x4000, 512));
+        assert!(r.ok(), "recovered: {:?}", r.status);
+        assert!(r.retries >= 1, "the recovery must be visible in the record");
+        assert_eq!(sup.sys.mems[0].data.read_vec(0x4000, 512), want, "byte-identical");
+    }
+
+    #[test]
+    fn quarantined_endpoint_fails_fast() {
+        // Exhaust retries against a persistent fault window; the health
+        // ladder quarantines the endpoint and the next job fails fast
+        // without a single submission.
+        let inj = ErrorInjector::transient(0x1000, 0x1200, u32::MAX);
+        let policy = RetryPolicy { allow_partial: false, jitter: 0, ..Default::default() };
+        let hp = HealthPolicy { degrade_after: 1, quarantine_after: 2 };
+        let mut sup =
+            Supervisor::new(test_system(Some(inj)), policy).with_health_policy(hp);
+        sup.sys.mems[0].data.write(0x1000, &[7u8; 256]);
+        let r = sup.run_job(job(1, 0x1000, 0x4000, 256));
+        assert!(!r.ok(), "persistent fault must not succeed");
+        assert_eq!(sup.endpoint_health()[0].state, HealthState::Quarantined);
+        let before = sup.sys.now();
+        let r2 = sup.run_job(job(2, 0x1000, 0x4000, 256));
+        assert!(!r2.ok());
+        assert!(r2.aborted());
+        assert_eq!(r2.retries, 0, "fail fast: no attempts against quarantine");
+        assert!(sup.sys.now() <= before + 1, "no cycles burned");
+    }
+
+    #[test]
+    fn stalled_endpoint_times_out_within_deadline() {
+        let mut sup = Supervisor::new(
+            test_system(Some(ErrorInjector::stall(5))),
+            RetryPolicy::default(),
+        )
+        .with_deadline(5_000);
+        sup.sys.mems[0].data.write(0x1000, &[3u8; 128]);
+        let r = sup.run_job(job(1, 0x1000, 0x4000, 128));
+        assert!(r.timed_out(), "{:?}", r.status);
+        assert!(r.aborted());
+        assert!(
+            r.done <= r.submitted + 5_000 + CHUNK,
+            "watchdog fired near the deadline: done={} submitted={}",
+            r.done,
+            r.submitted
+        );
+        assert_eq!(sup.endpoint_health()[0].state, HealthState::Quarantined);
+        assert!(!sup.sys.busy(), "engine quiesced after the forced abort");
+    }
+}

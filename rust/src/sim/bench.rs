@@ -149,6 +149,9 @@ impl BenchJson {
             .int("telemetry_bytes_read", s.bytes_read)
             .int("telemetry_bytes_written", s.bytes_written)
             .int("telemetry_bus_errors", s.bus_errors)
+            .int("telemetry_retries", s.retries)
+            .int("telemetry_timed_out", s.timed_out)
+            .int("telemetry_quarantined", s.quarantined)
             .int("telemetry_cycles", s.cycles())
     }
 

@@ -81,6 +81,34 @@ impl Cheshire {
             .build()
     }
 
+    /// Error-handling variant of [`Cheshire::system`] for the resilience
+    /// layer: same DRAM endpoint, the §2.3 error handler instantiated
+    /// (coupled legalization, so faulting bursts are reported with exact
+    /// ranges), direct submission — the
+    /// [`crate::resilience::Supervisor`] owns the control plane instead
+    /// of a front-end.
+    pub fn resilient_system(&self) -> IdmaSystem {
+        let be = Backend::new(BackendCfg {
+            aw_bits: 64,
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            error_handling: true,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            desc_depth: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let engine = IdmaEngine::new(Vec::new(), be);
+        let mems = vec![Endpoint::new(MemModel::custom(
+            "dram",
+            self.mem_latency,
+            self.nax.max(16),
+            self.dw,
+        ))];
+        IdmaSystem::new(engine, mems)
+    }
+
     /// Copy `n` transfers of `len` bytes each through the full desc_64
     /// path (descriptor chain in SPM → fetch → execute), measuring the
     /// engine's bus utilization. Data integrity is asserted. The run is

@@ -96,6 +96,34 @@ impl ControlPulp {
         }
     }
 
+    /// An error-handling sDMAE facade (sensor window + TCDM endpoints,
+    /// no mid-end chain) for the resilience layer: a power controller
+    /// must survive flaky sensor buses, so this is the configuration
+    /// the fault-injection campaign exercises.
+    pub fn resilient_system(&self) -> IdmaSystem {
+        let be = Backend::new(BackendCfg {
+            aw_bits: 32,
+            dw_bytes: 4,
+            nax_r: 16,
+            nax_w: 16,
+            error_handling: true,
+            ports: vec![
+                PortCfg { protocol: ProtocolKind::Axi4, mem: 0 },
+                PortCfg { protocol: ProtocolKind::Obi, mem: 1 },
+            ],
+            ..Default::default()
+        })
+        .unwrap();
+        let engine = IdmaEngine::new(Vec::new(), be);
+        IdmaSystem::new(
+            engine,
+            vec![
+                Endpoint::new(MemModel::custom("sensors", 24, 8, 4)),
+                Endpoint::new(MemModel::tcdm(4)),
+            ],
+        )
+    }
+
     /// Simulate one PFCT hyperperiod with the rt_3D mid-end armed,
     /// verifying the periodic readouts really happen and move real
     /// bytes autonomously.

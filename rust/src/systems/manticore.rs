@@ -113,6 +113,31 @@ impl Manticore {
         IdmaSystem::new(engine, mems).with_frontend(Box::new(fe))
     }
 
+    /// Error-handling variant of [`Manticore::system`] for the
+    /// resilience layer: HBM + L1 endpoints, the error handler
+    /// instantiated, direct submission (no `inst_64` front-end).
+    pub fn resilient_system(&self) -> IdmaSystem {
+        let be = Backend::new(BackendCfg {
+            aw_bits: 48,
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            error_handling: true,
+            ports: vec![
+                PortCfg { protocol: ProtocolKind::Axi4, mem: 0 },
+                PortCfg { protocol: ProtocolKind::Obi, mem: 1 },
+            ],
+            ..Default::default()
+        })
+        .unwrap();
+        let engine = IdmaEngine::new(Vec::new(), be);
+        let mems = vec![
+            Endpoint::new(MemModel::custom("HBM", self.hbm_latency, 96, self.dw)),
+            Endpoint::new(MemModel::custom("L1", 2, 16, self.dw)),
+        ];
+        IdmaSystem::new(engine, mems)
+    }
+
     /// Simulate one cluster staging an `n×n` f64 GEMM tile pair from HBM
     /// through the `inst_64` front-end (dmsrc/dmdst/dmcpy — three
     /// instructions per 1D transfer) and, when a [`Runtime`] is given,

@@ -9,6 +9,8 @@
 
 use crate::backend::{Backend, BackendCfg, PortCfg};
 use crate::baseline::CoreCopy;
+use crate::engine::IdmaEngine;
+use crate::system::IdmaSystem;
 use crate::mem::{Endpoint, MemModel};
 use crate::midend::{DistSide, MidEnd, MpDist, MpSplit, NdJob, SplitSide};
 use crate::model::area::synthesize_area;
@@ -118,6 +120,34 @@ impl MemPool {
             v.push(Endpoint::new(MemModel::custom("L1", 2, 8, self.dw)));
         }
         v
+    }
+
+    /// A single-back-end facade over the MemPool memory system (shared
+    /// wide L2 + one L1 region) with the error handler instantiated.
+    /// The distributed engine bypasses the [`IdmaSystem`] facade, so
+    /// layers that need the facade API — notably the
+    /// [`crate::resilience::Supervisor`] — supervise one region's
+    /// back-end through this flat view.
+    pub fn flat_system(&self) -> IdmaSystem {
+        let be = Backend::new(BackendCfg {
+            aw_bits: 32,
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            error_handling: true,
+            ports: vec![
+                PortCfg { protocol: ProtocolKind::Axi4, mem: 0 },
+                PortCfg { protocol: ProtocolKind::Obi, mem: 1 },
+            ],
+            ..Default::default()
+        })
+        .unwrap();
+        let engine = IdmaEngine::new(Vec::new(), be);
+        let mems = vec![
+            Endpoint::new(MemModel::custom("L2", self.l2_latency, self.nax, self.dw)),
+            Endpoint::new(MemModel::custom("L1", 2, 8, self.dw)),
+        ];
+        IdmaSystem::new(engine, mems)
     }
 
     /// §3.4a: copy `bytes` from L2 into the distributed L1, returning

@@ -111,6 +111,28 @@ impl PulpOpen {
         IdmaSystem::new(self.engine(), vec![l2_endpoint(self.dw), tcdm_endpoint(self.dw)])
     }
 
+    /// Error-handling variant of [`PulpOpen::system`] for the
+    /// resilience layer: the same L2 + TCDM endpoints, the error
+    /// handler instantiated, no mid-end chain (the supervisor submits
+    /// 1D jobs so partial replay stays range-exact).
+    pub fn resilient_system(&self) -> IdmaSystem {
+        let be = Backend::new(BackendCfg {
+            aw_bits: 32,
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            error_handling: true,
+            ports: vec![
+                PortCfg { protocol: ProtocolKind::Axi4, mem: 0 },
+                PortCfg { protocol: ProtocolKind::Obi, mem: 1 },
+            ],
+            ..Default::default()
+        })
+        .unwrap();
+        let engine = IdmaEngine::new(Vec::new(), be);
+        IdmaSystem::new(engine, vec![l2_endpoint(self.dw), tcdm_endpoint(self.dw)])
+    }
+
     /// §3.1: copy 8 KiB from the TCDM to L2, returning total cycles
     /// including configuration (paper: 1107, of which 1024 move data).
     pub fn copy_8kib(&self) -> u64 {

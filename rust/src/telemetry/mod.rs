@@ -120,6 +120,30 @@ pub enum TelemetryEvent {
         /// Bus errors encountered across the job's transfers.
         errors: u32,
     },
+    /// The resilience layer scheduled a retry of a failed job.
+    RetryScheduled {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Retry attempt number being scheduled (1 = first retry).
+        attempt: u32,
+        /// Cycle the retry becomes due (after backoff + jitter).
+        at: Cycle,
+    },
+    /// A watchdog force-aborted a job that exceeded its deadline.
+    JobTimedOut {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Cycle the watchdog fired.
+        at: Cycle,
+    },
+    /// Endpoint health tracking quarantined an endpoint after repeated
+    /// failures (subsequent jobs targeting it fail fast).
+    EndpointQuarantined {
+        /// Endpoint index in the system's memory map.
+        endpoint: usize,
+        /// Cycle of the quarantine decision.
+        at: Cycle,
+    },
 }
 
 /// Receiver of [`TelemetryEvent`]s. Implemented by [`Recorder`]; user
@@ -197,7 +221,9 @@ impl Probe {
                 TelemetryEvent::JobSubmitted { job, .. }
                 | TelemetryEvent::JobAccepted { job, .. }
                 | TelemetryEvent::TransferBound { job, .. }
-                | TelemetryEvent::JobDone { job, .. } => *job |= self.tag,
+                | TelemetryEvent::JobDone { job, .. }
+                | TelemetryEvent::RetryScheduled { job, .. }
+                | TelemetryEvent::JobTimedOut { job, .. } => *job |= self.tag,
                 _ => {}
             }
         }
@@ -207,6 +233,21 @@ impl Probe {
 
 /// Final status of a completed job (the explicit alternative to the old
 /// bare-ID completion signals).
+///
+/// Error-handling semantics:
+/// * [`TransferStatus::Ok`] — every beat retired cleanly. Destination
+///   memory holds exactly the source bytes.
+/// * [`TransferStatus::BusError`] — at least one endpoint returned an
+///   error response. What the destination holds depends on the job's
+///   [`crate::transfer::ErrorAction`]: `Replay` recovered the data
+///   (`errors` counts the retries the back-end performed), `Continue`
+///   left a hole over the faulting burst's range, `Abort` stopped the
+///   job (`aborted == true`, trailing bursts never issued).
+/// * [`TransferStatus::TimedOut`] — a resilience-layer watchdog
+///   force-aborted the job because it exceeded its wall-cycle deadline
+///   (typically a stalled endpoint). Destination contents over the
+///   unfinished range are undefined; in-flight endpoint state was
+///   discarded.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransferStatus {
     /// All beats retired without an error response.
@@ -219,6 +260,11 @@ pub enum TransferStatus {
         aborted: bool,
         /// First failing address, when the error handler captured one.
         addr: Option<u64>,
+    },
+    /// A watchdog force-aborted the job after its deadline expired.
+    TimedOut {
+        /// Bus errors observed before the watchdog fired.
+        errors: u32,
     },
 }
 
@@ -245,7 +291,11 @@ pub struct CompletionRecord {
     pub first_beat: Option<Cycle>,
     /// Cycle the last write response retired and the job completed.
     pub done: Cycle,
-    /// Final status (ok / bus error with failing address).
+    /// Resilience-layer resubmissions this record covers (0 when the
+    /// job succeeded or failed on its first attempt; only the
+    /// [`crate::resilience::Supervisor`] populates this).
+    pub retries: u32,
+    /// Final status (ok / bus error with failing address / timed out).
     pub status: TransferStatus,
 }
 
@@ -260,14 +310,17 @@ impl CompletionRecord {
         match self.status {
             TransferStatus::Ok => 0,
             TransferStatus::BusError { errors, .. } => errors,
+            TransferStatus::TimedOut { errors } => errors,
         }
     }
 
-    /// True when the error handler aborted the job.
+    /// True when the job was cut short: the error handler aborted it or
+    /// a watchdog timed it out.
     pub fn aborted(&self) -> bool {
         match self.status {
             TransferStatus::Ok => false,
             TransferStatus::BusError { aborted, .. } => aborted,
+            TransferStatus::TimedOut { .. } => true,
         }
     }
 
@@ -276,7 +329,13 @@ impl CompletionRecord {
         match self.status {
             TransferStatus::Ok => None,
             TransferStatus::BusError { addr, .. } => addr,
+            TransferStatus::TimedOut { .. } => None,
         }
+    }
+
+    /// True when a watchdog force-aborted the job.
+    pub fn timed_out(&self) -> bool {
+        matches!(self.status, TransferStatus::TimedOut { .. })
     }
 }
 
@@ -313,16 +372,24 @@ mod tests {
             accepted: 0,
             first_beat: Some(2),
             done: 9,
+            retries: 0,
             status: TransferStatus::Ok,
         };
         assert!(r.ok());
         assert_eq!(r.errors(), 0);
         assert!(!r.aborted());
         assert_eq!(r.error_addr(), None);
+        assert!(!r.timed_out());
         r.status = TransferStatus::BusError { errors: 2, aborted: true, addr: Some(0x40) };
         assert!(!r.ok());
         assert_eq!(r.errors(), 2);
         assert!(r.aborted());
         assert_eq!(r.error_addr(), Some(0x40));
+        r.status = TransferStatus::TimedOut { errors: 1 };
+        assert!(!r.ok());
+        assert_eq!(r.errors(), 1);
+        assert!(r.aborted(), "timed-out jobs count as cut short");
+        assert!(r.timed_out());
+        assert_eq!(r.error_addr(), None);
     }
 }

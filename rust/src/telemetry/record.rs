@@ -27,6 +27,10 @@ pub struct JobTrace {
     pub errors: u32,
     /// The error handler aborted this job.
     pub aborted: bool,
+    /// Resilience-layer retries scheduled for this job.
+    pub retries: u32,
+    /// A watchdog force-aborted this job.
+    pub timed_out: bool,
 }
 
 /// Cycle-resolved per-port beat counters.
@@ -63,6 +67,12 @@ pub struct RunSummary {
     pub bytes_written: u64,
     /// Total bus errors observed.
     pub bus_errors: u64,
+    /// Resilience-layer retries scheduled across all jobs.
+    pub retries: u64,
+    /// Jobs a watchdog force-aborted.
+    pub timed_out: u64,
+    /// Endpoints quarantined by health tracking.
+    pub quarantined: u64,
     /// Earliest submit cycle.
     pub first_submit: Option<Cycle>,
     /// Latest retire cycle.
@@ -104,6 +114,7 @@ pub struct Recorder {
     tid2job: HashMap<u64, u64>,
     events: Vec<TelemetryEvent>,
     bus_errors: u64,
+    quarantined: u64,
 }
 
 impl Recorder {
@@ -139,7 +150,12 @@ impl Recorder {
 
     /// Fold the recorded run into a flat [`RunSummary`].
     pub fn summary(&self) -> RunSummary {
-        let mut s = RunSummary { jobs: self.jobs.len() as u64, bus_errors: self.bus_errors, ..Default::default() };
+        let mut s = RunSummary {
+            jobs: self.jobs.len() as u64,
+            bus_errors: self.bus_errors,
+            quarantined: self.quarantined,
+            ..Default::default()
+        };
         for t in self.jobs.values() {
             if t.done.is_some() {
                 s.completed += 1;
@@ -147,6 +163,10 @@ impl Recorder {
             if t.aborted {
                 s.aborted += 1;
             }
+            if t.timed_out {
+                s.timed_out += 1;
+            }
+            s.retries += t.retries as u64;
             s.bytes_read += t.bytes_read;
             s.bytes_written += t.bytes_written;
             s.first_submit = min_opt(s.first_submit, t.submitted.or(t.accepted));
@@ -233,6 +253,17 @@ impl TelemetrySink for Recorder {
                 t.aborted = aborted;
                 t.errors = errors;
             }
+            TelemetryEvent::RetryScheduled { job, .. } => {
+                self.trace(job).retries += 1;
+            }
+            TelemetryEvent::JobTimedOut { job, at } => {
+                let t = self.trace(job);
+                t.timed_out = true;
+                t.done = max_opt(t.done, Some(at));
+            }
+            TelemetryEvent::EndpointQuarantined { .. } => {
+                self.quarantined += 1;
+            }
         }
     }
 }
@@ -291,6 +322,28 @@ mod tests {
         );
         assert_eq!(r.bus_errors(), 2);
         assert_eq!(r.summary().bus_errors, 2);
+    }
+
+    #[test]
+    fn resilience_events_aggregate() {
+        let mut r = Recorder::new();
+        feed(
+            &mut r,
+            &[
+                TelemetryEvent::JobSubmitted { job: 1, at: 0 },
+                TelemetryEvent::RetryScheduled { job: 1, attempt: 1, at: 40 },
+                TelemetryEvent::RetryScheduled { job: 1, attempt: 2, at: 120 },
+                TelemetryEvent::JobTimedOut { job: 1, at: 500 },
+                TelemetryEvent::EndpointQuarantined { endpoint: 0, at: 500 },
+            ],
+        );
+        let t = r.job(1).unwrap();
+        assert_eq!(t.retries, 2);
+        assert!(t.timed_out);
+        let s = r.summary();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.timed_out, 1);
+        assert_eq!(s.quarantined, 1);
     }
 
     #[test]

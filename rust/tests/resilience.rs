@@ -1,0 +1,197 @@
+//! Resilience subsystem integration tests: the differential
+//! retry/byte-identity guarantee on a real system instantiation, the
+//! watchdog bound on a permanently stalled endpoint, campaign-report
+//! determinism, and bus-error status propagation (first faulting
+//! address + error count) through each of the three front-end paths.
+
+use idma::engine::EngineBuilder;
+use idma::frontend::{
+    decode, encode, regs, write_descriptor, DescFlags, DescFrontend, Frontend, InstFrontend,
+    Opcode, RegFrontend, RegVariant,
+};
+use idma::mem::{Endpoint, ErrorInjector, MemModel};
+use idma::midend::NdJob;
+use idma::protocol::ProtocolKind;
+use idma::resilience::{run_campaign, CampaignCfg, HealthState, RetryPolicy, Supervisor};
+use idma::sim::XorShift64;
+use idma::system::{IdmaSystem, IdmaSystemBuilder};
+use idma::systems::cheshire::Cheshire;
+use idma::systems::manticore::Manticore;
+use idma::transfer::{ErrorAction, NdTransfer, Transfer1D, TransferOpts};
+
+fn supervised_job(id: u64, src: u64, dst: u64, len: u64) -> NdJob {
+    let t = Transfer1D {
+        id: 0,
+        src,
+        dst,
+        len,
+        src_protocol: ProtocolKind::Axi4,
+        dst_protocol: ProtocolKind::Axi4,
+        opts: TransferOpts { on_error: ErrorAction::Continue, ..Default::default() },
+    };
+    NdJob::new(id, NdTransfer::d1(t))
+}
+
+/// The PR's core acceptance gate: a transfer hit by a transient fault,
+/// supervised with a [`RetryPolicy`], must complete byte-identical to
+/// the fault-free run — and the recovery must be visible as a non-zero
+/// retry count in the final [`idma::telemetry::CompletionRecord`].
+#[test]
+fn transient_fault_recovers_byte_identical_to_fault_free_run() {
+    const SRC: u64 = 0x8000_0000;
+    const DST: u64 = 0x9000_0000;
+    const LEN: u64 = 4096;
+    let ch = Cheshire::default();
+    let mut payload = vec![0u8; LEN as usize];
+    XorShift64::new(0x1DEA).fill(&mut payload);
+
+    let run = |inject: Option<ErrorInjector>| {
+        let mut sys = ch.resilient_system();
+        sys.mems[0].data.write(SRC, &payload);
+        sys.mems[0].inject = inject;
+        let mut sup = Supervisor::new(sys, RetryPolicy::default());
+        let r = sup.run_job(supervised_job(1, SRC, DST, LEN));
+        (r, sup.sys.mems[0].data.read_vec(DST, LEN as usize))
+    };
+
+    let (clean, want) = run(None);
+    assert!(clean.ok());
+    assert_eq!(clean.retries, 0);
+    assert_eq!(want, payload);
+
+    let (r, got) = run(Some(ErrorInjector::transient(SRC, SRC + 128, 2)));
+    assert!(r.ok(), "transient fault must be recovered: {:?}", r.status);
+    assert!(r.retries >= 1, "recovery must be visible in the record");
+    assert_eq!(got, want, "recovered image must be byte-identical");
+}
+
+/// A permanently stalled endpoint cannot complete or even error — only
+/// the supervisor's watchdog resolves it: a `TimedOut` record near the
+/// deadline, quarantined endpoints, and a quiesced engine.
+#[test]
+fn stalled_endpoint_is_force_aborted_within_the_deadline() {
+    const DEADLINE: u64 = 8_000;
+    let mut sys = Manticore::default().resilient_system();
+    sys.mems[0].data.write(0x8000_0000, &[0x5Au8; 1024]);
+    sys.mems[0].inject = Some(ErrorInjector::stall(32));
+    let mut sup = Supervisor::new(sys, RetryPolicy::default()).with_deadline(DEADLINE);
+    let t = Transfer1D {
+        id: 0,
+        src: 0x8000_0000,
+        dst: 0x0010_0000,
+        len: 1024,
+        src_protocol: ProtocolKind::Axi4,
+        dst_protocol: ProtocolKind::Obi,
+        opts: TransferOpts { on_error: ErrorAction::Continue, ..Default::default() },
+    };
+    let r = sup.run_job(NdJob::new(1, NdTransfer::d1(t)));
+    assert!(r.timed_out(), "{:?}", r.status);
+    assert!(r.aborted());
+    assert!(
+        r.done <= r.submitted + DEADLINE + 1_024,
+        "watchdog fired near the deadline: done={} submitted={}",
+        r.done,
+        r.submitted
+    );
+    assert_eq!(sup.endpoint_health()[0].state, HealthState::Quarantined);
+    assert!(!sup.sys.busy(), "engine quiesced after the forced abort");
+}
+
+/// The other acceptance gate: two same-seed campaign runs produce
+/// byte-identical JSON reports, covering all 5 systems x 5 scenarios.
+#[test]
+fn campaign_report_is_deterministic_for_a_fixed_seed() {
+    let cfg = CampaignCfg {
+        jobs_per_case: 2,
+        job_bytes: 512,
+        deadline: 30_000,
+        ..Default::default()
+    };
+    let a = run_campaign(&cfg).to_json();
+    let b = run_campaign(&cfg).to_json();
+    assert_eq!(a, b, "same seed must reproduce the report byte-for-byte");
+    assert!(a.contains("\"campaign\":\"resilience\""));
+    assert_eq!(a.matches("\"system\":").count(), 25, "5 systems x 5 scenarios");
+    assert!(a.contains("\"verify_failures\":0"), "no silent data corruption: {a}");
+}
+
+// --- bus-error propagation through the three front-end paths ----------
+
+const FE_SRC: u64 = 0x1000;
+const FE_DST: u64 = 0x8000;
+const FE_LEN: u64 = 512;
+
+/// One error-handling engine behind the given front-end, with a
+/// one-shot fault on the first source burst. The default
+/// [`TransferOpts`] replay the faulted burst in-backend, so the job
+/// heals — but the completion record must still carry the error count
+/// and the first faulting address.
+fn fe_system(fe: Box<dyn Frontend>) -> IdmaSystem {
+    let engine = EngineBuilder::new(32, 8, 8).error_handling().build().unwrap();
+    let mut sys = IdmaSystemBuilder::new(engine)
+        .endpoint(Endpoint::new(MemModel::sram(8)))
+        .frontend(fe)
+        .build();
+    let mut data = vec![0u8; FE_LEN as usize];
+    XorShift64::new(0xF00D).fill(&mut data);
+    sys.mems[0].data.write(FE_SRC, &data);
+    sys.mems[0].inject = Some(ErrorInjector::transient(FE_SRC, FE_SRC + 64, 1));
+    sys
+}
+
+fn assert_error_surfaced(mut sys: IdmaSystem) {
+    sys.run_until_idle();
+    let done = sys.take_done();
+    assert_eq!(done.len(), 1);
+    let d = &done[0];
+    assert_eq!(d.frontend, Some(0), "record routed back to its front-end");
+    assert_eq!(d.job, 1, "front-end-local job ID");
+    assert!(!d.aborted(), "default on_error is Replay: recovered in-backend");
+    assert!(d.errors() >= 1, "error count must propagate: {:?}", d.status);
+    let addr = d.error_addr().expect("first faulting address must propagate");
+    assert!(
+        (FE_SRC..FE_SRC + FE_LEN).contains(&addr),
+        "address {addr:#x} inside the faulted transfer"
+    );
+    let src = sys.mems[0].data.read_vec(FE_SRC, FE_LEN as usize);
+    let dst = sys.mems[0].data.read_vec(FE_DST, FE_LEN as usize);
+    assert_eq!(dst, src, "the in-backend replay healed the payload");
+}
+
+#[test]
+fn bus_error_status_propagates_through_the_reg_frontend() {
+    let mut sys = fe_system(Box::new(RegFrontend::new(RegVariant::R32, 0)));
+    let fe = sys.try_frontend_mut::<RegFrontend>(0).unwrap();
+    fe.write_reg(0, regs::SRC, FE_SRC);
+    fe.write_reg(0, regs::DST, FE_DST);
+    fe.write_reg(0, regs::LEN, FE_LEN);
+    assert_eq!(fe.read_reg(0, regs::TRANSFER_ID), 1);
+    assert_error_surfaced(sys);
+}
+
+#[test]
+fn bus_error_status_propagates_through_the_desc_frontend() {
+    let mut sys = fe_system(Box::new(DescFrontend::new(6)));
+    write_descriptor(
+        &mut sys.ctrl_mem,
+        0x40,
+        0,
+        FE_SRC,
+        FE_DST,
+        FE_LEN,
+        DescFlags::new(ProtocolKind::Axi4, ProtocolKind::Axi4),
+    );
+    assert!(sys.try_frontend_mut::<DescFrontend>(0).unwrap().launch_chain(0, 0x40));
+    assert_error_surfaced(sys);
+}
+
+#[test]
+fn bus_error_status_propagates_through_the_inst_frontend() {
+    let mut sys = fe_system(Box::new(InstFrontend::new(0)));
+    let fe = sys.try_frontend_mut::<InstFrontend>(0).unwrap();
+    fe.execute(0, decode(encode(Opcode::DmSrc, 0, 1, 2)).unwrap(), FE_SRC, 0);
+    fe.execute(1, decode(encode(Opcode::DmDst, 0, 1, 2)).unwrap(), FE_DST, 0);
+    let id = fe.execute(2, decode(encode(Opcode::DmCpy, 5, 1, 2)).unwrap(), FE_LEN, 0);
+    assert_eq!(id, Some(1));
+    assert_error_surfaced(sys);
+}
