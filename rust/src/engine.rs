@@ -38,6 +38,9 @@ struct JobAcct {
     error_addr: Option<u64>,
     /// A watchdog force-aborted this job ([`IdmaEngine::timeout_job`]).
     timed_out: bool,
+    /// A translation fault cut this job short: the faulting virtual
+    /// address ([`TransferStatus::PageFault`]).
+    page_fault: Option<u64>,
 }
 
 /// Per-job cap on retained [`ErrorReport`]s — enough for any realistic
@@ -184,10 +187,12 @@ impl IdmaEngine {
         self.backend.tick(now, mems);
         self.drain_error_reports();
         // Tick mid-ends and move jobs downstream (last mid-end feeds the
-        // back-end; stage i feeds stage i+1).
+        // back-end; stage i feeds stage i+1). Mid-ends that issue their
+        // own memory traffic get endpoint access via tick_mem.
         for m in self.mids.iter_mut() {
-            m.tick(now);
+            m.tick_mem(now, mems);
         }
+        self.drain_faults(now);
         // Hold slot between last mid-end and back-end (retry on stall).
         if let Some(j) = self.input_hold.take() {
             if !self.push_backend(now, j.clone()) {
@@ -232,6 +237,35 @@ impl IdmaEngine {
 
     fn chain_idle(&self) -> bool {
         self.input_hold.is_none() && self.mids.iter().all(|m| !m.busy())
+    }
+
+    /// Collect translation faults raised by the mid-end chain this cycle
+    /// (the [`crate::vm::Mmu`]). A faulted job is killed — like a
+    /// timeout, its ID cannot be reused — sealed, and finished with
+    /// [`TransferStatus::PageFault`]; its already-retired prefix stays
+    /// written.
+    fn drain_faults(&mut self, now: Cycle) {
+        let mut faults: Vec<(u64, u64)> = Vec::new();
+        for m in self.mids.iter_mut() {
+            faults.extend(m.take_faults());
+        }
+        for (job, va) in faults {
+            if self.killed.contains(&job) {
+                continue;
+            }
+            self.killed.insert(job);
+            if !self.jobs.contains_key(&job) {
+                self.order.push_back(job);
+                self.jobs.insert(job, JobAcct { accepted: now, ..Default::default() });
+                self.probe.emit(TelemetryEvent::JobAccepted { job, at: now });
+            }
+            let a = self.jobs.get_mut(&job).expect("inserted above");
+            if a.page_fault.is_none() {
+                a.page_fault = Some(va);
+            }
+            a.sealed = true;
+            self.probe.emit(TelemetryEvent::PageFaulted { job, va, at: now });
+        }
     }
 
     /// Map the back-end's burst-level error reports onto jobs (must run
@@ -310,17 +344,22 @@ impl IdmaEngine {
                 self.order.pop_front();
                 continue;
             };
-            if a.sealed && a.retired == a.submitted && (a.submitted > 0 || a.timed_out) {
+            if a.sealed
+                && a.retired == a.submitted
+                && (a.submitted > 0 || a.timed_out || a.page_fault.is_some())
+            {
                 let a = self.jobs.remove(&job).unwrap();
                 self.order.pop_front();
                 self.probe.emit(TelemetryEvent::JobDone {
                     job,
                     at: now,
-                    aborted: a.aborted || a.timed_out,
+                    aborted: a.aborted || a.timed_out || a.page_fault.is_some(),
                     errors: a.errors,
                 });
                 let status = if a.timed_out {
                     TransferStatus::TimedOut { errors: a.errors }
+                } else if let Some(va) = a.page_fault {
+                    TransferStatus::PageFault { va }
                 } else if a.errors > 0 || a.aborted {
                     TransferStatus::BusError {
                         errors: a.errors,
@@ -366,23 +405,27 @@ impl IdmaEngine {
 
     /// Event-driven scheduling hook (see [`Backend::next_event`]): the
     /// earliest cycle after `now` at which the engine could progress.
-    /// While the mid-end chain is active the engine advances per cycle
-    /// (chain hand-offs are combinational, one per boundary per cycle);
-    /// once the chain has drained, the back-end's event horizon applies,
-    /// merged with any armed mid-end's timed wake hint (an `rt_3D`
-    /// waiting out its period is idle by `busy()` but will autonomously
-    /// launch at a known future cycle).
+    /// Every busy mid-end contributes its own wake hint (a plain
+    /// pipeline stage advances per cycle; a stalled [`crate::vm::Mmu`]
+    /// or [`crate::midend::ScatterGather`] waiting on memory beats, or
+    /// an armed `rt_3D` waiting out its period, names a later cycle),
+    /// merged with the back-end's event horizon.
     pub fn next_event(&self, now: Cycle, mems: &[Endpoint]) -> Cycle {
-        if !self.chain_idle() {
+        if self.input_hold.is_some() {
             return now + 1;
         }
-        let mut at = self.backend.next_event(now, mems);
+        let mut at =
+            if self.backend.busy() { self.backend.next_event(now, mems) } else { Cycle::MAX };
         for m in self.mids.iter() {
             if let Some(e) = m.next_event(now) {
                 at = at.min(e.max(now + 1));
             }
         }
-        at
+        if at == Cycle::MAX {
+            now + 1
+        } else {
+            at
+        }
     }
 }
 

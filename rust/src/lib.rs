@@ -32,6 +32,7 @@ pub mod system;
 pub mod systems;
 pub mod telemetry;
 pub mod transfer;
+pub mod vm;
 pub mod workloads;
 
 pub use error::{IdmaError, Result};

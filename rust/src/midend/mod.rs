@@ -7,27 +7,39 @@
 //! mid-end adds one cycle of latency (`tensor_ND` can be configured to
 //! zero — §4.3).
 //!
-//! | paper id    | type                  |
-//! |-------------|-----------------------|
-//! | `tensor_2D` | [`Tensor2D`]          |
-//! | `tensor_ND` | [`TensorNd`]          |
-//! | `mp_split`  | [`MpSplit`]           |
-//! | `mp_dist`   | [`MpDist`]            |
-//! | `rt_3D`     | [`Rt3D`]              |
-//! | (arbiter)   | [`RoundRobinArbiter`] |
+//! | paper id         | type                  |
+//! |------------------|-----------------------|
+//! | `tensor_2D`      | [`Tensor2D`]          |
+//! | `tensor_ND`      | [`TensorNd`]          |
+//! | `mp_split`       | [`MpSplit`]           |
+//! | `mp_dist`        | [`MpDist`]            |
+//! | `rt_3D`          | [`Rt3D`]              |
+//! | (scatter/gather) | [`ScatterGather`]     |
+//! | (mmu)            | [`crate::vm::Mmu`]    |
+//! | (arbiter)        | [`RoundRobinArbiter`] |
+//!
+//! `ScatterGather` covers the paper's §2.2 "scattering or gathering"
+//! claim: it resolves an in-memory index list into per-element 1D
+//! descriptors, fetching the indices as real timed beats. The MMU (in
+//! [`crate::vm`], since it spans more than the mid-end layer) is the
+//! virtual-addressing stage that translates job addresses ahead of
+//! legalization.
 
 mod arbiter;
 mod mp_dist;
 mod mp_split;
 mod rt3d;
+mod scatter_gather;
 mod tensor;
 
 pub use arbiter::RoundRobinArbiter;
 pub use mp_dist::{DistSide, MpDist};
 pub use mp_split::{MpSplit, SplitSide};
 pub use rt3d::{Rt3D, Rt3DConfig, RT_JOB_BIT};
+pub use scatter_gather::{ScatterGather, SgConfig, SgMode, SG_OWNER};
 pub use tensor::{Tensor2D, TensorNd};
 
+use crate::mem::Endpoint;
 use crate::sim::Cycle;
 use crate::transfer::NdTransfer;
 
@@ -63,6 +75,24 @@ pub trait MidEnd {
 
     /// Advance internal state by one cycle (autonomous mid-ends).
     fn tick(&mut self, _now: Cycle) {}
+
+    /// Cycle advance *with endpoint access*, for mid-ends that issue
+    /// their own memory traffic ([`ScatterGather`] index fetches,
+    /// [`crate::vm::Mmu`] page-table walks). The engine calls this
+    /// (not [`MidEnd::tick`]) each cycle, after the back-end has taken
+    /// its turn on the endpoints; the default forwards to `tick` so
+    /// pure-pipeline mid-ends are unaffected.
+    fn tick_mem(&mut self, now: Cycle, _mems: &mut [Endpoint]) {
+        self.tick(now);
+    }
+
+    /// Drain `(job, faulting VA)` translation faults raised this cycle.
+    /// Only the [`crate::vm::Mmu`] produces any; the engine finishes
+    /// each faulted job with
+    /// [`crate::telemetry::TransferStatus::PageFault`].
+    fn take_faults(&mut self) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
 
     /// Number of output ports (1 for all but `mp_dist`).
     fn outputs(&self) -> usize {
@@ -108,5 +138,12 @@ pub trait MidEnd {
         } else {
             None
         }
+    }
+
+    /// Downcasting hook for mid-ends with a native programming surface
+    /// ([`ScatterGather::program`], [`crate::vm::Mmu::flush_tlb`]):
+    /// returns `Some(self)` for those, `None` for plain pipeline stages.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
     }
 }

@@ -1,0 +1,311 @@
+//! The [`ScatterGather`] mid-end: index-list-driven irregular transfers
+//! (the paper's §2.2 "scattering or gathering" claim; arXiv:2510.12277's
+//! descriptor shape).
+//!
+//! A job is *programmed* ahead of submission with an [`SgConfig`] naming
+//! an index list that lives **in memory**. When the job arrives, the
+//! mid-end fetches the list as real owner-tagged read bursts through an
+//! [`Endpoint`] — competing with data traffic for the port, observable
+//! in telemetry as `tid 0` [`TelemetryEvent::ReadBeat`]s — and expands
+//! it into one 1D descriptor per element:
+//!
+//! * [`SgMode::Gather`]: element `k` copies from
+//!   `src + idx[k] * elem_len` to `dst + k * elem_len` (dense result);
+//! * [`SgMode::Scatter`]: element `k` copies from `src + k * elem_len`
+//!   to `dst + idx[k] * elem_len` (dense source).
+//!
+//! `elem_len` is the job's `len` field. Index fetch, expansion and
+//! downstream consumption are pipelined: elements are emitted as soon as
+//! their index bytes land, at most one per cycle. Unprogrammed jobs pass
+//! through untouched, so the mid-end is transparent to dense traffic.
+//!
+//! Index lists are physically addressed (like descriptor rings): they
+//! are fetched *before* the [`crate::vm::Mmu`], which sits downstream
+//! and translates the per-element addresses the expansion produces.
+
+use std::collections::HashMap;
+
+use crate::mem::Endpoint;
+use crate::midend::{MidEnd, NdJob};
+use crate::sim::{Cycle, Fifo};
+use crate::telemetry::{Probe, TelemetryEvent};
+use crate::transfer::NdTransfer;
+
+/// Owner tag for index-list read requests, distinct from the back-end's
+/// default owner (0) and the walker's [`crate::vm::PTW_OWNER`].
+pub const SG_OWNER: u32 = 0x5CA7;
+
+/// Index fetch burst size in bytes (one request covers up to this much
+/// of the list; requests are capped at two outstanding).
+const FETCH_CHUNK: u64 = 64;
+
+/// Maximum outstanding index fetch requests.
+const MAX_OUTSTANDING: u32 = 2;
+
+/// Transfer direction of a programmed job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SgMode {
+    /// Indexed reads, dense writes (`dst` is packed).
+    Gather,
+    /// Dense reads, indexed writes (`src` is packed).
+    Scatter,
+}
+
+/// Per-job scatter/gather programming: where the index list lives and
+/// how to interpret it.
+#[derive(Debug, Clone, Copy)]
+pub struct SgConfig {
+    /// Physical address of the first index.
+    pub index_base: u64,
+    /// Number of indices (= elements to expand).
+    pub index_count: u64,
+    /// Bytes per stored index: 4 (little-endian `u32`) or 8 (`u64`).
+    pub index_width: u64,
+    /// Gather or scatter.
+    pub mode: SgMode,
+}
+
+impl SgConfig {
+    /// Total bytes of the index list.
+    pub fn list_bytes(&self) -> u64 {
+        self.index_count * self.index_width
+    }
+}
+
+/// An expansion in progress.
+#[derive(Debug)]
+struct SgActive {
+    job: u64,
+    /// The programmed job's transfer; `len` is the element length.
+    base: crate::transfer::Transfer1D,
+    cfg: SgConfig,
+    /// Raw index bytes in address order (beats arrive in order).
+    buf: Vec<u8>,
+    /// Next list byte offset to request.
+    req_next: u64,
+    outstanding: u32,
+    /// Elements already emitted downstream.
+    emitted: u64,
+}
+
+/// Scatter/gather mid-end (see the module docs).
+pub struct ScatterGather {
+    port: usize,
+    owner: u32,
+    programmed: HashMap<u64, SgConfig>,
+    inq: Fifo<NdJob>,
+    out: Fifo<NdJob>,
+    active: Option<SgActive>,
+    wake: Option<Cycle>,
+    probe: Probe,
+}
+
+impl ScatterGather {
+    /// A scatter/gather stage fetching index lists from endpoint `port`
+    /// under [`SG_OWNER`].
+    pub fn new(port: usize) -> Self {
+        Self {
+            port,
+            owner: SG_OWNER,
+            programmed: HashMap::new(),
+            inq: Fifo::new(2),
+            out: Fifo::new(2),
+            active: None,
+            wake: None,
+            probe: Probe::none(),
+        }
+    }
+
+    /// Program the expansion for `job` (the engine-visible job ID its
+    /// [`NdJob`] will carry). One configuration per job; it is consumed
+    /// when the job arrives. Unprogrammed jobs pass through dense.
+    ///
+    /// Note: [`crate::resilience::Supervisor`] retries resubmit under
+    /// fresh engine-side IDs, so a programming does **not** follow a job
+    /// through supervised replay — supervise dense jobs only.
+    pub fn program(&mut self, job: u64, cfg: SgConfig) {
+        assert!(matches!(cfg.index_width, 4 | 8), "index width must be 4 or 8 bytes");
+        self.programmed.insert(job, cfg);
+    }
+
+    fn index_at(buf: &[u8], k: u64, width: u64) -> u64 {
+        let o = (k * width) as usize;
+        if width == 4 {
+            u32::from_le_bytes(buf[o..o + 4].try_into().expect("bounds checked")) as u64
+        } else {
+            u64::from_le_bytes(buf[o..o + 8].try_into().expect("bounds checked"))
+        }
+    }
+
+    /// Consume one index beat if ours is at the endpoint head.
+    fn drain_index_beat(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        if self.active.is_none() {
+            return;
+        }
+        let ep = &mut mems[self.port];
+        if ep.read_beat_owner(now) != Some(self.owner) {
+            return;
+        }
+        let beat = ep.take_read_beat(now).expect("owner-checked beat");
+        // Index traffic is observable in telemetry as port beats with
+        // the reserved tid 0 (never assigned to a data transfer).
+        if self.probe.active() {
+            self.probe.emit(TelemetryEvent::ReadBeat {
+                tid: 0,
+                port: self.port,
+                bytes: beat.data.len() as u64,
+                at: now,
+            });
+        }
+        let a = self.active.as_mut().expect("checked above");
+        a.buf.extend_from_slice(&beat.data);
+        if beat.last {
+            a.outstanding -= 1;
+        }
+    }
+
+    /// Issue index fetch requests (greedy, bounded outstanding).
+    fn issue_fetches(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        let Some(a) = self.active.as_mut() else { return };
+        let total = a.cfg.list_bytes();
+        let ep = &mut mems[self.port];
+        while a.req_next < total && a.outstanding < MAX_OUTSTANDING {
+            let len = FETCH_CHUNK.min(total - a.req_next);
+            if !ep.try_read_req(now, a.cfg.index_base + a.req_next, len, self.owner) {
+                break;
+            }
+            a.req_next += len;
+            a.outstanding += 1;
+        }
+    }
+
+    /// Move the head-of-queue job into expansion, or pass it through.
+    fn load(&mut self, now: Cycle) {
+        if self.active.is_some() {
+            return;
+        }
+        let head_programmed = match self.inq.peek(now) {
+            Some(j) => self.programmed.contains_key(&j.job),
+            None => return,
+        };
+        if head_programmed {
+            let j = self.inq.pop(now).expect("peeked above");
+            let cfg = self.programmed.remove(&j.job).expect("peeked above");
+            assert!(j.nd.dims.is_empty(), "scatter/gather jobs must be 1D (len = element size)");
+            self.active = Some(SgActive {
+                job: j.job,
+                base: j.nd.inner,
+                cfg,
+                buf: Vec::with_capacity(cfg.list_bytes() as usize),
+                req_next: 0,
+                outstanding: 0,
+                emitted: 0,
+            });
+        } else if self.out.can_push() {
+            let j = self.inq.pop(now).expect("peeked above");
+            self.out.push(now, j);
+        }
+    }
+
+    /// Emit the next element once its index bytes have landed (≤ 1 per
+    /// cycle).
+    fn emit_element(&mut self, now: Cycle) {
+        let mut finished = false;
+        if let Some(a) = self.active.as_mut() {
+            let available = (a.buf.len() as u64 / a.cfg.index_width).min(a.cfg.index_count);
+            if a.emitted < available && self.out.can_push() {
+                let idx = Self::index_at(&a.buf, a.emitted, a.cfg.index_width);
+                let elem = a.base.len;
+                let mut t = a.base;
+                match a.cfg.mode {
+                    SgMode::Gather => {
+                        t.src = a.base.src + idx * elem;
+                        t.dst = a.base.dst + a.emitted * elem;
+                    }
+                    SgMode::Scatter => {
+                        t.src = a.base.src + a.emitted * elem;
+                        t.dst = a.base.dst + idx * elem;
+                    }
+                }
+                self.out.push(now, NdJob::new(a.job, NdTransfer::d1(t)));
+                a.emitted += 1;
+            }
+            finished = a.emitted >= a.cfg.index_count;
+        }
+        if finished {
+            self.active = None;
+        }
+    }
+}
+
+impl MidEnd for ScatterGather {
+    fn name(&self) -> &'static str {
+        "scatter_gather"
+    }
+
+    fn can_accept(&self) -> bool {
+        self.inq.can_push()
+    }
+
+    fn accept(&mut self, now: Cycle, j: NdJob) -> bool {
+        if !self.inq.can_push() {
+            return false;
+        }
+        self.inq.push(now, j);
+        true
+    }
+
+    fn tick_mem(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        self.drain_index_beat(now, mems);
+        self.load(now);
+        self.issue_fetches(now, mems);
+        self.emit_element(now);
+        // Wake hint: only when progress hinges solely on index beats
+        // (everything requestable requested or the outstanding cap hit,
+        // all landed indices emitted, nothing buffered for downstream).
+        self.wake = None;
+        if self.out.is_empty() && self.inq.is_empty() {
+            if let Some(a) = &self.active {
+                let all_requested = a.req_next >= a.cfg.list_bytes();
+                let cap_hit = a.outstanding >= MAX_OUTSTANDING;
+                let caught_up =
+                    a.emitted >= (a.buf.len() as u64 / a.cfg.index_width).min(a.cfg.index_count);
+                if a.outstanding > 0 && caught_up && (all_requested || cap_hit) {
+                    self.wake = mems[self.port].next_read_beat_at(now);
+                }
+            }
+        }
+    }
+
+    fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.pop(now)
+    }
+
+    fn peek_port(&self, now: Cycle, port: usize) -> Option<&NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.inq.is_empty() || self.active.is_some() || !self.out.is_empty()
+    }
+
+    fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
+    }
+
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if !self.busy() {
+            return None;
+        }
+        match self.wake {
+            Some(w) if w > now + 1 => Some(w),
+            _ => Some(now + 1),
+        }
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

@@ -369,6 +369,9 @@ pub fn run_case(cfg: &CampaignCfg, kind: SystemKind, scen: FaultScenario) -> Cas
             }
             TransferStatus::BusError { .. } => res.failed += 1,
             TransferStatus::TimedOut { .. } => res.timed_out += 1,
+            // Campaign systems run without an MMU; a fault here would
+            // mean a mis-wired plan, so count it as a plain failure.
+            TransferStatus::PageFault { .. } => res.failed += 1,
         }
     }
     res.quarantined_endpoints = sup

@@ -105,6 +105,10 @@ pub struct Supervisor {
     pub deadline: Option<u64>,
     rng: XorShift64,
     probe: Probe,
+    /// Page-fault handler (the "OS" side of demand paging): called with
+    /// the faulting VA; returns `true` when the mapping was repaired and
+    /// the job should be replayed.
+    fault_handler: Option<Box<dyn FnMut(u64, &mut IdmaSystem) -> bool>>,
     jobs: HashMap<u64, Managed>,
     /// Engine-side ID → user job ID for everything in flight.
     cur2user: HashMap<u64, u64>,
@@ -127,6 +131,7 @@ impl Supervisor {
             deadline: None,
             rng: XorShift64::new(policy.seed),
             probe: Probe::none(),
+            fault_handler: None,
             jobs: HashMap::new(),
             cur2user: HashMap::new(),
             pending: Vec::new(),
@@ -146,6 +151,22 @@ impl Supervisor {
     /// Replace the endpoint health thresholds.
     pub fn with_health_policy(mut self, hp: HealthPolicy) -> Self {
         self.health_policy = hp;
+        self
+    }
+
+    /// Install a page-fault handler. On a
+    /// [`TransferStatus::PageFault`] completion the supervisor calls
+    /// `f(faulting_va, &mut sys)`; when it returns `true` (page mapped —
+    /// typically via [`crate::vm::PageTable::map`] plus
+    /// [`crate::vm::Mmu::flush_tlb`] if a negative entry could linger)
+    /// the full job is replayed under a fresh engine-side ID, counting
+    /// one retry against [`Supervisor::policy`]. Without a handler (or
+    /// when it returns `false`) the fault finalizes the job as-is.
+    pub fn with_fault_handler(
+        mut self,
+        f: impl FnMut(u64, &mut IdmaSystem) -> bool + 'static,
+    ) -> Self {
+        self.fault_handler = Some(Box::new(f));
         self
     }
 
@@ -381,6 +402,7 @@ impl Supervisor {
                     && reports.iter().all(|e| e.action == ErrorAction::Replay)
             }
             TransferStatus::TimedOut { .. } => false,
+            TransferStatus::PageFault { .. } => false,
         };
 
         if recovered {
@@ -419,6 +441,46 @@ impl Supervisor {
                 ..r
             };
             self.finalize(user, rec);
+            return;
+        }
+
+        if let TransferStatus::PageFault { va } = r.status {
+            // Translation fault: not an endpoint failure (health is
+            // untouched) — give the fault handler a chance to map the
+            // page, then replay the full job under a fresh ID.
+            self.jobs.get_mut(&user).unwrap().last_status = r.status;
+            let handled = match self.fault_handler.as_mut() {
+                Some(h) => h(va, &mut self.sys),
+                None => false,
+            };
+            let exhausted = {
+                let m = &self.jobs[&user];
+                m.retries + 1 >= self.policy.max_attempts
+            };
+            if !handled || exhausted {
+                let m = &self.jobs[&user];
+                let rec = if is_frag {
+                    self.synth_record(user, now, r.status)
+                } else {
+                    CompletionRecord {
+                        frontend: None,
+                        job: user,
+                        submitted: m.first_submit,
+                        retries: m.retries,
+                        ..r
+                    }
+                };
+                self.finalize(user, rec);
+                return;
+            }
+            let m = self.jobs.get_mut(&user).unwrap();
+            m.retries += 1;
+            m.frag_outstanding = 0;
+            m.frag_failed = false;
+            let attempt = m.retries;
+            let due = now + self.policy.delay(attempt, &mut self.rng);
+            self.pending.push(Pending { due, user, frag: None });
+            self.probe.emit(TelemetryEvent::RetryScheduled { job: user, attempt, at: now });
             return;
         }
 

@@ -152,6 +152,10 @@ impl BenchJson {
             .int("telemetry_retries", s.retries)
             .int("telemetry_timed_out", s.timed_out)
             .int("telemetry_quarantined", s.quarantined)
+            .int("telemetry_tlb_hits", s.tlb_hits)
+            .int("telemetry_tlb_misses", s.tlb_misses)
+            .int("telemetry_ptw_beats", s.ptw_beats)
+            .int("telemetry_page_faults", s.page_faults)
             .int("telemetry_cycles", s.cycles())
     }
 

@@ -109,6 +109,55 @@ impl Cheshire {
         IdmaSystem::new(engine, mems)
     }
 
+    /// Irregular-transfer variant: the same DRAM endpoint behind a
+    /// [`crate::midend::ScatterGather`] mid-end (index lists fetched
+    /// through port 0) feeding a [`crate::vm::Mmu`] that translates the
+    /// per-element addresses through an 8×2-way IOTLB backed by a
+    /// 2-level page table walked as real memory traffic on the same
+    /// port. Direct submission (no front-end): the caller — typically a
+    /// [`crate::resilience::Supervisor`] with a fault handler — owns the
+    /// control plane.
+    ///
+    /// Returns the facade plus the [`crate::vm::PageTable`] builder
+    /// rooted where the walker expects it. The VA space covers
+    /// `2 * 9 + 12 = 30` bits; page-table nodes grow upward from
+    /// `0x4000_0000`, so callers should place physical data at
+    /// `0x8000_0000` and above.
+    pub fn virtual_system(&self) -> (IdmaSystem, crate::vm::PageTable) {
+        use crate::midend::{MidEnd, ScatterGather};
+        use crate::vm::{IotlbCfg, Mmu, MmuCfg, PageTable};
+        let be = Backend::new(BackendCfg {
+            aw_bits: 64,
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            error_handling: true,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            desc_depth: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let pt = PageTable::new(0x4000_0000, 12, 2);
+        let mids: Vec<Box<dyn MidEnd>> = vec![
+            Box::new(ScatterGather::new(0)),
+            Box::new(Mmu::new(MmuCfg {
+                iotlb: IotlbCfg { sets: 8, ways: 2, page_bits: 12 },
+                root: pt.root(),
+                levels: 2,
+                pt_port: 0,
+                ..Default::default()
+            })),
+        ];
+        let engine = IdmaEngine::new(mids, be);
+        let mems = vec![Endpoint::new(MemModel::custom(
+            "dram",
+            self.mem_latency,
+            self.nax.max(16),
+            self.dw,
+        ))];
+        (IdmaSystem::new(engine, mems), pt)
+    }
+
     /// Copy `n` transfers of `len` bytes each through the full desc_64
     /// path (descriptor chain in SPM → fetch → execute), measuring the
     /// engine's bus utilization. Data integrity is asserted. The run is

@@ -144,6 +144,39 @@ pub enum TelemetryEvent {
         /// Cycle of the quarantine decision.
         at: Cycle,
     },
+    /// The [`crate::vm::Mmu`]'s IOTLB translated an address from cache.
+    TlbHit {
+        /// Facade-tagged job ID being translated.
+        job: u64,
+        /// Lookup cycle.
+        at: Cycle,
+    },
+    /// An IOTLB lookup missed, starting a timed page-table walk.
+    TlbMiss {
+        /// Facade-tagged job ID being translated.
+        job: u64,
+        /// Lookup cycle.
+        at: Cycle,
+    },
+    /// One page-table-walker PTE fetch beat arrived from an endpoint.
+    PtwBeat {
+        /// Engine port index the beat used.
+        port: usize,
+        /// Payload bytes carried by the beat.
+        bytes: u64,
+        /// Beat cycle.
+        at: Cycle,
+    },
+    /// A page-table walk hit an invalid PTE: the job was abandoned with
+    /// [`TransferStatus::PageFault`].
+    PageFaulted {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// The virtual address whose translation faulted.
+        va: u64,
+        /// Cycle the fault was raised.
+        at: Cycle,
+    },
 }
 
 /// Receiver of [`TelemetryEvent`]s. Implemented by [`Recorder`]; user
@@ -223,7 +256,10 @@ impl Probe {
                 | TelemetryEvent::TransferBound { job, .. }
                 | TelemetryEvent::JobDone { job, .. }
                 | TelemetryEvent::RetryScheduled { job, .. }
-                | TelemetryEvent::JobTimedOut { job, .. } => *job |= self.tag,
+                | TelemetryEvent::JobTimedOut { job, .. }
+                | TelemetryEvent::TlbHit { job, .. }
+                | TelemetryEvent::TlbMiss { job, .. }
+                | TelemetryEvent::PageFaulted { job, .. } => *job |= self.tag,
                 _ => {}
             }
         }
@@ -248,6 +284,14 @@ impl Probe {
 ///   (typically a stalled endpoint). Destination contents over the
 ///   unfinished range are undefined; in-flight endpoint state was
 ///   discarded.
+/// * [`TransferStatus::PageFault`] — the [`crate::vm::Mmu`] hit an
+///   invalid PTE translating `va` and abandoned the job. Chunks emitted
+///   before the fault completed normally, so the destination holds a
+///   prefix of the data; nothing at or past the faulting page was
+///   written. The fault is *retryable*: map the page and replay the
+///   whole job (the [`crate::resilience::Supervisor`]'s fault handler
+///   automates this). Like timed-out jobs, a faulted job ID must not be
+///   resubmitted — replays need a fresh ID.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransferStatus {
     /// All beats retired without an error response.
@@ -265,6 +309,12 @@ pub enum TransferStatus {
     TimedOut {
         /// Bus errors observed before the watchdog fired.
         errors: u32,
+    },
+    /// Address translation faulted; the job was cut short at the
+    /// faulting chunk.
+    PageFault {
+        /// The virtual address that failed to translate.
+        va: u64,
     },
 }
 
@@ -311,16 +361,18 @@ impl CompletionRecord {
             TransferStatus::Ok => 0,
             TransferStatus::BusError { errors, .. } => errors,
             TransferStatus::TimedOut { errors } => errors,
+            TransferStatus::PageFault { .. } => 0,
         }
     }
 
-    /// True when the job was cut short: the error handler aborted it or
-    /// a watchdog timed it out.
+    /// True when the job was cut short: the error handler aborted it, a
+    /// watchdog timed it out, or a translation fault abandoned it.
     pub fn aborted(&self) -> bool {
         match self.status {
             TransferStatus::Ok => false,
             TransferStatus::BusError { aborted, .. } => aborted,
             TransferStatus::TimedOut { .. } => true,
+            TransferStatus::PageFault { .. } => true,
         }
     }
 
@@ -330,12 +382,22 @@ impl CompletionRecord {
             TransferStatus::Ok => None,
             TransferStatus::BusError { addr, .. } => addr,
             TransferStatus::TimedOut { .. } => None,
+            TransferStatus::PageFault { .. } => None,
         }
     }
 
     /// True when a watchdog force-aborted the job.
     pub fn timed_out(&self) -> bool {
         matches!(self.status, TransferStatus::TimedOut { .. })
+    }
+
+    /// The faulting virtual address, when address translation cut the
+    /// job short.
+    pub fn page_fault(&self) -> Option<u64> {
+        match self.status {
+            TransferStatus::PageFault { va } => Some(va),
+            _ => None,
+        }
     }
 }
 
@@ -391,5 +453,13 @@ mod tests {
         assert!(r.aborted(), "timed-out jobs count as cut short");
         assert!(r.timed_out());
         assert_eq!(r.error_addr(), None);
+        assert_eq!(r.page_fault(), None);
+        r.status = TransferStatus::PageFault { va: 0x1234 };
+        assert!(!r.ok());
+        assert_eq!(r.errors(), 0);
+        assert!(r.aborted(), "faulted jobs count as cut short");
+        assert!(!r.timed_out());
+        assert_eq!(r.error_addr(), None);
+        assert_eq!(r.page_fault(), Some(0x1234));
     }
 }

@@ -31,6 +31,8 @@ pub struct JobTrace {
     pub retries: u32,
     /// A watchdog force-aborted this job.
     pub timed_out: bool,
+    /// A translation fault cut this job short.
+    pub page_faulted: bool,
 }
 
 /// Cycle-resolved per-port beat counters.
@@ -73,6 +75,14 @@ pub struct RunSummary {
     pub timed_out: u64,
     /// Endpoints quarantined by health tracking.
     pub quarantined: u64,
+    /// IOTLB lookups that hit ([`TelemetryEvent::TlbHit`]).
+    pub tlb_hits: u64,
+    /// IOTLB lookups that missed ([`TelemetryEvent::TlbMiss`]).
+    pub tlb_misses: u64,
+    /// Page-table-walker memory beats ([`TelemetryEvent::PtwBeat`]).
+    pub ptw_beats: u64,
+    /// Translation faults raised ([`TelemetryEvent::PageFaulted`]).
+    pub page_faults: u64,
     /// Earliest submit cycle.
     pub first_submit: Option<Cycle>,
     /// Latest retire cycle.
@@ -97,6 +107,20 @@ impl RunSummary {
         }
         self.bytes_written as f64 / (c * bus_bytes) as f64
     }
+
+    /// Total IOTLB lookups (each lookup is exactly one hit or one miss).
+    pub fn tlb_translations(&self) -> u64 {
+        self.tlb_hits + self.tlb_misses
+    }
+
+    /// IOTLB hit rate in `[0,1]`; `0.0` when no lookup happened.
+    pub fn tlb_hit_rate(&self) -> f64 {
+        let n = self.tlb_translations();
+        if n == 0 {
+            return 0.0;
+        }
+        self.tlb_hits as f64 / n as f64
+    }
 }
 
 /// The built-in [`TelemetrySink`]: aggregates events into per-job
@@ -115,6 +139,10 @@ pub struct Recorder {
     events: Vec<TelemetryEvent>,
     bus_errors: u64,
     quarantined: u64,
+    tlb_hits: u64,
+    tlb_misses: u64,
+    ptw_beats: u64,
+    page_faults: u64,
 }
 
 impl Recorder {
@@ -154,6 +182,10 @@ impl Recorder {
             jobs: self.jobs.len() as u64,
             bus_errors: self.bus_errors,
             quarantined: self.quarantined,
+            tlb_hits: self.tlb_hits,
+            tlb_misses: self.tlb_misses,
+            ptw_beats: self.ptw_beats,
+            page_faults: self.page_faults,
             ..Default::default()
         };
         for t in self.jobs.values() {
@@ -264,6 +296,21 @@ impl TelemetrySink for Recorder {
             TelemetryEvent::EndpointQuarantined { .. } => {
                 self.quarantined += 1;
             }
+            TelemetryEvent::TlbHit { job, .. } => {
+                self.tlb_hits += 1;
+                self.trace(job);
+            }
+            TelemetryEvent::TlbMiss { job, .. } => {
+                self.tlb_misses += 1;
+                self.trace(job);
+            }
+            TelemetryEvent::PtwBeat { .. } => {
+                self.ptw_beats += 1;
+            }
+            TelemetryEvent::PageFaulted { job, .. } => {
+                self.page_faults += 1;
+                self.trace(job).page_faulted = true;
+            }
         }
     }
 }
@@ -344,6 +391,30 @@ mod tests {
         assert_eq!(s.retries, 2);
         assert_eq!(s.timed_out, 1);
         assert_eq!(s.quarantined, 1);
+    }
+
+    #[test]
+    fn vm_events_aggregate() {
+        let mut r = Recorder::new();
+        feed(
+            &mut r,
+            &[
+                TelemetryEvent::TlbMiss { job: 1, at: 1 },
+                TelemetryEvent::PtwBeat { port: 0, bytes: 8, at: 5 },
+                TelemetryEvent::PtwBeat { port: 0, bytes: 8, at: 6 },
+                TelemetryEvent::TlbHit { job: 1, at: 9 },
+                TelemetryEvent::TlbHit { job: 1, at: 10 },
+                TelemetryEvent::PageFaulted { job: 2, va: 0x8000, at: 12 },
+            ],
+        );
+        let s = r.summary();
+        assert_eq!((s.tlb_hits, s.tlb_misses), (2, 1));
+        assert_eq!(s.tlb_translations(), 3);
+        assert!((s.tlb_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.ptw_beats, 2);
+        assert_eq!(s.page_faults, 1);
+        assert!(r.job(2).unwrap().page_faulted);
+        assert_eq!(Recorder::new().summary().tlb_hit_rate(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Set-associative I/O TLB with deterministic LRU replacement.
+//!
+//! The IOTLB caches page-granular VA→PA translations for the
+//! [`crate::vm::Mmu`]. Geometry (sets, ways, page size) is configurable
+//! so the property tests can sweep it; replacement is LRU via monotone
+//! access stamps, so two runs over the same access sequence produce the
+//! same hit/miss sequence regardless of host threading.
+
+/// IOTLB geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IotlbCfg {
+    /// Number of sets (indexed by `vpn % sets`; any value ≥ 1).
+    pub sets: usize,
+    /// Associativity (entries per set, ≥ 1).
+    pub ways: usize,
+    /// Page size as a power of two (12 → 4 KiB pages).
+    pub page_bits: u32,
+}
+
+impl Default for IotlbCfg {
+    fn default() -> Self {
+        Self { sets: 16, ways: 4, page_bits: 12 }
+    }
+}
+
+/// Lifetime counters of one [`Iotlb`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IotlbStats {
+    /// Lookups that found a cached translation.
+    pub hits: u64,
+    /// Lookups that missed (each triggers one page-table walk).
+    pub misses: u64,
+    /// Valid entries displaced by an insert.
+    pub evictions: u64,
+}
+
+impl IotlbStats {
+    /// Total translations requested (`hits + misses` — the conservation
+    /// invariant checked by the differential tests).
+    pub fn translations(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit rate in `[0, 1]`; `0.0` before the first lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.translations();
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+/// One cached translation.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    vpn: u64,
+    /// Physical page base (page-aligned).
+    page_base: u64,
+    /// LRU stamp: larger = more recently used.
+    stamp: u64,
+}
+
+/// A set-associative, LRU-replaced VA→PA translation cache.
+#[derive(Debug, Clone)]
+pub struct Iotlb {
+    cfg: IotlbCfg,
+    /// `sets * ways` slots, set-major.
+    slots: Vec<Option<Entry>>,
+    stamp: u64,
+    stats: IotlbStats,
+}
+
+impl Iotlb {
+    /// Build an empty TLB with the given geometry.
+    pub fn new(cfg: IotlbCfg) -> Self {
+        assert!(cfg.sets >= 1, "iotlb needs at least one set");
+        assert!(cfg.ways >= 1, "iotlb needs at least one way");
+        assert!(cfg.page_bits >= 1 && cfg.page_bits < 48, "unreasonable page size");
+        Self { cfg, slots: vec![None; cfg.sets * cfg.ways], stamp: 0, stats: IotlbStats::default() }
+    }
+
+    /// The configured geometry.
+    pub fn cfg(&self) -> IotlbCfg {
+        self.cfg
+    }
+
+    /// Page size in bytes.
+    pub fn page_size(&self) -> u64 {
+        1 << self.cfg.page_bits
+    }
+
+    /// Lifetime hit/miss/eviction counters.
+    pub fn stats(&self) -> IotlbStats {
+        self.stats
+    }
+
+    fn set_range(&self, vpn: u64) -> std::ops::Range<usize> {
+        let set = (vpn % self.cfg.sets as u64) as usize;
+        set * self.cfg.ways..(set + 1) * self.cfg.ways
+    }
+
+    /// Translate `va`. A hit returns the full physical address (page
+    /// base plus offset) and refreshes the entry's LRU stamp; a miss
+    /// returns `None`. Both outcomes count in [`Iotlb::stats`].
+    pub fn lookup(&mut self, va: u64) -> Option<u64> {
+        let vpn = va >> self.cfg.page_bits;
+        let off = va & (self.page_size() - 1);
+        let range = self.set_range(vpn);
+        self.stamp += 1;
+        for slot in &mut self.slots[range] {
+            if let Some(e) = slot {
+                if e.vpn == vpn {
+                    e.stamp = self.stamp;
+                    self.stats.hits += 1;
+                    return Some(e.page_base + off);
+                }
+            }
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Probe without touching stats or LRU order (test helper).
+    pub fn contains(&self, va: u64) -> bool {
+        let vpn = va >> self.cfg.page_bits;
+        let range = self.set_range(vpn);
+        self.slots[range].iter().any(|s| matches!(s, Some(e) if e.vpn == vpn))
+    }
+
+    /// Install the translation `va`'s page → `page_base` (page-aligned
+    /// physical base), evicting the set's LRU entry when full. Inserting
+    /// an already-present page refreshes it in place.
+    pub fn insert(&mut self, va: u64, page_base: u64) {
+        debug_assert_eq!(page_base & (self.page_size() - 1), 0, "page base must be aligned");
+        let vpn = va >> self.cfg.page_bits;
+        let range = self.set_range(vpn);
+        self.stamp += 1;
+        let stamp = self.stamp;
+        // Refresh in place when present.
+        for slot in &mut self.slots[range.clone()] {
+            if let Some(e) = slot {
+                if e.vpn == vpn {
+                    e.page_base = page_base;
+                    e.stamp = stamp;
+                    return;
+                }
+            }
+        }
+        // Else fill the first invalid way, or evict the LRU (smallest
+        // stamp; ties broken by way index — fully deterministic).
+        let mut victim = range.start;
+        let mut victim_stamp = u64::MAX;
+        for i in range {
+            match &self.slots[i] {
+                None => {
+                    self.slots[i] = Some(Entry { vpn, page_base, stamp });
+                    return;
+                }
+                Some(e) => {
+                    if e.stamp < victim_stamp {
+                        victim_stamp = e.stamp;
+                        victim = i;
+                    }
+                }
+            }
+        }
+        self.stats.evictions += 1;
+        self.slots[victim] = Some(Entry { vpn, page_base, stamp });
+    }
+
+    /// Drop every cached translation (stats are kept).
+    pub fn flush(&mut self) {
+        self.slots.iter_mut().for_each(|s| *s = None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert_and_offset_preserved() {
+        let mut t = Iotlb::new(IotlbCfg { sets: 4, ways: 2, page_bits: 12 });
+        assert_eq!(t.lookup(0x1234), None);
+        t.insert(0x1234, 0x8000_0000);
+        assert_eq!(t.lookup(0x1234), Some(0x8000_0234));
+        assert_eq!(t.lookup(0x1FFF), Some(0x8000_0FFF), "same page, different offset");
+        let s = t.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+        assert_eq!(s.translations(), 3);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_way() {
+        // One set, two ways: touching A keeps it resident while B is
+        // displaced by C.
+        let mut t = Iotlb::new(IotlbCfg { sets: 1, ways: 2, page_bits: 12 });
+        t.insert(0x0000, 0x1000); // A
+        t.insert(0x1000, 0x2000); // B
+        assert!(t.lookup(0x0000).is_some()); // refresh A → B is LRU
+        t.insert(0x2000, 0x3000); // C evicts B
+        assert!(t.contains(0x0000));
+        assert!(!t.contains(0x1000));
+        assert!(t.contains(0x2000));
+        assert_eq!(t.stats().evictions, 1);
+    }
+
+    #[test]
+    fn flush_keeps_stats_but_drops_entries() {
+        let mut t = Iotlb::new(IotlbCfg::default());
+        t.insert(0x5000, 0x9000);
+        assert!(t.lookup(0x5000).is_some());
+        t.flush();
+        assert!(!t.contains(0x5000));
+        assert_eq!(t.lookup(0x5000), None);
+        assert_eq!(t.stats().hits, 1);
+        assert_eq!(t.stats().misses, 1);
+    }
+}

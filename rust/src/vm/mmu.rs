@@ -1,0 +1,432 @@
+//! The [`Mmu`] mid-end: IOTLB-cached address translation with a timed
+//! hardware page-table walker.
+//!
+//! Placed *last* in the mid-end chain, the MMU consumes 1D jobs carrying
+//! virtual addresses, splits them at page boundaries, translates each
+//! chunk's source and destination through the [`Iotlb`], and emits
+//! physically-addressed 1D jobs to the back-end. A TLB miss starts a
+//! multi-level walk whose PTE fetches are issued as real owner-tagged
+//! read requests through the page-table [`Endpoint`] — they compete with
+//! data traffic for the port and show up in telemetry as
+//! [`TelemetryEvent::PtwBeat`]s. Exactly the transfer that missed
+//! stalls; everything already handed to the back-end keeps draining, and
+//! the MMU's [`MidEnd::next_event`] hint lets the event core skip the
+//! walk's dead cycles.
+//!
+//! An invalid PTE is a **translation fault**: the MMU drops the rest of
+//! the job, records the faulting VA, and the engine finishes the job
+//! with [`crate::telemetry::TransferStatus::PageFault`]. Like timed-out
+//! jobs, a faulted job ID cannot be resubmitted — the
+//! [`crate::resilience::Supervisor`] replays under a fresh ID after its
+//! fault handler maps the page.
+
+use std::collections::HashSet;
+
+use crate::mem::Endpoint;
+use crate::midend::{MidEnd, NdJob};
+use crate::protocol::ProtocolKind;
+use crate::sim::{Cycle, Fifo};
+use crate::telemetry::{Probe, TelemetryEvent};
+use crate::transfer::{NdTransfer, Transfer1D};
+use crate::vm::page_table::{IDX_BITS, NODE_ENTRIES, PTE_VALID};
+use crate::vm::{Iotlb, IotlbCfg};
+
+/// Owner tag the MMU stamps on its page-table-walk read requests, so a
+/// back-end sharing the endpoint (owner 0 by default) leaves the PTE
+/// beats for the walker.
+pub const PTW_OWNER: u32 = 0xF11D;
+
+/// MMU configuration: TLB geometry plus the walker's view of the page
+/// table (root node address, walk depth, and which endpoint holds it).
+#[derive(Debug, Clone, Copy)]
+pub struct MmuCfg {
+    /// IOTLB geometry (also fixes the page size).
+    pub iotlb: IotlbCfg,
+    /// Physical address of the root page-table node.
+    pub root: u64,
+    /// Walk depth (matches [`crate::vm::PageTable::levels`]).
+    pub levels: u32,
+    /// Endpoint index (in the engine's `mems` slice) holding the table.
+    pub pt_port: usize,
+    /// Owner tag for PTE fetches (default [`PTW_OWNER`]).
+    pub owner: u32,
+}
+
+impl Default for MmuCfg {
+    fn default() -> Self {
+        Self { iotlb: IotlbCfg::default(), root: 0, levels: 2, pt_port: 0, owner: PTW_OWNER }
+    }
+}
+
+/// One page-bounded piece of the active job, translated side by side.
+#[derive(Debug, Clone, Copy)]
+struct Chunk {
+    len: u64,
+    src_pa: Option<u64>,
+    dst_pa: Option<u64>,
+}
+
+/// The job currently being split and translated.
+#[derive(Debug)]
+struct Active {
+    job: u64,
+    t: Transfer1D,
+    /// Bytes of `t` already emitted as translated chunks.
+    done: u64,
+    chunk: Option<Chunk>,
+}
+
+/// An in-flight page-table walk (one at a time — the walker is a single
+/// state machine, like the hardware it models).
+#[derive(Debug)]
+struct Walk {
+    /// Full VA being translated (page base + offset).
+    va: u64,
+    /// Translating the destination side (else the source).
+    for_dst: bool,
+    level: u32,
+    /// Physical base of the node being read at `level`.
+    node: u64,
+    /// The PTE read request for `level` is in flight.
+    issued: bool,
+    /// A bus error corrupted a PTE beat; treat as a fault.
+    error: bool,
+    /// Accumulates PTE bytes across beats (narrow ports split the
+    /// 8-byte read into several beats).
+    buf: Vec<u8>,
+}
+
+/// Address-translation mid-end (see the module docs).
+pub struct Mmu {
+    cfg: MmuCfg,
+    tlb: Iotlb,
+    inq: Fifo<NdJob>,
+    out: Fifo<NdJob>,
+    active: Option<Active>,
+    walk: Option<Walk>,
+    /// `(job, faulting VA)` pairs for the engine to drain.
+    faults: Vec<(u64, u64)>,
+    /// Jobs that faulted: late expansions are swallowed.
+    faulted: HashSet<u64>,
+    /// Beat-arrival hint while stalled mid-walk.
+    wake: Option<Cycle>,
+    probe: Probe,
+    /// PTE fetch beats consumed (lifetime counter).
+    walk_beats: u64,
+}
+
+impl Mmu {
+    /// Build an MMU with an empty TLB of the configured geometry.
+    pub fn new(cfg: MmuCfg) -> Self {
+        assert!(cfg.levels >= 1, "walker needs at least one level");
+        Self {
+            tlb: Iotlb::new(cfg.iotlb),
+            cfg,
+            inq: Fifo::new(2),
+            out: Fifo::new(2),
+            active: None,
+            walk: None,
+            faults: Vec::new(),
+            faulted: HashSet::new(),
+            wake: None,
+            probe: Probe::none(),
+            walk_beats: 0,
+        }
+    }
+
+    /// The translation cache (hit/miss stats, probing).
+    pub fn tlb(&self) -> &Iotlb {
+        &self.tlb
+    }
+
+    /// Drop every cached translation (e.g. after remapping pages).
+    pub fn flush_tlb(&mut self) {
+        self.tlb.flush();
+    }
+
+    /// PTE fetch beats consumed over the MMU's lifetime.
+    pub fn walk_beats(&self) -> u64 {
+        self.walk_beats
+    }
+
+    fn page_size(&self) -> u64 {
+        1 << self.cfg.iotlb.page_bits
+    }
+
+    /// Consume one PTE beat if ours is at the endpoint head; returns the
+    /// completed PTE once the last beat lands.
+    fn drain_pte_beat(&mut self, now: Cycle, mems: &mut [Endpoint]) -> Option<u64> {
+        if !self.walk.as_ref().is_some_and(|w| w.issued) {
+            return None;
+        }
+        let ep = &mut mems[self.cfg.pt_port];
+        if ep.read_beat_owner(now) != Some(self.cfg.owner) {
+            return None;
+        }
+        let beat = ep.take_read_beat(now).expect("owner-checked beat");
+        self.walk_beats += 1;
+        self.probe.emit(TelemetryEvent::PtwBeat {
+            port: self.cfg.pt_port,
+            bytes: beat.data.len() as u64,
+            at: now,
+        });
+        let w = self.walk.as_mut().expect("walk checked above");
+        w.buf.extend_from_slice(&beat.data);
+        w.error |= beat.error;
+        if !beat.last {
+            return None;
+        }
+        debug_assert_eq!(w.buf.len(), 8, "PTE reads are exactly 8 bytes");
+        let mut raw = [0u8; 8];
+        raw.copy_from_slice(&w.buf[..8]);
+        w.buf.clear();
+        w.issued = false;
+        if w.error {
+            // A bus error on the walk path is indistinguishable from an
+            // invalid PTE to the translation machinery.
+            Some(0)
+        } else {
+            Some(u64::from_le_bytes(raw))
+        }
+    }
+
+    fn advance_walk(&mut self, pte: u64) {
+        let (va, for_dst, level) = {
+            let w = self.walk.as_ref().expect("pte without walk");
+            (w.va, w.for_dst, w.level)
+        };
+        if pte & PTE_VALID == 0 {
+            // Translation fault: abandon the job, remember the VA.
+            self.walk = None;
+            if let Some(a) = self.active.take() {
+                self.faulted.insert(a.job);
+                self.faults.push((a.job, va));
+            }
+        } else if level + 1 == self.cfg.levels {
+            let base = pte & !PTE_VALID;
+            self.tlb.insert(va, base);
+            // Deliver the PA straight to the waiting chunk — the miss
+            // was already counted, so no second lookup (keeps
+            // hits + misses == translations exact).
+            let pa = base + (va & (self.page_size() - 1));
+            self.walk = None;
+            if let Some(a) = self.active.as_mut() {
+                if let Some(c) = a.chunk.as_mut() {
+                    if for_dst {
+                        c.dst_pa = Some(pa);
+                    } else {
+                        c.src_pa = Some(pa);
+                    }
+                }
+            }
+        } else {
+            let w = self.walk.as_mut().expect("walk checked above");
+            w.level += 1;
+            w.node = pte & !PTE_VALID;
+        }
+    }
+
+    /// Issue the pending level's PTE read (retried on endpoint
+    /// backpressure).
+    fn issue_pte_read(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        if !self.walk.as_ref().is_some_and(|w| !w.issued) {
+            return;
+        }
+        let (va, node, level) = {
+            let w = self.walk.as_ref().expect("checked above");
+            (w.va, w.node, w.level)
+        };
+        let shift = self.cfg.iotlb.page_bits + IDX_BITS * (self.cfg.levels - 1 - level);
+        let idx = (va >> shift) & (NODE_ENTRIES - 1);
+        if mems[self.cfg.pt_port].try_read_req(now, node + idx * 8, 8, self.cfg.owner) {
+            self.walk.as_mut().expect("checked above").issued = true;
+        }
+    }
+
+    /// Carve the next page-bounded chunk of the active job.
+    fn carve_chunk(&mut self) {
+        let psize = self.page_size();
+        let Some(a) = self.active.as_mut() else { return };
+        if a.chunk.is_some() {
+            return;
+        }
+        if a.t.len == 0 {
+            // Nothing to translate: pass the empty transfer through.
+            a.chunk = Some(Chunk { len: 0, src_pa: Some(a.t.src), dst_pa: Some(a.t.dst) });
+            return;
+        }
+        let remaining = a.t.len - a.done;
+        let dst_va = a.t.dst + a.done;
+        let mut len = remaining.min(psize - (dst_va % psize));
+        let src_pa = if a.t.src_protocol == ProtocolKind::Init {
+            // Init fills have no real source; leave the address as-is.
+            Some(a.t.src)
+        } else {
+            let src_va = a.t.src + a.done;
+            len = len.min(psize - (src_va % psize));
+            None
+        };
+        a.chunk = Some(Chunk { len, src_pa, dst_pa: None });
+    }
+
+    /// Look up the untranslated sides of the pending chunk; a miss
+    /// starts a walk and stalls this transfer (one walk at a time).
+    fn translate_chunk(&mut self, now: Cycle) {
+        if self.walk.is_some() {
+            return;
+        }
+        let mut start_walk: Option<(u64, bool)> = None;
+        if let Some(a) = self.active.as_mut() {
+            let job = a.job;
+            if let Some(c) = a.chunk.as_mut() {
+                if c.src_pa.is_none() {
+                    let va = a.t.src + a.done;
+                    match self.tlb.lookup(va) {
+                        Some(pa) => {
+                            self.probe.emit(TelemetryEvent::TlbHit { job, at: now });
+                            c.src_pa = Some(pa);
+                        }
+                        None => {
+                            self.probe.emit(TelemetryEvent::TlbMiss { job, at: now });
+                            start_walk = Some((va, false));
+                        }
+                    }
+                }
+                if start_walk.is_none() && c.dst_pa.is_none() {
+                    let va = a.t.dst + a.done;
+                    match self.tlb.lookup(va) {
+                        Some(pa) => {
+                            self.probe.emit(TelemetryEvent::TlbHit { job, at: now });
+                            c.dst_pa = Some(pa);
+                        }
+                        None => {
+                            self.probe.emit(TelemetryEvent::TlbMiss { job, at: now });
+                            start_walk = Some((va, true));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some((va, for_dst)) = start_walk {
+            self.walk = Some(Walk {
+                va,
+                for_dst,
+                level: 0,
+                node: self.cfg.root,
+                issued: false,
+                error: false,
+                buf: Vec::with_capacity(8),
+            });
+        }
+    }
+
+    /// Emit a fully translated chunk downstream (≤ 1 per cycle).
+    fn emit_chunk(&mut self, now: Cycle) {
+        if !self.out.can_push() {
+            return;
+        }
+        let mut finished = false;
+        if let Some(a) = self.active.as_mut() {
+            if let Some(c) = a.chunk {
+                if let (Some(src), Some(dst)) = (c.src_pa, c.dst_pa) {
+                    let mut t = a.t;
+                    t.src = src;
+                    t.dst = dst;
+                    t.len = c.len;
+                    self.out.push(now, NdJob::new(a.job, NdTransfer::d1(t)));
+                    a.done += c.len;
+                    a.chunk = None;
+                    finished = a.done >= a.t.len;
+                }
+            }
+        }
+        if finished {
+            self.active = None;
+        }
+    }
+}
+
+impl MidEnd for Mmu {
+    fn name(&self) -> &'static str {
+        "mmu"
+    }
+
+    fn can_accept(&self) -> bool {
+        self.inq.can_push()
+    }
+
+    fn accept(&mut self, now: Cycle, j: NdJob) -> bool {
+        // Late expansions of a faulted job are swallowed (their record
+        // was already emitted with the faulting VA).
+        if self.faulted.contains(&j.job) {
+            return true;
+        }
+        if !self.inq.can_push() {
+            return false;
+        }
+        assert!(j.nd.dims.is_empty(), "the MMU translates 1D jobs — put a tensor mid-end upstream");
+        self.inq.push(now, j);
+        true
+    }
+
+    fn tick_mem(&mut self, now: Cycle, mems: &mut [Endpoint]) {
+        if let Some(pte) = self.drain_pte_beat(now, mems) {
+            self.advance_walk(pte);
+        }
+        while self.active.is_none() {
+            let Some(j) = self.inq.pop(now) else { break };
+            if self.faulted.contains(&j.job) {
+                continue;
+            }
+            self.active = Some(Active { job: j.job, t: j.nd.inner, done: 0, chunk: None });
+        }
+        self.carve_chunk();
+        self.translate_chunk(now);
+        self.issue_pte_read(now, mems);
+        self.emit_chunk(now);
+        // Stalled solely on the walk's next beat (request in flight, no
+        // output the engine could drain): wake at the beat-arrival
+        // bound. The bound is conservative — beats are FIFO-ordered at
+        // one per cycle, so ours cannot arrive earlier.
+        self.wake = None;
+        if self.out.is_empty() && self.walk.as_ref().is_some_and(|w| w.issued) {
+            self.wake = mems[self.cfg.pt_port].next_read_beat_at(now);
+        }
+    }
+
+    fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.pop(now)
+    }
+
+    fn peek_port(&self, now: Cycle, port: usize) -> Option<&NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.inq.is_empty() || self.active.is_some() || !self.out.is_empty()
+    }
+
+    fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
+    }
+
+    fn take_faults(&mut self) -> Vec<(u64, u64)> {
+        std::mem::take(&mut self.faults)
+    }
+
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if !self.busy() {
+            return None;
+        }
+        match self.wake {
+            Some(w) if w > now + 1 => Some(w),
+            _ => Some(now + 1),
+        }
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}

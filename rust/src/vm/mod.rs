@@ -1,0 +1,25 @@
+//! Virtual addressing for irregular transfers (arXiv:2510.12277's
+//! IOTLB + page-table-walker shape, adapted to the iDMA mid-end chain).
+//!
+//! Three pieces:
+//! * [`Iotlb`] — a configurable set-associative translation cache with
+//!   deterministic LRU replacement ([`IotlbCfg`], [`IotlbStats`]);
+//! * [`PageTable`] — builder/oracle for a multi-level radix page table
+//!   whose nodes live in simulated memory;
+//! * [`Mmu`] — a [`crate::midend::MidEnd`] that translates job
+//!   addresses ahead of back-end legalization, walking the table as
+//!   real timed memory traffic on a TLB miss ([`MmuCfg`]).
+//!
+//! Translation faults surface as
+//! [`crate::telemetry::TransferStatus::PageFault`] and are retryable
+//! through the [`crate::resilience::Supervisor`]'s fault handler.
+//! [`crate::systems::Cheshire::virtual_system`] wires a ready-made
+//! instance.
+
+pub mod iotlb;
+pub mod mmu;
+pub mod page_table;
+
+pub use iotlb::{Iotlb, IotlbCfg, IotlbStats};
+pub use mmu::{Mmu, MmuCfg, PTW_OWNER};
+pub use page_table::{PageTable, IDX_BITS, NODE_ENTRIES, NODE_SIZE, PTE_VALID};

@@ -1,0 +1,196 @@
+//! Multi-level radix page table living in simulated memory.
+//!
+//! [`PageTable`] is the *builder/oracle* side of virtual addressing: it
+//! writes page-table nodes into a [`SparseMemory`] image (so the
+//! [`crate::vm::Mmu`]'s walker fetches them as real timed traffic) and
+//! offers a software [`PageTable::translate`] oracle for tests.
+//!
+//! Layout (RISC-V-flavoured radix tree):
+//! * nodes are 4 KiB, holding [`NODE_ENTRIES`] little-endian 8-byte
+//!   PTEs;
+//! * each level consumes [`IDX_BITS`] VPN bits, most-significant level
+//!   first; the level-0 index takes the VPN's top bits, so a `levels`-
+//!   deep table with `page_bits`-sized pages covers
+//!   `page_bits + levels * 9` bits of VA space;
+//! * PTE bit 0 is the valid bit; the remaining bits are the (aligned)
+//!   physical base of the next node, or of the mapped page at the leaf
+//!   level. An all-zero PTE — the [`SparseMemory`] default — is simply
+//!   an unmapped entry, so an empty image is an empty address space.
+//!
+//! Intermediate nodes come from a bump allocator starting right after
+//! the root node; callers must keep data pages clear of that region.
+
+use crate::mem::SparseMemory;
+
+/// PTE valid bit (bit 0).
+pub const PTE_VALID: u64 = 1;
+/// PTEs per node (4 KiB / 8 B).
+pub const NODE_ENTRIES: u64 = 512;
+/// VPN bits consumed per level (`log2(NODE_ENTRIES)`).
+pub const IDX_BITS: u32 = 9;
+/// Node size in bytes.
+pub const NODE_SIZE: u64 = NODE_ENTRIES * 8;
+
+/// Builder and software oracle for a radix page table in simulated
+/// memory. The walker side ([`crate::vm::Mmu`]) only needs `root`,
+/// `levels` and `page_bits`; this struct additionally tracks the node
+/// bump allocator so [`PageTable::map`] can grow the tree on demand.
+#[derive(Debug, Clone)]
+pub struct PageTable {
+    root: u64,
+    page_bits: u32,
+    levels: u32,
+    next_node: u64,
+}
+
+impl PageTable {
+    /// A table rooted at `root` (must be [`NODE_SIZE`]-aligned), with
+    /// `levels` levels over `page_bits`-sized pages. Intermediate nodes
+    /// are bump-allocated upward from `root + NODE_SIZE`.
+    pub fn new(root: u64, page_bits: u32, levels: u32) -> Self {
+        assert!(levels >= 1, "page table needs at least one level");
+        assert_eq!(root % NODE_SIZE, 0, "root must be node-aligned");
+        assert!(page_bits >= 3, "pages must hold at least one PTE-sized word");
+        Self { root, page_bits, levels, next_node: root + NODE_SIZE }
+    }
+
+    /// Physical address of the root node.
+    pub fn root(&self) -> u64 {
+        self.root
+    }
+
+    /// Walk depth.
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+
+    /// Page size exponent.
+    pub fn page_bits(&self) -> u32 {
+        self.page_bits
+    }
+
+    /// Page size in bytes.
+    pub fn page_size(&self) -> u64 {
+        1 << self.page_bits
+    }
+
+    /// VA bits this table can map (`page_bits + levels * IDX_BITS`).
+    pub fn va_bits(&self) -> u32 {
+        self.page_bits + self.levels * IDX_BITS
+    }
+
+    /// Node index used at `level` (0 = root) for `va`.
+    pub fn index(&self, va: u64, level: u32) -> u64 {
+        debug_assert!(level < self.levels);
+        let shift = self.page_bits + IDX_BITS * (self.levels - 1 - level);
+        (va >> shift) & (NODE_ENTRIES - 1)
+    }
+
+    /// Map the page containing `va` to the physical page at `pa` (both
+    /// page-aligned), allocating intermediate nodes as needed. Remapping
+    /// an already-mapped page overwrites the leaf PTE.
+    pub fn map(&mut self, mem: &mut SparseMemory, va: u64, pa: u64) {
+        let psize = self.page_size();
+        assert_eq!(va % psize, 0, "va must be page-aligned");
+        assert_eq!(pa % psize, 0, "pa must be page-aligned");
+        assert!(va >> self.va_bits() == 0, "va outside the table's reach");
+        let mut node = self.root;
+        for level in 0..self.levels - 1 {
+            let at = node + self.index(va, level) * 8;
+            let pte = mem.read_u64(at);
+            node = if pte & PTE_VALID != 0 {
+                pte & !PTE_VALID
+            } else {
+                let n = self.next_node;
+                self.next_node += NODE_SIZE;
+                mem.write_u64(at, n | PTE_VALID);
+                n
+            };
+        }
+        mem.write_u64(node + self.index(va, self.levels - 1) * 8, pa | PTE_VALID);
+    }
+
+    /// Invalidate the leaf PTE of `va`'s page (no-op when an
+    /// intermediate level is already unmapped).
+    pub fn unmap(&mut self, mem: &mut SparseMemory, va: u64) {
+        let mut node = self.root;
+        for level in 0..self.levels - 1 {
+            let pte = mem.read_u64(node + self.index(va, level) * 8);
+            if pte & PTE_VALID == 0 {
+                return;
+            }
+            node = pte & !PTE_VALID;
+        }
+        mem.write_u64(node + self.index(va, self.levels - 1) * 8, 0);
+    }
+
+    /// Software walk: the translation the hardware walker must agree
+    /// with, or `None` when any level is unmapped.
+    pub fn translate(&self, mem: &SparseMemory, va: u64) -> Option<u64> {
+        if va >> self.va_bits() != 0 {
+            return None;
+        }
+        let mut node = self.root;
+        for level in 0..self.levels {
+            let pte = mem.read_u64(node + self.index(va, level) * 8);
+            if pte & PTE_VALID == 0 {
+                return None;
+            }
+            node = pte & !PTE_VALID;
+        }
+        Some(node + (va & (self.page_size() - 1)))
+    }
+
+    /// First physical address past the bump-allocated node region —
+    /// data placed at or above this cannot collide with table nodes
+    /// allocated so far.
+    pub fn nodes_end(&self) -> u64 {
+        self.next_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_then_translate_round_trips() {
+        let mut mem = SparseMemory::new();
+        let mut pt = PageTable::new(0x10_0000, 12, 2);
+        pt.map(&mut mem, 0x0040_3000, 0x9000_0000);
+        assert_eq!(pt.translate(&mem, 0x0040_3000), Some(0x9000_0000));
+        assert_eq!(pt.translate(&mem, 0x0040_3ABC), Some(0x9000_0ABC));
+        assert_eq!(pt.translate(&mem, 0x0040_4000), None, "next page unmapped");
+    }
+
+    #[test]
+    fn sibling_pages_share_intermediate_nodes() {
+        let mut mem = SparseMemory::new();
+        let mut pt = PageTable::new(0x10_0000, 12, 2);
+        pt.map(&mut mem, 0x1000, 0xA000);
+        let after_first = pt.nodes_end();
+        pt.map(&mut mem, 0x2000, 0xB000);
+        assert_eq!(pt.nodes_end(), after_first, "same level-0 entry reused");
+        assert_eq!(pt.translate(&mem, 0x1000), Some(0xA000));
+        assert_eq!(pt.translate(&mem, 0x2000), Some(0xB000));
+    }
+
+    #[test]
+    fn unmap_invalidates_exactly_one_page() {
+        let mut mem = SparseMemory::new();
+        let mut pt = PageTable::new(0, 12, 3);
+        pt.map(&mut mem, 0x5000, 0xC000);
+        pt.map(&mut mem, 0x6000, 0xD000);
+        pt.unmap(&mut mem, 0x5000);
+        assert_eq!(pt.translate(&mem, 0x5000), None);
+        assert_eq!(pt.translate(&mem, 0x6000), Some(0xD000));
+    }
+
+    #[test]
+    fn out_of_range_va_is_unmapped() {
+        let mem = SparseMemory::new();
+        let pt = PageTable::new(0, 12, 2);
+        assert_eq!(pt.va_bits(), 30);
+        assert_eq!(pt.translate(&mem, 1 << 30), None);
+    }
+}

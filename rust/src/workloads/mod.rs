@@ -7,4 +7,4 @@ pub mod sparse;
 
 pub use double_buffer::{overlap_cycles, DoubleBufferPhase};
 pub use mobilenet::{MobileNetSchedule, TileTransfer};
-pub use sparse::{SparseMatrix, SuiteSparseLike};
+pub use sparse::{GatherPattern, SparseMatrix, SuiteSparseLike};

@@ -4,6 +4,7 @@
 //! generator, since SpMV/SpMM behaviour is governed by size, density
 //! and row-length distribution).
 
+use crate::mem::SparseMemory;
 use crate::sim::XorShift64;
 
 /// CSR sparse matrix (f64 values, the Manticore workloads are
@@ -111,6 +112,129 @@ impl SparseMatrix {
             row_ptr.push(col_idx.len());
         }
         Self { n_rows, n_cols, row_ptr, col_idx, vals }
+    }
+}
+
+/// An element-index list driving an irregular transfer — the workload
+/// side of the [`crate::midend::ScatterGather`] mid-end, shared by the
+/// `sg_gather` bench, the `gather_vm` example and the differential
+/// tests. Element `k` of a gather reads
+/// `src + indices[k] * elem_len`; a scatter writes
+/// `dst + indices[k] * elem_len`.
+#[derive(Debug, Clone)]
+pub struct GatherPattern {
+    /// Element indices in fetch order (duplicates allowed).
+    pub indices: Vec<u64>,
+    /// Bytes per element.
+    pub elem_len: u64,
+}
+
+impl GatherPattern {
+    /// CSR-style pattern: the column indices of a
+    /// [`SparseMatrix::synthetic`] tile, i.e. the x-vector gather of an
+    /// SpMV over that matrix.
+    pub fn csr(
+        n_rows: usize,
+        n_cols: usize,
+        nnz: usize,
+        bandwidth: usize,
+        seed: u64,
+        elem_len: u64,
+    ) -> Self {
+        let m = SparseMatrix::synthetic(n_rows, n_cols, nnz, bandwidth, seed);
+        Self { indices: m.col_idx.iter().map(|&c| c as u64).collect(), elem_len }
+    }
+
+    /// Uniform-random pattern over `[0, universe)`. With `unique` the
+    /// list is a sample without replacement (`count <= universe`
+    /// required); otherwise duplicates may occur.
+    pub fn random(count: usize, universe: u64, unique: bool, seed: u64, elem_len: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let indices = if unique {
+            assert!(count as u64 <= universe, "cannot draw {count} unique from {universe}");
+            let mut seen = std::collections::HashSet::new();
+            let mut v = Vec::with_capacity(count);
+            while v.len() < count {
+                let i = rng.below(universe);
+                if seen.insert(i) {
+                    v.push(i);
+                }
+            }
+            v
+        } else {
+            (0..count).map(|_| rng.below(universe)).collect()
+        };
+        Self { indices, elem_len }
+    }
+
+    /// Number of elements.
+    pub fn count(&self) -> u64 {
+        self.indices.len() as u64
+    }
+
+    /// Total payload bytes moved by the expansion.
+    pub fn total_bytes(&self) -> u64 {
+        self.count() * self.elem_len
+    }
+
+    /// Largest index (0 for an empty list).
+    pub fn max_index(&self) -> u64 {
+        self.indices.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The list serialized as little-endian integers of `width` bytes
+    /// (4 or 8) — the exact image the mid-end fetches.
+    pub fn index_bytes(&self, width: u64) -> Vec<u8> {
+        assert!(matches!(width, 4 | 8), "index width must be 4 or 8 bytes");
+        let mut v = Vec::with_capacity(self.indices.len() * width as usize);
+        for &i in &self.indices {
+            if width == 4 {
+                assert!(i <= u32::MAX as u64, "index {i} overflows u32 storage");
+                v.extend_from_slice(&(i as u32).to_le_bytes());
+            } else {
+                v.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+        v
+    }
+
+    /// Write the serialized list at `base`.
+    pub fn write_indices(&self, mem: &mut SparseMemory, base: u64, width: u64) {
+        mem.write(base, &self.index_bytes(width));
+    }
+
+    /// Software oracle for a gather over `mem`: the dense image a
+    /// correct expansion must produce at the destination.
+    pub fn oracle_gather(&self, mem: &SparseMemory, src_base: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total_bytes() as usize);
+        for &i in &self.indices {
+            let e = mem.read_vec(src_base + i * self.elem_len, self.elem_len as usize);
+            out.extend_from_slice(&e);
+        }
+        out
+    }
+
+    /// Software oracle for a scatter: the final `span`-byte destination
+    /// image after writing each dense source element `k` (read from the
+    /// pre-run `mem`) to `dst_base + indices[k] * elem_len`, applied in
+    /// `k` order. Only well-defined for duplicate-free index lists —
+    /// with duplicates the hardware's last writer depends on beat
+    /// interleaving.
+    pub fn oracle_scatter(
+        &self,
+        mem: &SparseMemory,
+        src_base: u64,
+        dst_base: u64,
+        span: usize,
+    ) -> Vec<u8> {
+        let mut out = mem.read_vec(dst_base, span);
+        for (k, &i) in self.indices.iter().enumerate() {
+            let elem = mem.read_vec(src_base + k as u64 * self.elem_len, self.elem_len as usize);
+            let off = (i * self.elem_len) as usize;
+            assert!(off + elem.len() <= span, "scatter index {i} outside the {span}-byte span");
+            out[off..off + elem.len()].copy_from_slice(&elem);
+        }
+        out
     }
 }
 
@@ -234,6 +358,66 @@ mod tests {
                 assert!((y[r * n_rhs + j] - yc[r]).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn gather_pattern_round_trips_index_bytes() {
+        let p = GatherPattern::random(37, 500, false, 0x6A7, 16);
+        assert_eq!(p.count(), 37);
+        assert_eq!(p.total_bytes(), 37 * 16);
+        for width in [4u64, 8] {
+            let bytes = p.index_bytes(width);
+            assert_eq!(bytes.len() as u64, 37 * width);
+            for (k, &i) in p.indices.iter().enumerate() {
+                let o = k * width as usize;
+                let got = if width == 4 {
+                    u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()) as u64
+                } else {
+                    u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap())
+                };
+                assert_eq!(got, i);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_pattern_unique_has_no_duplicates() {
+        let p = GatherPattern::random(64, 64, true, 3, 8);
+        let mut seen = std::collections::HashSet::new();
+        assert!(p.indices.iter().all(|&i| seen.insert(i)));
+        assert_eq!(p.max_index(), 63, "sampling 64 of 64 covers the universe");
+    }
+
+    #[test]
+    fn gather_oracle_resolves_indices() {
+        let mut mem = SparseMemory::new();
+        let src = 0x1000u64;
+        for i in 0..16u64 {
+            mem.write(src + i * 4, &[(i as u8); 4]);
+        }
+        let p = GatherPattern { indices: vec![3, 0, 3, 15], elem_len: 4 };
+        let got = p.oracle_gather(&mem, src);
+        assert_eq!(got, vec![3, 3, 3, 3, 0, 0, 0, 0, 3, 3, 3, 3, 15, 15, 15, 15]);
+    }
+
+    #[test]
+    fn scatter_oracle_places_elements() {
+        let mut mem = SparseMemory::new();
+        let src = 0x1000u64;
+        let dst = 0x2000u64;
+        mem.write(src, &[1, 1, 2, 2]);
+        mem.write(dst, &[9; 8]);
+        let p = GatherPattern { indices: vec![2, 0], elem_len: 2 };
+        let got = p.oracle_scatter(&mem, src, dst, 8);
+        assert_eq!(got, vec![2, 2, 9, 9, 1, 1, 9, 9]);
+    }
+
+    #[test]
+    fn csr_pattern_matches_matrix_columns() {
+        let p = GatherPattern::csr(50, 40, 300, 30, 9, 8);
+        let m = SparseMatrix::synthetic(50, 40, 300, 30, 9);
+        assert_eq!(p.count() as usize, m.nnz());
+        assert!(p.max_index() < 40);
     }
 
     #[test]

@@ -1,0 +1,335 @@
+//! Irregular-transfer subsystem integration tests: scatter/gather
+//! expansion differentially tested against a software oracle (event-
+//! driven and exact per-cycle drivers), IOTLB/PTW timing and counter
+//! conservation, page-fault surfacing, supervised demand paging, and
+//! parameterized IOTLB property sweeps.
+
+use idma::mem::SparseMemory;
+use idma::midend::{NdJob, ScatterGather, SgConfig, SgMode};
+use idma::protocol::ProtocolKind;
+use idma::resilience::{RetryPolicy, Supervisor};
+use idma::sim::sweep::sweep;
+use idma::sim::XorShift64;
+use idma::system::IdmaSystem;
+use idma::systems::cheshire::Cheshire;
+use idma::telemetry::{shared, Recorder, RunSummary};
+use idma::transfer::{NdTransfer, Transfer1D};
+use idma::vm::{Iotlb, IotlbCfg, Mmu};
+use idma::workloads::GatherPattern;
+
+/// Virtual layout: VAs inside the 30-bit space of
+/// [`Cheshire::virtual_system`], data PAs above the page-table nodes,
+/// the (physically addressed) index list in between.
+const SRC_VA: u64 = 0x0010_0000;
+const DST_VA: u64 = 0x0800_0000;
+const SRC_PA: u64 = 0x8000_0000;
+const DST_PA: u64 = 0x9000_0000;
+const IDX_PA: u64 = 0x6000_0000;
+const PAGE: u64 = 4096;
+
+/// Build a virtual system with `src_span` random source bytes mapped at
+/// `SRC_VA` and `dst_span` bytes of destination mapped at `DST_VA`.
+fn vm_setup(src_span: u64, dst_span: u64, seed: u64) -> (IdmaSystem, Vec<u8>) {
+    let (mut sys, mut pt) = Cheshire::default().virtual_system();
+    let mut src = vec![0u8; src_span as usize];
+    XorShift64::new(seed).fill(&mut src);
+    sys.mems[0].data.write(SRC_PA, &src);
+    for off in (0..src_span.div_ceil(PAGE) * PAGE).step_by(PAGE as usize) {
+        pt.map(&mut sys.mems[0].data, SRC_VA + off, SRC_PA + off);
+    }
+    for off in (0..dst_span.div_ceil(PAGE) * PAGE).step_by(PAGE as usize) {
+        pt.map(&mut sys.mems[0].data, DST_VA + off, DST_PA + off);
+    }
+    (sys, src)
+}
+
+/// Program the scatter/gather stage for `job` and submit the base
+/// transfer (element length = `p.elem_len`).
+fn program_and_submit(sys: &mut IdmaSystem, p: &GatherPattern, width: u64, mode: SgMode, job: u64) {
+    p.write_indices(&mut sys.mems[0].data, IDX_PA, width);
+    let sg = sys.engine.mids[0]
+        .as_any_mut()
+        .expect("scatter_gather is programmable")
+        .downcast_mut::<ScatterGather>()
+        .expect("mid 0 is the scatter/gather stage");
+    sg.program(
+        job,
+        SgConfig { index_base: IDX_PA, index_count: p.count(), index_width: width, mode },
+    );
+    let t = Transfer1D::copy(0, SRC_VA, DST_VA, p.elem_len, ProtocolKind::Axi4);
+    let j = NdJob::new(job, NdTransfer::d1(t));
+    while !sys.submit(j.clone()) {
+        sys.step();
+    }
+}
+
+/// Shared access to the MMU stage for stats.
+fn mmu_of(sys: &mut IdmaSystem) -> &mut Mmu {
+    sys.engine.mids[1]
+        .as_any_mut()
+        .expect("mmu is programmable")
+        .downcast_mut::<Mmu>()
+        .expect("mid 1 is the MMU")
+}
+
+#[test]
+fn gather_matches_oracle_event_and_exact() {
+    for (seed, width) in [(0x11u64, 4u64), (0x22, 8), (0x33, 4)] {
+        let mut p = GatherPattern::random(97, 256, false, seed, 32);
+        // Force duplicate and overlapping indices into the list.
+        let first = p.indices[0];
+        p.indices.push(first);
+        p.indices.push(first);
+        let src_span = (p.max_index() + 1) * p.elem_len;
+        let want = {
+            let mut m = SparseMemory::new();
+            let mut src = vec![0u8; src_span as usize];
+            XorShift64::new(seed ^ 0xDA7A).fill(&mut src);
+            m.write(SRC_PA, &src);
+            p.oracle_gather(&m, SRC_PA)
+        };
+
+        let (mut ev, _) = vm_setup(src_span, p.total_bytes(), seed ^ 0xDA7A);
+        program_and_submit(&mut ev, &p, width, SgMode::Gather, 1);
+        let ev_end = ev.run_until_idle();
+
+        let (mut ex, _) = vm_setup(src_span, p.total_bytes(), seed ^ 0xDA7A);
+        program_and_submit(&mut ex, &p, width, SgMode::Gather, 1);
+        let ex_end = ex.run_until_idle_exact();
+
+        let got_ev = ev.mems[0].data.read_vec(DST_PA, p.total_bytes() as usize);
+        let got_ex = ex.mems[0].data.read_vec(DST_PA, p.total_bytes() as usize);
+        assert_eq!(got_ev, want, "event-driven gather vs oracle (seed {seed:#x})");
+        assert_eq!(got_ex, want, "exact per-cycle gather vs oracle (seed {seed:#x})");
+        assert_eq!(ev_end, ex_end, "cycle-identical drivers (seed {seed:#x})");
+        assert!(ev.take_done().iter().all(|r| r.ok()));
+        assert!(ex.take_done().iter().all(|r| r.ok()));
+    }
+}
+
+#[test]
+fn scatter_matches_oracle() {
+    // Unique indices only: with duplicates the hardware's last writer
+    // depends on beat interleaving, which no oracle should predict.
+    let p = GatherPattern::random(64, 128, true, 0x5C, 32);
+    let src_span = p.total_bytes(); // dense source
+    let dst_span = (p.max_index() + 1) * p.elem_len;
+    let want = {
+        let mut m = SparseMemory::new();
+        let mut src = vec![0u8; src_span as usize];
+        XorShift64::new(0xABCD).fill(&mut src);
+        m.write(SRC_PA, &src);
+        p.oracle_scatter(&m, SRC_PA, DST_PA, dst_span as usize)
+    };
+    for exact in [false, true] {
+        let (mut sys, _) = vm_setup(src_span, dst_span, 0xABCD);
+        program_and_submit(&mut sys, &p, 8, SgMode::Scatter, 1);
+        if exact {
+            sys.run_until_idle_exact();
+        } else {
+            sys.run_until_idle();
+        }
+        let got = sys.mems[0].data.read_vec(DST_PA, dst_span as usize);
+        assert_eq!(got, want, "scatter vs oracle (exact={exact})");
+        assert!(sys.take_done().iter().all(|r| r.ok()));
+    }
+}
+
+/// One gather run over a working set that fits the 16-entry IOTLB.
+fn small_gather(sys: &mut IdmaSystem, p: &GatherPattern, job: u64) -> u64 {
+    program_and_submit(sys, p, 8, SgMode::Gather, job);
+    let start = sys.now();
+    sys.run_until_idle() - start
+}
+
+#[test]
+fn cold_tlb_run_strictly_slower_than_warm() {
+    let p = GatherPattern::random(128, 256, false, 0xC01D, 64);
+    let src_span = (p.max_index() + 1) * p.elem_len;
+    let (mut sys, _) = vm_setup(src_span, p.total_bytes(), 0xC01D);
+    let rec = shared(Recorder::new());
+    sys.attach_sink(rec.clone());
+
+    let cold = small_gather(&mut sys, &p, 1);
+    let s1: RunSummary = rec.borrow().summary();
+    assert!(s1.tlb_misses > 0, "cold TLB must miss");
+
+    let warm = small_gather(&mut sys, &p, 2);
+    let s2: RunSummary = rec.borrow().summary();
+    assert!(cold > warm, "cold {cold} cycles must exceed warm {warm}");
+    assert!(s2.tlb_hits > s1.tlb_hits, "warm run must hit");
+    assert_eq!(s2.tlb_misses, s1.tlb_misses, "resident working set: no new misses when warm");
+}
+
+#[test]
+fn tlb_counters_conserved_between_recorder_and_mmu() {
+    let p = GatherPattern::random(96, 512, false, 0xC0, 64);
+    let src_span = (p.max_index() + 1) * p.elem_len;
+    let (mut sys, _) = vm_setup(src_span, p.total_bytes(), 0xC0);
+    let rec = shared(Recorder::new());
+    sys.attach_sink(rec.clone());
+    program_and_submit(&mut sys, &p, 4, SgMode::Gather, 1);
+    sys.run_until_idle();
+
+    let s = rec.borrow().summary();
+    let stats = mmu_of(&mut sys).tlb().stats();
+    assert_eq!(
+        s.tlb_hits + s.tlb_misses,
+        stats.translations(),
+        "every lookup is exactly one telemetry hit or miss"
+    );
+    assert_eq!(s.tlb_hits, stats.hits);
+    assert_eq!(s.tlb_misses, stats.misses);
+    assert!(s.ptw_beats > 0, "misses must produce walker traffic");
+    assert_eq!(s.ptw_beats, mmu_of(&mut sys).walk_beats());
+    assert_eq!(s.page_faults, 0);
+}
+
+#[test]
+fn page_fault_reports_faulting_va() {
+    // Source mapped, destination not: the first destination lookup
+    // walks into an invalid PTE and the job completes as PageFault
+    // carrying the destination VA.
+    let bytes = 2 * PAGE;
+    let (mut sys, _) = {
+        let (mut sys, mut pt) = Cheshire::default().virtual_system();
+        let mut src = vec![0u8; bytes as usize];
+        XorShift64::new(9).fill(&mut src);
+        sys.mems[0].data.write(SRC_PA, &src);
+        for off in (0..bytes).step_by(PAGE as usize) {
+            pt.map(&mut sys.mems[0].data, SRC_VA + off, SRC_PA + off);
+        }
+        (sys, src)
+    };
+    let rec = shared(Recorder::new());
+    sys.attach_sink(rec.clone());
+    let t = Transfer1D::copy(0, SRC_VA, DST_VA, bytes, ProtocolKind::Axi4);
+    let j = NdJob::new(1, NdTransfer::d1(t));
+    assert!(sys.submit(j));
+    sys.run_until_idle();
+    let done = sys.take_done();
+    assert_eq!(done.len(), 1);
+    let r = &done[0];
+    assert!(!r.ok());
+    assert!(r.aborted(), "a faulted job counts as cut short");
+    assert!(!r.timed_out());
+    assert_eq!(r.page_fault(), Some(DST_VA), "record carries the faulting VA");
+    assert_eq!(r.errors(), 0, "a translation fault is not a bus error");
+    let s = rec.borrow().summary();
+    assert_eq!(s.page_faults, 1);
+    assert_eq!(s.aborted, 1);
+}
+
+#[test]
+fn supervisor_maps_page_and_replays() {
+    let bytes = 2 * PAGE;
+    let (mut sys, mut pt) = Cheshire::default().virtual_system();
+    let mut src = vec![0u8; bytes as usize];
+    XorShift64::new(0xFEED).fill(&mut src);
+    sys.mems[0].data.write(SRC_PA, &src);
+    for off in (0..bytes).step_by(PAGE as usize) {
+        pt.map(&mut sys.mems[0].data, SRC_VA + off, SRC_PA + off);
+    }
+    // Destination pages unmapped: demand-paged in by the fault handler.
+    let rec = shared(Recorder::new());
+    let mut sup = Supervisor::new(sys, RetryPolicy { max_attempts: 8, ..Default::default() })
+        .with_fault_handler(move |va, sys| {
+            let page = va & !(PAGE - 1);
+            if !(DST_VA..DST_VA + bytes).contains(&page) {
+                return false;
+            }
+            pt.map(&mut sys.mems[0].data, page, DST_PA + (page - DST_VA));
+            true
+        });
+    sup.attach_sink(rec.clone());
+    let t = Transfer1D::copy(0, SRC_VA, DST_VA, bytes, ProtocolKind::Axi4);
+    let r = sup.run_job(NdJob::new(1, NdTransfer::d1(t)));
+    assert!(r.ok(), "demand paging must converge: {:?}", r.status);
+    assert!(r.retries >= 1, "each fault costs a replay round");
+    assert_eq!(sup.sys.mems[0].data.read_vec(DST_PA, bytes as usize), src);
+    let s = rec.borrow().summary();
+    assert!(s.page_faults >= 2, "one fault per unmapped destination page, got {}", s.page_faults);
+}
+
+#[test]
+fn unhandled_fault_finalizes_with_page_fault_status() {
+    let (mut sys, mut pt) = Cheshire::default().virtual_system();
+    sys.mems[0].data.write(SRC_PA, &[7u8; 64]);
+    pt.map(&mut sys.mems[0].data, SRC_VA, SRC_PA);
+    let mut sup = Supervisor::new(sys, RetryPolicy::default());
+    let t = Transfer1D::copy(0, SRC_VA, DST_VA, 64, ProtocolKind::Axi4);
+    let r = sup.run_job(NdJob::new(1, NdTransfer::d1(t)));
+    assert!(!r.ok(), "no fault handler installed");
+    assert_eq!(r.page_fault(), Some(DST_VA));
+    assert_eq!(r.retries, 0, "no handler, no replay");
+}
+
+// ---------------------------------------------------------------------
+// Parameterized IOTLB property sweeps (unit-level, host-threaded).
+// ---------------------------------------------------------------------
+
+/// Replay `trace` through a fresh TLB of geometry `cfg`, inserting on
+/// every miss (identity page mapping). Returns (hits, miss VAs).
+fn replay(cfg: IotlbCfg, trace: &[u64]) -> (u64, Vec<u64>) {
+    let mut t = Iotlb::new(cfg);
+    let mut misses = Vec::new();
+    for &va in trace {
+        if t.lookup(va).is_none() {
+            misses.push(va);
+            t.insert(va, (va >> cfg.page_bits) << cfg.page_bits);
+        }
+    }
+    (t.stats().hits, misses)
+}
+
+fn page_trace(pages: u64, len: usize, page_bits: u32, seed: u64) -> Vec<u64> {
+    let mut rng = XorShift64::new(seed);
+    (0..len).map(|_| (rng.below(pages) << page_bits) | rng.below(1 << page_bits)).collect()
+}
+
+#[test]
+fn iotlb_cold_start_is_all_misses() {
+    for (sets, ways, page_bits) in [(1, 1, 12), (4, 2, 12), (8, 4, 10), (16, 1, 14)] {
+        let cfg = IotlbCfg { sets, ways, page_bits };
+        let trace: Vec<u64> = (0..48u64).map(|vpn| vpn << page_bits).collect();
+        let (hits, misses) = replay(cfg, &trace);
+        assert_eq!(hits, 0, "first touch of each distinct page misses ({cfg:?})");
+        assert_eq!(misses.len(), 48);
+    }
+}
+
+#[test]
+fn iotlb_hits_monotone_in_associativity() {
+    // LRU stack inclusion: with sets fixed, a (sets, w+1) TLB retains a
+    // superset of a (sets, w) TLB on every access sequence, so hits are
+    // monotone nondecreasing in the way count.
+    for sets in [1usize, 2, 4, 8] {
+        for (page_bits, seed) in [(12u32, 0xAAu64), (10, 0xBB), (12, 0xCC)] {
+            let trace = page_trace(32, 400, page_bits, seed);
+            let mut prev = 0u64;
+            for ways in 1..=8usize {
+                let (hits, _) = replay(IotlbCfg { sets, ways, page_bits }, &trace);
+                assert!(
+                    hits >= prev,
+                    "hits must not drop when ways grow: sets={sets} ways={ways} \
+                     ({hits} < {prev})"
+                );
+                prev = hits;
+            }
+        }
+    }
+}
+
+#[test]
+fn iotlb_miss_sequence_deterministic_across_thread_counts() {
+    let cases: Vec<(usize, usize, u64)> =
+        (0..12usize).map(|i| ([1, 2, 4, 8][i % 4], 1 + i % 3, 0x1000 + i as u64)).collect();
+    let run = |i: usize, c: &(usize, usize, u64)| {
+        let cfg = IotlbCfg { sets: c.0, ways: c.1, page_bits: 12 };
+        let trace = page_trace(24, 300, 12, c.2 ^ i as u64);
+        replay(cfg, &trace)
+    };
+    let serial = sweep(&cases, 1, run);
+    let parallel = sweep(&cases, 8, run);
+    assert_eq!(serial, parallel, "hit counts and miss sequences are host-thread independent");
+}
