@@ -398,6 +398,12 @@ impl IdmaEngine {
         !self.jobs.is_empty() || !self.chain_idle() || self.backend.busy()
     }
 
+    /// Number of jobs currently tracked inside the engine — the
+    /// least-loaded dispatch metric of [`crate::qos::MultiChannel`].
+    pub fn in_flight_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
     /// Progress fingerprint for watchdogs.
     pub fn fingerprint(&self) -> u64 {
         self.backend.fingerprint() ^ (self.done.len() as u64) << 50

@@ -25,6 +25,7 @@ pub mod midend;
 pub mod model;
 pub mod mem;
 pub mod protocol;
+pub mod qos;
 pub mod resilience;
 pub mod runtime;
 pub mod sim;

@@ -14,10 +14,20 @@ pub struct RoundRobinArbiter {
 }
 
 impl RoundRobinArbiter {
-    /// Create an arbiter with `n` input ports.
+    /// Create an arbiter with `n` input ports and the default FIFO
+    /// depths (1-deep inputs, 2-deep output), which existing systems'
+    /// cycle counts depend on.
     pub fn new(n: usize) -> Self {
+        Self::with_depths(n, 1, 2)
+    }
+
+    /// [`RoundRobinArbiter::new`] with explicit input/output FIFO
+    /// depths, for integrations that want more slack at the fan-in
+    /// boundary. Rotation order is unaffected by the depths.
+    pub fn with_depths(n: usize, in_depth: usize, out_depth: usize) -> Self {
         assert!(n >= 1);
-        Self { inq: (0..n).map(|_| Fifo::new(1)).collect(), rr: 0, out: Fifo::new(2) }
+        assert!(in_depth >= 1 && out_depth >= 1);
+        Self { inq: (0..n).map(|_| Fifo::new(in_depth)).collect(), rr: 0, out: Fifo::new(out_depth) }
     }
 
     /// Number of input ports.
@@ -114,6 +124,36 @@ mod tests {
         for base in [0u64, 100, 200, 300] {
             let n = got.iter().filter(|&&g| g / 100 == base / 100).count();
             assert!(n >= 8, "source {base} starved: {n} grants of {}", got.len());
+        }
+    }
+
+    #[test]
+    fn rotation_order_is_pinned() {
+        // With every input saturated, grants must cycle p, p+1, p+2, …
+        // (mod n) — pinned across both the default and custom depths.
+        for (in_d, out_d) in [(1, 2), (2, 4)] {
+            let mut a = RoundRobinArbiter::with_depths(4, in_d, out_d);
+            let mut got = Vec::new();
+            let mut now = 0u64;
+            let mut next_id = [0u64, 100, 200, 300];
+            while got.len() < 12 {
+                assert!(now < 100, "arbiter stalled: {got:?}");
+                for p in 0..4 {
+                    if a.can_accept_port(p) {
+                        a.accept_port(now, p, j(next_id[p]));
+                        next_id[p] += 1;
+                    }
+                }
+                a.tick(now);
+                if let Some(o) = a.pop(now) {
+                    got.push(o.job / 100);
+                }
+                now += 1;
+            }
+            let start = got[0];
+            for (i, &s) in got.iter().enumerate() {
+                assert_eq!(s, (start + i as u64) % 4, "depths ({in_d},{out_d}) broke rotation: {got:?}");
+            }
         }
     }
 

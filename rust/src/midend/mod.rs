@@ -52,12 +52,22 @@ pub struct NdJob {
     pub job: u64,
     /// The (possibly still multi-dimensional) transfer.
     pub nd: NdTransfer,
+    /// QoS traffic class ([`crate::qos::TrafficClass::DEFAULT`] unless
+    /// tagged). Only takes effect where a [`crate::qos::QosScheduler`]
+    /// is installed, so untagged runs stay cycle-identical.
+    pub class: crate::qos::TrafficClass,
 }
 
 impl NdJob {
-    /// Wrap a transfer into a job.
+    /// Wrap a transfer into a job (default traffic class).
     pub fn new(job: u64, nd: NdTransfer) -> Self {
-        Self { job, nd }
+        Self { job, nd, class: crate::qos::TrafficClass::DEFAULT }
+    }
+
+    /// Tag the job with a QoS traffic class (builder-style).
+    pub fn with_class(mut self, class: crate::qos::TrafficClass) -> Self {
+        self.class = class;
+        self
     }
 }
 

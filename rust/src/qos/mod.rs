@@ -1,0 +1,222 @@
+//! Quality-of-service scheduling: traffic classes, weighted-fair
+//! bandwidth sharing, and chunk-level preemption in front of (and
+//! across) engines.
+//!
+//! The paper's modular split deliberately leaves inter-job arbitration
+//! as a system-integration concern — the facade's strict
+//! [`crate::midend::RoundRobinArbiter`] lets one bulk copy starve
+//! latency-critical jobs for the full length of the transfer. This
+//! module adds the missing arbitration layer:
+//!
+//! * [`TrafficClass`] / [`QosPolicy`] — jobs carry a class; each class
+//!   configures a strict priority tier, a deficit-weighted-round-robin
+//!   weight inside its tier, an optional token-bucket rate limit, and
+//!   an optional completion deadline.
+//! * [`QosScheduler`] — slices ND jobs into bounded-size chunks
+//!   (reusing the legalizer's chunking math) and dispatches them
+//!   deficit-weighted so a high-priority arrival preempts within a
+//!   bounded number of beats instead of waiting out a whole multi-MiB
+//!   transfer. Per-job completion stays in order; completions are
+//!   merged back into a single [`crate::telemetry::CompletionRecord`].
+//! * [`MultiChannel`] — N parallel engine channels over shared
+//!   endpoints with class-to-channel affinity, least-loaded dispatch,
+//!   and a shared token-bucket governor so the channels respect the
+//!   rate limits collectively.
+//!
+//! Untagged jobs carry [`TrafficClass::DEFAULT`]; systems that never
+//! install a scheduler are cycle-identical to pre-QoS behavior.
+
+mod multichannel;
+pub mod scenario;
+mod scheduler;
+
+pub use multichannel::MultiChannel;
+pub use scheduler::{ChunkCursor, QosScheduler, TokenBuckets};
+
+use crate::sim::Cycle;
+
+/// Job-ID namespace bit for scheduler-issued chunk sub-jobs. User job
+/// IDs submitted through a [`QosScheduler`] must keep bit 45 clear —
+/// the retry (bit 46), fragment (bit 47), front-end tag (bits 48..) and
+/// real-time (bit 63) namespaces already do.
+pub const QOS_CHUNK_BASE: u64 = 1 << 45;
+
+/// A traffic class tag carried by every [`crate::midend::NdJob`]. The
+/// value indexes [`QosPolicy::classes`]; it only takes effect when a
+/// [`QosScheduler`] is installed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TrafficClass(pub u8);
+
+impl TrafficClass {
+    /// The implicit class of untagged jobs (class 0).
+    pub const DEFAULT: TrafficClass = TrafficClass(0);
+
+    /// Index into [`QosPolicy::classes`].
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Token-bucket rate limit for one traffic class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RateLimit {
+    /// Sustained rate in bytes per 1024 cycles (tokens refill lazily at
+    /// this rate, with 1/1024-byte resolution so refills are exact in
+    /// integer arithmetic).
+    pub bytes_per_kcycle: u64,
+    /// Bucket capacity: how many bytes may burst at full bus speed once
+    /// the bucket has filled. A full bucket always admits one chunk
+    /// even if the chunk is larger than the capacity, so oversized
+    /// transfers cannot deadlock a class.
+    pub burst_bytes: u64,
+}
+
+/// Per-class scheduling configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassConfig {
+    /// Strict priority tier: higher values always win over lower ones
+    /// (subject only to token availability). Classes in the same tier
+    /// share bandwidth by deficit-weighted round robin.
+    pub priority: u8,
+    /// DWRR weight inside the priority tier (≥ 1). Each rotation grant
+    /// adds `weight × chunk_bytes` of deficit, so sustained bandwidth
+    /// inside a tier splits proportionally to the weights.
+    pub weight: u64,
+    /// Optional token-bucket rate limit; `None` means unlimited.
+    pub rate: Option<RateLimit>,
+    /// Optional completion deadline in cycles, measured from scheduler
+    /// admission. Jobs whose data completes intact but late retire with
+    /// [`crate::telemetry::TransferStatus::DeadlineMissed`].
+    pub deadline: Option<u64>,
+}
+
+impl Default for ClassConfig {
+    fn default() -> Self {
+        Self { priority: 0, weight: 1, rate: None, deadline: None }
+    }
+}
+
+/// The scheduling policy: the class table plus the chunking parameters
+/// shared by every class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QosPolicy {
+    /// One entry per traffic class; [`TrafficClass`] indexes this table.
+    pub classes: Vec<ClassConfig>,
+    /// Preemption granularity: ND jobs are sliced into sub-jobs of at
+    /// most this many bytes (breaking at `chunk_bytes`-aligned source
+    /// addresses, exactly like the legalizer's page rule), so a
+    /// high-priority arrival waits at most
+    /// `max_inflight_chunks × chunk_bytes` of lower-priority payload.
+    pub chunk_bytes: u64,
+    /// How many chunks may be in flight in the engine at once. Small
+    /// values bound preemption latency; 2 keeps the descriptor pipeline
+    /// busy across chunk handoffs.
+    pub max_inflight_chunks: usize,
+}
+
+impl Default for QosPolicy {
+    fn default() -> Self {
+        Self { classes: vec![ClassConfig::default()], chunk_bytes: 4096, max_inflight_chunks: 2 }
+    }
+}
+
+impl QosPolicy {
+    /// Policy over the given class table with default chunking.
+    pub fn new(classes: Vec<ClassConfig>) -> Self {
+        Self { classes, ..Default::default() }
+    }
+
+    /// Override the preemption granularity (builder-style).
+    pub fn with_chunk_bytes(mut self, chunk_bytes: u64) -> Self {
+        self.chunk_bytes = chunk_bytes;
+        self
+    }
+
+    /// Override the in-flight chunk cap (builder-style).
+    pub fn with_max_inflight(mut self, max_inflight_chunks: usize) -> Self {
+        self.max_inflight_chunks = max_inflight_chunks;
+        self
+    }
+
+    /// DWRR quantum of class `c`: one rotation grant, in bytes.
+    pub(crate) fn quantum(&self, c: usize) -> u64 {
+        self.classes[c].weight.saturating_mul(self.chunk_bytes)
+    }
+
+    /// Panic on configurations the scheduler cannot serve.
+    pub(crate) fn validate(&self) {
+        assert!(!self.classes.is_empty(), "QosPolicy needs at least one class");
+        assert!(self.classes.len() <= 256, "TrafficClass is a u8: at most 256 classes");
+        assert!(
+            self.chunk_bytes >= 1 && self.chunk_bytes <= 1 << 30,
+            "chunk_bytes {} out of range",
+            self.chunk_bytes
+        );
+        assert!(self.max_inflight_chunks >= 1, "max_inflight_chunks must be >= 1");
+        for (i, c) in self.classes.iter().enumerate() {
+            assert!(c.weight >= 1, "class {i}: weight must be >= 1");
+            if let Some(r) = c.rate {
+                assert!(r.bytes_per_kcycle >= 1, "class {i}: rate must be >= 1 byte/kcycle");
+                assert!(r.burst_bytes >= 1, "class {i}: burst must be >= 1 byte");
+            }
+        }
+    }
+
+    /// Convenience: the deadline of class `c`, if configured.
+    pub fn deadline_of(&self, class: TrafficClass) -> Option<u64> {
+        self.classes.get(class.index()).and_then(|c| c.deadline)
+    }
+}
+
+/// Projection helper shared by scheduler and governor: the first cycle
+/// `>= now` at which `tokens_k` refilled at `rate` units per cycle
+/// reaches `need_k` (both in 1/1024-byte units, where the per-cycle
+/// refill of a [`RateLimit`] is exactly `bytes_per_kcycle`).
+pub(crate) fn refill_eta(now: Cycle, tokens_k: u64, need_k: u64, rate: u64) -> Cycle {
+    if tokens_k >= need_k {
+        now
+    } else {
+        now + (need_k - tokens_k).div_ceil(rate.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_single_default_class() {
+        let p = QosPolicy::default();
+        p.validate();
+        assert_eq!(p.classes.len(), 1);
+        assert_eq!(p.classes[0], ClassConfig::default());
+        assert_eq!(TrafficClass::DEFAULT.index(), 0);
+        assert_eq!(p.deadline_of(TrafficClass::DEFAULT), None);
+    }
+
+    #[test]
+    fn builder_overrides_chunking() {
+        let p = QosPolicy::new(vec![ClassConfig::default(); 2])
+            .with_chunk_bytes(1024)
+            .with_max_inflight(3);
+        p.validate();
+        assert_eq!(p.chunk_bytes, 1024);
+        assert_eq!(p.max_inflight_chunks, 3);
+        assert_eq!(p.quantum(0), 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight")]
+    fn zero_weight_rejected() {
+        QosPolicy::new(vec![ClassConfig { weight: 0, ..Default::default() }]).validate();
+    }
+
+    #[test]
+    fn refill_eta_is_exact() {
+        // 100 tokens short at 50 per cycle → 2 cycles.
+        assert_eq!(refill_eta(10, 400, 500, 50), 12);
+        assert_eq!(refill_eta(10, 500, 500, 50), 10);
+        // Rounds up.
+        assert_eq!(refill_eta(0, 0, 101, 100), 2);
+    }
+}

@@ -1,0 +1,339 @@
+//! N parallel engine channels over shared endpoints, each fronted by
+//! its own [`QosScheduler`], with class-to-channel affinity,
+//! least-loaded dispatch, and a shared token-bucket governor so the
+//! channels respect the per-class rate limits *collectively*.
+
+use std::collections::HashMap;
+
+use super::{QosPolicy, QosScheduler, TokenBuckets, TrafficClass};
+use crate::engine::IdmaEngine;
+use crate::mem::Endpoint;
+use crate::midend::NdJob;
+use crate::sim::{Cycle, Scheduler, Watchdog};
+use crate::telemetry::CompletionRecord;
+
+/// Runaway guard for the idle drivers, mirroring the facade's bound.
+const RUNAWAY: u64 = 100_000_000;
+
+/// A multi-channel DMA service: each channel is a full [`IdmaEngine`]
+/// with a private [`QosScheduler`], all ticking against one shared
+/// endpoint vector (per-channel `owner` tags arbitrate at the memory,
+/// exactly like the distributed mempool engines). Jobs route to a
+/// channel by class affinity when configured, otherwise to the
+/// least-loaded channel; rate-limited classes draw from one shared
+/// [`TokenBuckets`] governor, so the aggregate bandwidth of a class
+/// stays capped no matter how many channels serve it.
+///
+/// User job IDs must be unique across all channels.
+pub struct MultiChannel {
+    /// The engine channels (index = channel id).
+    pub channels: Vec<IdmaEngine>,
+    /// Shared data endpoints, arbitrated by engine `owner` tags.
+    pub mems: Vec<Endpoint>,
+    scheds: Vec<QosScheduler>,
+    governor: TokenBuckets,
+    affinity: HashMap<u8, usize>,
+    holds: Vec<Option<NdJob>>,
+    now: Cycle,
+    ticks: u64,
+    done: Vec<CompletionRecord>,
+}
+
+impl MultiChannel {
+    /// Build the service from composed engines, shared endpoints and
+    /// one policy applied to every channel. Engines should carry
+    /// distinct `owner` tags (see
+    /// [`crate::engine::EngineBuilder::owner`]) when they share
+    /// endpoints.
+    pub fn new(channels: Vec<IdmaEngine>, mems: Vec<Endpoint>, policy: QosPolicy) -> Self {
+        assert!(!channels.is_empty(), "MultiChannel needs at least one channel");
+        let governor = TokenBuckets::from_policy(&policy);
+        let scheds = channels
+            .iter()
+            .map(|e| {
+                let mut s = QosScheduler::new(policy.clone());
+                s.set_bus_bytes(e.backend.cfg.dw_bytes);
+                s
+            })
+            .collect();
+        let holds = channels.iter().map(|_| None).collect();
+        Self {
+            channels,
+            mems,
+            scheds,
+            governor,
+            affinity: HashMap::new(),
+            holds,
+            now: 0,
+            ticks: 0,
+            done: Vec::new(),
+        }
+    }
+
+    /// Pin a traffic class to a channel. Unpinned classes balance by
+    /// load.
+    pub fn set_affinity(&mut self, class: TrafficClass, channel: usize) {
+        assert!(channel < self.channels.len(), "no channel {channel}");
+        self.affinity.insert(class.0, channel);
+    }
+
+    /// Current clock.
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    /// Executed ticks (the event-driven drivers skip idle cycles).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Submit a job, returning the channel it was routed to: the
+    /// class's pinned channel if an affinity is set, otherwise the
+    /// least-loaded channel (in-flight engine jobs plus scheduler
+    /// backlog, ties to the lowest index).
+    pub fn submit(&mut self, j: NdJob) -> usize {
+        let ch = match self.affinity.get(&j.class.0) {
+            Some(&ch) => ch,
+            None => (0..self.channels.len())
+                .min_by_key(|&i| self.channels[i].in_flight_jobs() + self.scheds[i].backlog())
+                .expect("at least one channel"),
+        };
+        self.scheds[ch].submit(self.now, j);
+        ch
+    }
+
+    /// Any channel still holding work?
+    pub fn busy(&self) -> bool {
+        self.holds.iter().any(Option::is_some)
+            || self.scheds.iter().any(QosScheduler::busy)
+            || self.channels.iter().any(IdmaEngine::busy)
+    }
+
+    /// Drain all completion records (merged per user job).
+    pub fn take_done(&mut self) -> Vec<CompletionRecord> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// One simulated cycle across every channel: per-channel dispatch
+    /// against the shared governor (channel order fixes the credit
+    /// tiebreak deterministically), hold → engine hand-off, engine
+    /// ticks, completion fan-back through each channel's scheduler.
+    fn step_cycle(&mut self, now: Cycle) {
+        for c in 0..self.channels.len() {
+            if self.holds[c].is_none() {
+                self.holds[c] = self.scheds[c].dispatch_shared(now, &mut self.governor);
+            }
+            if let Some(j) = self.holds[c].take() {
+                if !self.channels[c].submit(now, j.clone()) {
+                    self.holds[c] = Some(j);
+                }
+            }
+        }
+        for c in 0..self.channels.len() {
+            self.channels[c].tick(now, &mut self.mems);
+            for d in self.channels[c].take_done() {
+                if let Some(r) = self.scheds[c].resolve(now, d) {
+                    self.done.push(r);
+                }
+            }
+        }
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) {
+        let now = self.now;
+        self.step_cycle(now);
+        self.ticks += 1;
+        self.now = now + 1;
+    }
+
+    /// Earliest cycle strictly after `now` at which anything could
+    /// progress (conservative, like the facade's).
+    fn next_event(&self, now: Cycle) -> Cycle {
+        if self.holds.iter().any(Option::is_some) {
+            return now + 1;
+        }
+        let mut at = Cycle::MAX;
+        for (c, e) in self.channels.iter().enumerate() {
+            if e.busy() {
+                at = at.min(e.next_event(now, &self.mems));
+            }
+            if let Some(w) = self.scheds[c].next_event_shared(now, &self.governor) {
+                at = at.min(w.max(now + 1));
+            }
+        }
+        if at == Cycle::MAX {
+            now + 1
+        } else {
+            at
+        }
+    }
+
+    /// Drive event-driven until every channel drains; returns the last
+    /// executed cycle. Cycle-identical to
+    /// [`MultiChannel::run_until_idle_exact`].
+    pub fn run_until_idle(&mut self) -> Cycle {
+        let mut sched = Scheduler::new();
+        let mut wd = Watchdog::new(100_000);
+        let start = self.now;
+        let mut last = self.now;
+        while self.busy() {
+            let now = self.now;
+            self.step_cycle(now);
+            self.ticks += 1;
+            last = now;
+            if !self.busy() {
+                self.now = now + 1;
+                break;
+            }
+            assert!(!wd.check(now, self.fingerprint()), "multi-channel deadlock at {now}");
+            sched.schedule(self.next_event(now));
+            self.now = sched.pop_after(now).expect("event wheel empty while busy");
+            assert!(self.now - start < RUNAWAY, "channels did not drain within {RUNAWAY} cycles");
+        }
+        last
+    }
+
+    /// Per-cycle reference for [`MultiChannel::run_until_idle`].
+    pub fn run_until_idle_exact(&mut self) -> Cycle {
+        let mut wd = Watchdog::new(100_000);
+        let start = self.now;
+        let mut last = self.now;
+        while self.busy() {
+            let now = self.now;
+            self.step_cycle(now);
+            self.ticks += 1;
+            last = now;
+            self.now = now + 1;
+            assert!(!wd.check(now, self.fingerprint()), "multi-channel deadlock at {now}");
+            assert!(self.now - start < RUNAWAY, "channels did not drain within {RUNAWAY} cycles");
+        }
+        last
+    }
+
+    /// Deterministic state fingerprint for watchdogs.
+    pub fn fingerprint(&self) -> u64 {
+        let mut fp = (self.done.len() as u64).rotate_left(17);
+        for (c, e) in self.channels.iter().enumerate() {
+            fp ^= e.fingerprint().rotate_left((c as u32) % 19 + 1);
+            fp ^= self.scheds[c].fingerprint().rotate_left((c as u32) % 23 + 2);
+            fp ^= (self.holds[c].is_some() as u64) << (c % 32);
+        }
+        fp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::mem::MemModel;
+    use crate::protocol::ProtocolKind;
+    use crate::qos::{ClassConfig, RateLimit};
+    use crate::transfer::{NdTransfer, Transfer1D};
+
+    const SRC: u64 = 0x8000_0000;
+    const DST: u64 = 0x9000_0000;
+
+    fn service(n: usize, policy: QosPolicy) -> MultiChannel {
+        let channels: Vec<IdmaEngine> =
+            (0..n).map(|i| EngineBuilder::new(32, 8, 4).owner(i as u32).build().unwrap()).collect();
+        let mems = vec![Endpoint::new(MemModel::sram(8))];
+        MultiChannel::new(channels, mems, policy)
+    }
+
+    fn job(id: u64, off: u64, len: u64) -> NdJob {
+        let t = Transfer1D::copy(0, SRC + off, DST + off, len, ProtocolKind::Axi4);
+        NdJob::new(id, NdTransfer::d1(t))
+    }
+
+    fn preload(mc: &mut MultiChannel, total: u64) -> Vec<u8> {
+        let mut src = vec![0u8; total as usize];
+        let mut rng = crate::sim::XorShift64::new(0xD1CE);
+        rng.fill(&mut src);
+        mc.mems[0].data.write(SRC, &src);
+        src
+    }
+
+    #[test]
+    fn two_channels_complete_and_verify() {
+        let pol = QosPolicy::new(vec![ClassConfig::default(), ClassConfig::default()]);
+        let mut mc = service(2, pol);
+        let src = preload(&mut mc, 8 * 1024);
+        mc.set_affinity(TrafficClass(1), 1);
+        for i in 0..4u64 {
+            let ch = mc.submit(job(i + 1, i * 1024, 1024));
+            assert_eq!(ch, 0, "class 0 balances onto the emptier channel 0 first");
+            let ch = mc.submit(job(100 + i, (4 + i) * 1024, 1024).with_class(TrafficClass(1)));
+            assert_eq!(ch, 1, "class 1 is pinned to channel 1");
+        }
+        mc.run_until_idle();
+        let done = mc.take_done();
+        assert_eq!(done.len(), 8);
+        assert!(done.iter().all(|r| r.ok()), "{done:?}");
+        assert_eq!(mc.mems[0].data.read_vec(DST, src.len()), src);
+        assert!(!mc.busy());
+    }
+
+    #[test]
+    fn least_loaded_dispatch_alternates_when_balanced() {
+        let mut mc = service(2, QosPolicy::default());
+        preload(&mut mc, 4 * 1024);
+        let chans: Vec<usize> = (0..4u64).map(|i| mc.submit(job(i + 1, i * 1024, 1024))).collect();
+        assert_eq!(chans, [0, 1, 0, 1], "backlog-aware routing alternates");
+        mc.run_until_idle();
+        assert_eq!(mc.take_done().len(), 4);
+    }
+
+    #[test]
+    fn shared_governor_caps_aggregate_bandwidth() {
+        // One rate-limited class served by two channels: the shared
+        // governor must cap their *combined* throughput. 8 KiB at
+        // 1 B/cycle (1024 B/kcycle) with a 1 KiB burst → ≥ ~7000 cycles,
+        // where two unlimited channels would finish in well under 2000.
+        let pol = QosPolicy::new(vec![ClassConfig {
+            rate: Some(RateLimit { bytes_per_kcycle: 1024, burst_bytes: 1024 }),
+            ..Default::default()
+        }])
+        .with_chunk_bytes(1024);
+        let mut mc = service(2, pol);
+        let src = preload(&mut mc, 8 * 1024);
+        for i in 0..8u64 {
+            mc.submit(job(i + 1, i * 1024, 1024));
+        }
+        let end = mc.run_until_idle();
+        assert_eq!(mc.take_done().len(), 8);
+        assert_eq!(mc.mems[0].data.read_vec(DST, src.len()), src);
+        assert!(end >= 6_000, "aggregate rate not governed: finished at {end}");
+    }
+
+    #[test]
+    fn event_and_exact_drivers_agree() {
+        let pol = QosPolicy::new(vec![
+            ClassConfig { weight: 2, ..Default::default() },
+            ClassConfig { priority: 1, ..Default::default() },
+        ])
+        .with_chunk_bytes(512);
+        let run = |exact: bool| {
+            let mut mc = service(2, pol.clone());
+            let src = preload(&mut mc, 6 * 1024);
+            for i in 0..4u64 {
+                mc.submit(job(i + 1, i * 1024, 1024));
+            }
+            for i in 0..8u64 {
+                mc.submit(job(50 + i, 4 * 1024 + i * 256, 256).with_class(TrafficClass(1)));
+            }
+            let last = if exact { mc.run_until_idle_exact() } else { mc.run_until_idle() };
+            let mut done = mc.take_done();
+            done.sort_by_key(|r| (r.done, r.job));
+            (last, mc.now(), done, mc.mems[0].data.read_vec(DST, src.len()), mc.ticks())
+        };
+        let ev = run(false);
+        let ex = run(true);
+        assert_eq!(ev.0, ex.0, "last executed cycle");
+        assert_eq!(ev.1, ex.1, "resting clock");
+        assert_eq!(ev.2, ex.2, "completion records");
+        assert_eq!(ev.3, ex.3, "memory image");
+        assert!(ev.4 <= ex.4, "event driver must not tick more than the oracle");
+    }
+}

@@ -1,0 +1,273 @@
+//! Canned QoS workloads shared by the fairness/isolation tests, the
+//! `qos_isolation` bench and the `qos_serving` example, so all three
+//! measure exactly the same traffic.
+
+use std::collections::HashMap;
+
+use super::TrafficClass;
+use crate::midend::NdJob;
+use crate::protocol::ProtocolKind;
+use crate::sim::Cycle;
+use crate::system::IdmaSystem;
+use crate::transfer::{NdTransfer, Transfer1D};
+
+/// Source region base used by every scenario.
+pub const SRC_BASE: u64 = 0x8000_0000;
+/// Destination region base used by every scenario.
+pub const DST_BASE: u64 = 0x9000_0000;
+
+/// Exact nearest-rank percentile over a sample set.
+pub fn percentile_exact(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+    v[rank.min(v.len()) - 1]
+}
+
+/// Saturating low-priority bulk traffic with periodic small
+/// latency-critical arrivals — the serving-under-interference workload
+/// of the acceptance criterion. The same scenario runs against a plain
+/// system (`hi_class = None`: everything rides the strict in-order
+/// engine queue) and a QoS system (`hi_class = Some(c)`: the small jobs
+/// carry a high-priority class).
+#[derive(Debug, Clone)]
+pub struct IsolationScenario {
+    /// Number of bulk copies.
+    pub bulk_jobs: u64,
+    /// Bytes per bulk copy.
+    pub bulk_len: u64,
+    /// Number of latency-critical jobs.
+    pub hi_jobs: u64,
+    /// Bytes per latency-critical job (the criterion uses 256 B).
+    pub hi_len: u64,
+    /// Cycles between latency-critical arrivals.
+    pub period: u64,
+}
+
+/// Result of one [`IsolationScenario`] run.
+#[derive(Debug, Clone)]
+pub struct IsolationOutcome {
+    /// Completion latency of each latency-critical job, measured from
+    /// its first submission attempt (so back-pressure counts).
+    pub hi_latencies: Vec<u64>,
+    /// Clock when the system drained.
+    pub end: Cycle,
+    /// Destination bytes matched the source exactly.
+    pub verified: bool,
+    /// Completions that retired with a `DeadlineMissed` status.
+    pub deadline_missed: u64,
+}
+
+impl IsolationScenario {
+    /// Full-size run (the bench default).
+    pub fn full() -> Self {
+        Self { bulk_jobs: 8, bulk_len: 64 * 1024, hi_jobs: 32, hi_len: 256, period: 2048 }
+    }
+
+    /// CI smoke-mode sizing.
+    pub fn smoke() -> Self {
+        Self { bulk_jobs: 4, bulk_len: 16 * 1024, hi_jobs: 8, hi_len: 256, period: 1024 }
+    }
+
+    /// Pick [`IsolationScenario::smoke`] when `smoke` is set.
+    pub fn sized(smoke: bool) -> Self {
+        if smoke {
+            Self::smoke()
+        } else {
+            Self::full()
+        }
+    }
+
+    /// Drive the scenario on `sys` (fresh, quiescent, with
+    /// `sys.mems[0]` as the data endpoint). Bulk jobs use IDs
+    /// `1000 + i`, latency-critical jobs use `1..=hi_jobs`.
+    pub fn run(&self, sys: &mut IdmaSystem, hi_class: Option<TrafficClass>) -> IsolationOutcome {
+        let bulk_total = self.bulk_jobs * self.bulk_len;
+        let total = bulk_total + self.hi_jobs * self.hi_len;
+        let mut src = vec![0u8; total as usize];
+        let mut rng = crate::sim::XorShift64::new(0x9E37_79B9);
+        rng.fill(&mut src);
+        sys.mems[0].data.write(SRC_BASE, &src);
+        // Bulk backlog, submitted as fast as the system accepts it.
+        let mut bulk_pending: Vec<NdJob> = (0..self.bulk_jobs)
+            .rev()
+            .map(|i| {
+                let off = i * self.bulk_len;
+                let t = Transfer1D::copy(0, SRC_BASE + off, DST_BASE + off, self.bulk_len, ProtocolKind::Axi4);
+                NdJob::new(1000 + i, NdTransfer::d1(t))
+            })
+            .collect();
+        let mut first_try: HashMap<u64, Cycle> = HashMap::new();
+        let mut lat = Vec::new();
+        let mut hi_sent = 0u64;
+        let mut next_hi_at = self.period;
+        let mut deadline_missed = 0u64;
+        loop {
+            while let Some(j) = bulk_pending.last() {
+                if sys.submit(j.clone()) {
+                    bulk_pending.pop();
+                } else {
+                    break;
+                }
+            }
+            if hi_sent < self.hi_jobs && sys.now() >= next_hi_at {
+                let id = 1 + hi_sent;
+                let off = bulk_total + hi_sent * self.hi_len;
+                let t = Transfer1D::copy(0, SRC_BASE + off, DST_BASE + off, self.hi_len, ProtocolKind::Axi4);
+                let mut j = NdJob::new(id, NdTransfer::d1(t));
+                if let Some(c) = hi_class {
+                    j = j.with_class(c);
+                }
+                // Latency is measured from the first attempt: a full
+                // engine queue pushing the submit back *is* the
+                // interference being measured.
+                first_try.entry(id).or_insert_with(|| sys.now());
+                if sys.submit(j) {
+                    hi_sent += 1;
+                    next_hi_at += self.period;
+                }
+            }
+            for r in sys.take_done() {
+                if r.job >= 1 && r.job <= self.hi_jobs {
+                    let t0 = first_try.get(&r.job).copied().unwrap_or(r.submitted);
+                    lat.push(r.done.saturating_sub(t0));
+                }
+                if r.deadline_missed().is_some() {
+                    deadline_missed += 1;
+                }
+            }
+            if bulk_pending.is_empty() && hi_sent == self.hi_jobs && !sys.busy() {
+                break;
+            }
+            let target = sys.now() + 64;
+            sys.run_until(target);
+        }
+        let verified = sys.mems[0].data.read_vec(DST_BASE, src.len()) == src;
+        IsolationOutcome { hi_latencies: lat, end: sys.now(), verified, deadline_missed }
+    }
+}
+
+/// Two (or more) same-priority classes saturating the engine together,
+/// measuring the achieved bandwidth split inside a fixed window — the
+/// weighted-fairness workload.
+#[derive(Debug, Clone)]
+pub struct FairnessScenario {
+    /// Jobs submitted per class (all up-front: scheduler queues are
+    /// software-deep).
+    pub jobs_per_class: u64,
+    /// Bytes per job.
+    pub job_len: u64,
+    /// Number of classes exercised (class IDs `0..classes`).
+    pub classes: usize,
+    /// Measurement window in cycles, starting at submission.
+    pub window: Cycle,
+}
+
+/// Result of one [`FairnessScenario`] run.
+#[derive(Debug, Clone)]
+pub struct FairnessOutcome {
+    /// Jobs completed per class inside the window.
+    pub window_jobs: Vec<u64>,
+    /// Bytes completed per class inside the window.
+    pub window_bytes: Vec<u64>,
+    /// Every submitted job completed after the final drain.
+    pub all_completed: bool,
+    /// Destination bytes matched the source exactly.
+    pub verified: bool,
+    /// Clock when the system drained.
+    pub end: Cycle,
+}
+
+impl FairnessOutcome {
+    /// Fraction of in-window bytes served to `class`.
+    pub fn share(&self, class: usize) -> f64 {
+        let total: u64 = self.window_bytes.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.window_bytes[class] as f64 / total as f64
+    }
+}
+
+impl FairnessScenario {
+    /// Full-size run.
+    pub fn full() -> Self {
+        Self { jobs_per_class: 48, job_len: 8192, classes: 2, window: 30_000 }
+    }
+
+    /// CI smoke-mode sizing.
+    pub fn smoke() -> Self {
+        Self { jobs_per_class: 24, job_len: 4096, classes: 2, window: 8_000 }
+    }
+
+    /// Pick [`FairnessScenario::smoke`] when `smoke` is set.
+    pub fn sized(smoke: bool) -> Self {
+        if smoke {
+            Self::smoke()
+        } else {
+            Self::full()
+        }
+    }
+
+    /// Job ID for `(class, index)` — decodable from completions.
+    fn job_id(class: usize, i: u64) -> u64 {
+        (class as u64) * 10_000 + 1 + i
+    }
+
+    /// Drive the scenario on a QoS-enabled `sys`: submit every job
+    /// up-front (class `c` tagged `TrafficClass(c)`), measure per-class
+    /// completions at the window boundary, then drain and verify.
+    pub fn run(&self, sys: &mut IdmaSystem) -> FairnessOutcome {
+        let per_class = self.jobs_per_class * self.job_len;
+        let total = per_class * self.classes as u64;
+        let mut src = vec![0u8; total as usize];
+        let mut rng = crate::sim::XorShift64::new(0xFA1C);
+        rng.fill(&mut src);
+        sys.mems[0].data.write(SRC_BASE, &src);
+        for c in 0..self.classes {
+            for i in 0..self.jobs_per_class {
+                let off = (c as u64) * per_class + i * self.job_len;
+                let t = Transfer1D::copy(0, SRC_BASE + off, DST_BASE + off, self.job_len, ProtocolKind::Axi4);
+                let j = NdJob::new(Self::job_id(c, i), NdTransfer::d1(t)).with_class(TrafficClass(c as u8));
+                assert!(sys.submit(j), "QoS queues are software-deep");
+            }
+        }
+        let mut window_jobs = vec![0u64; self.classes];
+        let mut window_bytes = vec![0u64; self.classes];
+        sys.run_until(self.window);
+        for r in sys.take_done() {
+            let c = (r.job / 10_000) as usize;
+            window_jobs[c] += 1;
+            window_bytes[c] += self.job_len;
+        }
+        sys.run_until_idle();
+        let drained = sys.take_done().len() as u64;
+        let in_window: u64 = window_jobs.iter().sum();
+        let all_completed = in_window + drained == self.jobs_per_class * self.classes as u64;
+        let verified = sys.mems[0].data.read_vec(DST_BASE, src.len()) == src;
+        FairnessOutcome { window_jobs, window_bytes, all_completed, verified, end: sys.now() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_exact_nearest_rank() {
+        let v = [10u64, 20, 30, 40];
+        assert_eq!(percentile_exact(&v, 50.0), 20);
+        assert_eq!(percentile_exact(&v, 99.0), 40);
+        assert_eq!(percentile_exact(&v, 0.0), 10);
+        assert_eq!(percentile_exact(&[], 99.0), 0);
+    }
+
+    #[test]
+    fn job_ids_roundtrip_class() {
+        assert_eq!(FairnessScenario::job_id(1, 5) / 10_000, 1);
+        assert_eq!(FairnessScenario::job_id(0, 23) / 10_000, 0);
+    }
+}

@@ -352,7 +352,9 @@ pub fn run_case(cfg: &CampaignCfg, kind: SystemKind, scen: FaultScenario) -> Cas
         let i = (r.job - 1) as usize;
         res.retries += r.retries as u64;
         match r.status {
-            TransferStatus::Ok => {
+            // DeadlineMissed carries intact data (only the QoS timing
+            // promise broke), so it verifies like a success.
+            TransferStatus::Ok | TransferStatus::DeadlineMissed { .. } => {
                 if r.retries > 0 {
                     res.recovered += 1;
                 } else {

@@ -25,6 +25,7 @@ use std::collections::HashMap;
 use crate::backend::ErrorReport;
 use crate::midend::NdJob;
 use crate::protocol::ProtocolKind;
+use crate::qos::QosPolicy;
 use crate::sim::{Cycle, XorShift64};
 use crate::system::IdmaSystem;
 use crate::telemetry::{
@@ -105,6 +106,10 @@ pub struct Supervisor {
     pub deadline: Option<u64>,
     rng: XorShift64,
     probe: Probe,
+    /// When set, successful completions are judged against the
+    /// per-class deadlines of this policy, measured from each job's
+    /// *first* submission (so retries do not reset the promise).
+    qos_policy: Option<QosPolicy>,
     /// Page-fault handler (the "OS" side of demand paging): called with
     /// the faulting VA; returns `true` when the mapping was repaired and
     /// the job should be replayed.
@@ -131,6 +136,7 @@ impl Supervisor {
             deadline: None,
             rng: XorShift64::new(policy.seed),
             probe: Probe::none(),
+            qos_policy: None,
             fault_handler: None,
             jobs: HashMap::new(),
             cur2user: HashMap::new(),
@@ -151,6 +157,16 @@ impl Supervisor {
     /// Replace the endpoint health thresholds.
     pub fn with_health_policy(mut self, hp: HealthPolicy) -> Self {
         self.health_policy = hp;
+        self
+    }
+
+    /// Judge successful completions against the per-class deadlines of
+    /// `policy`: a job whose data lands intact but later than its
+    /// class's deadline — counted from the job's first submission, so
+    /// retry rounds don't reset the clock — finalizes with
+    /// [`TransferStatus::DeadlineMissed`] instead of `Ok`.
+    pub fn with_qos_policy(mut self, policy: QosPolicy) -> Self {
+        self.qos_policy = Some(policy);
         self
     }
 
@@ -350,7 +366,9 @@ impl Supervisor {
                         t.src += off;
                         t.dst += off;
                         t.len = len;
-                        NdJob::new(id, NdTransfer::d1(t))
+                        // Fragments keep the original job's QoS class
+                        // (full-job retries clone it along with the job).
+                        NdJob::new(id, NdTransfer::d1(t)).with_class(m.nd.class)
                     }
                 }
             };
@@ -403,6 +421,8 @@ impl Supervisor {
             }
             TransferStatus::TimedOut { .. } => false,
             TransferStatus::PageFault { .. } => false,
+            // Data intact, only late: nothing left to retry.
+            TransferStatus::DeadlineMissed { .. } => true,
         };
 
         if recovered {
@@ -646,7 +666,19 @@ impl Supervisor {
         }
     }
 
-    fn finalize(&mut self, user: u64, rec: CompletionRecord) {
+    fn finalize(&mut self, user: u64, mut rec: CompletionRecord) {
+        // Judge the QoS deadline promise last, against the first
+        // submission: retries delay completion but don't reset it.
+        if let (TransferStatus::Ok, Some(p)) = (rec.status, &self.qos_policy) {
+            if let Some(m) = self.jobs.get(&user) {
+                if let Some(d) = p.deadline_of(m.nd.class) {
+                    let due = m.first_submit + d;
+                    if rec.done > due {
+                        rec.status = TransferStatus::DeadlineMissed { late_by: rec.done - due };
+                    }
+                }
+            }
+        }
         self.jobs.remove(&user);
         self.pending.retain(|p| p.user != user);
         self.done.push(rec);

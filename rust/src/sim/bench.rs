@@ -141,9 +141,11 @@ impl BenchJson {
 
     /// Embed a telemetry [`crate::telemetry::RunSummary`]: job counts,
     /// payload bytes, bus errors and the observed cycle window, under
-    /// `telemetry_*` keys.
+    /// `telemetry_*` keys — plus, for QoS runs, per-class job counts
+    /// and queue/service latency percentiles under `class<N>_*` keys.
     pub fn summary(self, s: &crate::telemetry::RunSummary) -> Self {
-        self.int("telemetry_jobs", s.jobs)
+        let mut j = self
+            .int("telemetry_jobs", s.jobs)
             .int("telemetry_completed", s.completed)
             .int("telemetry_aborted", s.aborted)
             .int("telemetry_bytes_read", s.bytes_read)
@@ -156,7 +158,18 @@ impl BenchJson {
             .int("telemetry_tlb_misses", s.tlb_misses)
             .int("telemetry_ptw_beats", s.ptw_beats)
             .int("telemetry_page_faults", s.page_faults)
-            .int("telemetry_cycles", s.cycles())
+            .int("telemetry_cycles", s.cycles());
+        for c in &s.classes {
+            let n = c.class;
+            j = j
+                .int(&format!("class{n}_jobs"), c.jobs)
+                .int(&format!("class{n}_queue_p50"), c.queue.percentile(50.0))
+                .int(&format!("class{n}_queue_p99"), c.queue.percentile(99.0))
+                .int(&format!("class{n}_service_p50"), c.service.percentile(50.0))
+                .int(&format!("class{n}_service_p95"), c.service.percentile(95.0))
+                .int(&format!("class{n}_service_p99"), c.service.percentile(99.0));
+        }
+        j
     }
 
     /// Serialize to a JSON object string.
@@ -266,6 +279,9 @@ mod tests {
 
     #[test]
     fn json_embeds_run_summary() {
+        let mut lat = crate::telemetry::ClassLatency { class: 1, jobs: 1, ..Default::default() };
+        lat.queue.add(4);
+        lat.service.add(40);
         let s = crate::telemetry::RunSummary {
             jobs: 2,
             completed: 2,
@@ -273,12 +289,16 @@ mod tests {
             bytes_written: 64,
             first_submit: Some(3),
             last_done: Some(20),
+            classes: vec![lat],
             ..Default::default()
         };
         let j = BenchJson::new("u").summary(&s).to_json();
         assert!(j.contains("\"telemetry_jobs\":2"), "{j}");
         assert!(j.contains("\"telemetry_bytes_written\":64"), "{j}");
         assert!(j.contains("\"telemetry_cycles\":17"), "{j}");
+        assert!(j.contains("\"class1_jobs\":1"), "{j}");
+        assert!(j.contains("\"class1_queue_p99\":4"), "{j}");
+        assert!(j.contains("\"class1_service_p50\":40"), "{j}");
     }
 
     #[test]

@@ -141,6 +141,118 @@ impl Accumulator {
     }
 }
 
+/// Deterministic streaming histogram over `u64` samples: fixed log2
+/// buckets (bucket `k ≥ 1` covers `[2^(k-1), 2^k)`, bucket 0 holds
+/// zeros), exact `min`/`max`/`count`/`sum`, and nearest-rank
+/// [`Histogram::percentile`] answered from the bucket upper bounds
+/// clamped into `[min, max]` — so a single-valued distribution reports
+/// that value exactly at every percentile. Shared by the per-class QoS
+/// telemetry ([`crate::telemetry::ClassLatency`]) and usable anywhere
+/// [`RunStats`]-style counters need a latency distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; 65],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { buckets: [0; 65], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    fn bucket_limit(k: usize) -> u64 {
+        match k {
+            0 => 0,
+            64 => u64::MAX,
+            k => (1u64 << k) - 1,
+        }
+    }
+
+    /// Record one sample.
+    pub fn add(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact minimum sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean sample (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile: `p ≤ 0` → exact min, `p ≥ 100` → exact
+    /// max, otherwise the upper bound of the bucket holding the ranked
+    /// sample, clamped into `[min, max]`. Empty histograms report 0.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let rank = (((p / 100.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (k, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return Self::bucket_limit(k).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +294,68 @@ mod tests {
     fn zero_cycles_zero_util() {
         let s = RunStats::default();
         assert_eq!(s.bus_utilization(8), 0.0);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // 1023 and 1024 straddle a log2 boundary: bucket 10 = [512,1024)
+        // vs bucket 11 = [1024,2048).
+        let mut h = Histogram::new();
+        for _ in 0..99 {
+            h.add(1023);
+        }
+        h.add(1024);
+        assert_eq!(h.count(), 100);
+        // p50 lands in the 1023 bucket → upper bound 1023.
+        assert_eq!(h.percentile(50.0), 1023);
+        // p100 is the exact max.
+        assert_eq!(h.percentile(100.0), 1024);
+        // p99 rank = 99 → still the low bucket.
+        assert_eq!(h.percentile(99.0), 1023);
+    }
+
+    #[test]
+    fn histogram_p0_p100_are_exact_min_max() {
+        let mut h = Histogram::new();
+        for v in [7u64, 100, 3000, 12] {
+            h.add(v);
+        }
+        assert_eq!(h.percentile(0.0), 7);
+        assert_eq!(h.percentile(-5.0), 7);
+        assert_eq!(h.percentile(100.0), 3000);
+        assert_eq!(h.percentile(250.0), 3000);
+        assert_eq!(h.min(), 7);
+        assert_eq!(h.max(), 3000);
+        assert_eq!(h.sum(), 3119);
+    }
+
+    #[test]
+    fn histogram_single_value_exact_everywhere() {
+        // The [min,max] clamp makes every percentile exact for a
+        // single-valued distribution, despite log2 buckets.
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.add(777);
+        }
+        for p in [1.0, 50.0, 95.0, 99.0] {
+            assert_eq!(h.percentile(p), 777, "p{p}");
+        }
+        assert!((h.mean() - 777.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_zero_and_empty_edges() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        let mut h = Histogram::new();
+        h.add(0);
+        h.add(0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.percentile(100.0), 0);
+        assert_eq!(h.min(), 0);
     }
 }

@@ -47,6 +47,7 @@ use crate::engine::IdmaEngine;
 use crate::frontend::Frontend;
 use crate::mem::{Endpoint, SparseMemory};
 use crate::midend::{MidEnd, NdJob, RoundRobinArbiter, RT_JOB_BIT};
+use crate::qos::{QosScheduler, TrafficClass};
 use crate::sim::{Cycle, Scheduler, Watchdog};
 use crate::telemetry::{CompletionRecord, Probe, SharedSink};
 
@@ -87,6 +88,14 @@ pub struct IdmaSystem {
     submit_times: HashMap<u64, Cycle>,
     /// Telemetry sink propagated to front-ends added later.
     sink: Option<SharedSink>,
+    /// Optional QoS scheduler; when installed it replaces the strict
+    /// round-robin funnel with weighted-fair, chunk-preemptive
+    /// scheduling (see [`crate::qos`]).
+    qos: Option<QosScheduler>,
+    /// Traffic class each front-end's jobs are tagged with (all
+    /// [`TrafficClass::DEFAULT`] unless
+    /// [`IdmaSystem::set_frontend_class`] was called).
+    fe_class: Vec<TrafficClass>,
 }
 
 impl IdmaSystem {
@@ -105,6 +114,8 @@ impl IdmaSystem {
             done_log: Vec::new(),
             submit_times: HashMap::new(),
             sink: None,
+            qos: None,
+            fe_class: Vec::new(),
         }
     }
 
@@ -119,6 +130,7 @@ impl IdmaSystem {
             "front-ends must be added while the control plane is quiescent"
         );
         self.frontends.push(fe);
+        self.fe_class.push(TrafficClass::DEFAULT);
         if self.frontends.len() > 1 {
             self.arbiter = Some(RoundRobinArbiter::new(self.frontends.len()));
         }
@@ -148,7 +160,42 @@ impl IdmaSystem {
             let probe = Probe::attached(sink.clone()).with_tag(((i as u64) + 1) << FE_TAG_SHIFT);
             fe.set_probe(probe);
         }
+        if let Some(q) = &mut self.qos {
+            q.set_probe(Probe::attached(sink.clone()));
+        }
         self.sink = Some(sink);
+    }
+
+    /// Install a QoS scheduler: from here on every submission — direct
+    /// or from a front-end — is queued per traffic class and fed to the
+    /// engine as weighted-fair, priority-preemptible chunks (see
+    /// [`crate::qos::QosScheduler`]). The scheduler inherits the
+    /// engine's bus width and, when a sink is attached, a telemetry
+    /// probe. Panics while work is in flight.
+    pub fn set_qos(&mut self, mut q: QosScheduler) {
+        assert!(!self.busy(), "QoS must be installed while the system is quiescent");
+        q.set_bus_bytes(self.engine.backend.cfg.dw_bytes);
+        if let Some(s) = &self.sink {
+            q.set_probe(Probe::attached(s.clone()));
+        }
+        self.qos = Some(q);
+    }
+
+    /// Builder-style [`IdmaSystem::set_qos`].
+    pub fn with_qos(mut self, q: QosScheduler) -> Self {
+        self.set_qos(q);
+        self
+    }
+
+    /// The installed QoS scheduler, if any.
+    pub fn qos(&self) -> Option<&QosScheduler> {
+        self.qos.as_ref()
+    }
+
+    /// Tag every job front-end `i` launches with `class` (effective only
+    /// while a QoS scheduler is installed).
+    pub fn set_frontend_class(&mut self, i: usize, class: TrafficClass) {
+        self.fe_class[i] = class;
     }
 
     /// Number of attached front-ends.
@@ -209,14 +256,27 @@ impl IdmaSystem {
 
     /// Submit a job directly to the engine at the current clock,
     /// bypassing the front-ends (host-less scenarios and tests). Returns
-    /// `false` on back pressure.
+    /// `false` on back pressure. With a QoS scheduler installed the job
+    /// instead enters its class queue (software-deep: never
+    /// back-pressured) and reaches the engine as scheduled chunks.
     pub fn submit(&mut self, j: NdJob) -> bool {
         debug_assert_eq!(
             j.job >> FE_TAG_SHIFT,
             0,
             "job-id bits 48.. are reserved for front-end routing"
         );
-        self.engine.submit(self.now, j)
+        match self.qos.as_mut() {
+            Some(q) => {
+                q.submit(self.now, j);
+                true
+            }
+            None => self.engine.submit(self.now, j),
+        }
+    }
+
+    /// [`IdmaSystem::submit`] with an explicit traffic class.
+    pub fn submit_classed(&mut self, j: NdJob, class: TrafficClass) -> bool {
+        self.submit(j.with_class(class))
     }
 
     /// Drain the system-level completion log. Records carry the
@@ -233,6 +293,7 @@ impl IdmaSystem {
             || self.engine.busy()
             || self.arbiter.as_ref().is_some_and(|a| a.busy())
             || self.frontends.iter().any(|f| f.busy())
+            || self.qos.as_ref().is_some_and(|q| q.busy())
     }
 
     /// Progress fingerprint for watchdogs.
@@ -241,6 +302,9 @@ impl IdmaSystem {
         fp ^= (self.hold.is_some() as u64) << 1;
         for (i, fe) in self.frontends.iter().enumerate() {
             fp ^= fe.status().rotate_left(i as u32 + 3) ^ ((fe.busy() as u64) << (i % 32 + 8));
+        }
+        if let Some(q) = &self.qos {
+            fp ^= q.fingerprint().rotate_left(41);
         }
         fp
     }
@@ -260,6 +324,58 @@ impl IdmaSystem {
         for fe in self.frontends.iter_mut() {
             fe.tick(now, &self.ctrl_mem);
         }
+        if let Some(q) = &mut self.qos {
+            // An installed QoS scheduler *is* the arbiter: front-ends
+            // drain into software-deep class queues (one pop per
+            // front-end per cycle, like the round-robin funnel) and the
+            // hold slot is fed scheduled chunks instead of whole jobs.
+            for (i, fe) in self.frontends.iter_mut().enumerate() {
+                if let Some(mut j) = fe.pop(now) {
+                    debug_assert_eq!(j.job >> FE_TAG_SHIFT, 0);
+                    j.job |= ((i as u64) + 1) << FE_TAG_SHIFT;
+                    j.class = self.fe_class[i];
+                    self.submit_times.insert(j.job, now);
+                    q.submit(now, j);
+                }
+            }
+            if self.hold.is_none() {
+                self.hold = q.dispatch(now);
+            }
+        } else {
+            self.funnel_frontends(now);
+        }
+        if let Some(j) = self.hold.take() {
+            if !self.engine.submit(now, j.clone()) {
+                self.hold = Some(j);
+            }
+        }
+        self.engine.tick(now, &mut self.mems);
+        for d in self.engine.take_done() {
+            let d = match self.qos.as_mut() {
+                Some(q) => match q.resolve(now, d) {
+                    Some(r) => r,
+                    None => continue,
+                },
+                None => d,
+            };
+            let src = (d.job >> FE_TAG_SHIFT) as usize;
+            let (frontend, job) = if d.job & RT_JOB_BIT != 0 || src == 0 {
+                (None, d.job)
+            } else {
+                debug_assert!(src <= self.frontends.len(), "unknown front-end tag");
+                self.frontends[src - 1].notify_complete(d.job & FE_JOB_MASK);
+                (Some(src - 1), d.job & FE_JOB_MASK)
+            };
+            // The facade saw the job before the engine did: prefer its
+            // pop-time stamp over the engine's accept-time fallback.
+            let submitted = self.submit_times.remove(&d.job).unwrap_or(d.submitted);
+            self.done_log.push(CompletionRecord { frontend, job, submitted, ..d });
+        }
+    }
+
+    /// The non-QoS front-end funnel: arbiter (or sole front-end) into
+    /// the hold slot, one hand-off per boundary per cycle.
+    fn funnel_frontends(&mut self, now: Cycle) {
         match &mut self.arbiter {
             Some(arb) => {
                 for (i, fe) in self.frontends.iter_mut().enumerate() {
@@ -291,26 +407,6 @@ impl IdmaSystem {
                 }
             }
         }
-        if let Some(j) = self.hold.take() {
-            if !self.engine.submit(now, j.clone()) {
-                self.hold = Some(j);
-            }
-        }
-        self.engine.tick(now, &mut self.mems);
-        for d in self.engine.take_done() {
-            let src = (d.job >> FE_TAG_SHIFT) as usize;
-            let (frontend, job) = if d.job & RT_JOB_BIT != 0 || src == 0 {
-                (None, d.job)
-            } else {
-                debug_assert!(src <= self.frontends.len(), "unknown front-end tag");
-                self.frontends[src - 1].notify_complete(d.job & FE_JOB_MASK);
-                (Some(src - 1), d.job & FE_JOB_MASK)
-            };
-            // The facade saw the job before the engine did: prefer its
-            // pop-time stamp over the engine's accept-time fallback.
-            let submitted = self.submit_times.remove(&d.job).unwrap_or(d.submitted);
-            self.done_log.push(CompletionRecord { frontend, job, submitted, ..d });
-        }
     }
 
     /// Earliest cycle strictly after `now` at which any component could
@@ -329,6 +425,9 @@ impl IdmaSystem {
         } else {
             Cycle::MAX
         };
+        if let Some(e) = self.qos.as_ref().and_then(|q| q.next_event(now)) {
+            at = at.min(e.max(now + 1));
+        }
         if let Some(w) = self.idle_wake(now) {
             at = at.min(w);
         }
@@ -452,12 +551,13 @@ pub struct IdmaSystemBuilder {
     frontends: Vec<Box<dyn Frontend>>,
     ctrl_mem: Option<SparseMemory>,
     sink: Option<SharedSink>,
+    qos: Option<QosScheduler>,
 }
 
 impl IdmaSystemBuilder {
     /// Start from a composed engine (see [`crate::engine::EngineBuilder`]).
     pub fn new(engine: IdmaEngine) -> Self {
-        Self { engine, mems: Vec::new(), frontends: Vec::new(), ctrl_mem: None, sink: None }
+        Self { engine, mems: Vec::new(), frontends: Vec::new(), ctrl_mem: None, sink: None, qos: None }
     }
 
     /// Append one memory endpoint (indexed by the back-end's port list).
@@ -490,6 +590,12 @@ impl IdmaSystemBuilder {
         self
     }
 
+    /// Install a QoS scheduler (see [`IdmaSystem::set_qos`]).
+    pub fn qos(mut self, q: QosScheduler) -> Self {
+        self.qos = Some(q);
+        self
+    }
+
     /// Assemble the system.
     pub fn build(self) -> IdmaSystem {
         let mut sys = IdmaSystem::new(self.engine, self.mems);
@@ -501,6 +607,9 @@ impl IdmaSystemBuilder {
         }
         if let Some(s) = self.sink {
             sys.attach_sink(s);
+        }
+        if let Some(q) = self.qos {
+            sys.set_qos(q);
         }
         sys
     }

@@ -109,6 +109,17 @@ impl Cheshire {
         IdmaSystem::new(engine, mems)
     }
 
+    /// QoS variant of [`Cheshire::resilient_system`]: the same engine
+    /// and DRAM endpoint with a [`crate::qos::QosScheduler`] installed,
+    /// so submissions are weighted-fair-scheduled and chunk-preemptible
+    /// per `policy`. Used by the `qos_isolation` bench, the
+    /// `qos_serving` example and the fairness/isolation tests.
+    pub fn qos_system(&self, policy: crate::qos::QosPolicy) -> IdmaSystem {
+        let mut sys = self.resilient_system();
+        sys.set_qos(crate::qos::QosScheduler::new(policy));
+        sys
+    }
+
     /// Irregular-transfer variant: the same DRAM endpoint behind a
     /// [`crate::midend::ScatterGather`] mid-end (index lists fetched
     /// through port 0) feeding a [`crate::vm::Mmu`] that translates the

@@ -7,8 +7,11 @@
 //! with up to three spans per job: `queued` (submit → accept), `launch`
 //! (accept → first beat) and `transfer` (first beat → done). Process 2
 //! ("idma ports") has one track per engine port carrying one-cycle
-//! `read`/`write` beat events and `bus_error` instants. One simulation
-//! cycle maps to one trace-time unit.
+//! `read`/`write` beat events and `bus_error` instants. When the run
+//! used a [`crate::qos::QosScheduler`], process 3 ("idma classes") adds
+//! one track per traffic class with a whole-lifetime span per job, so
+//! per-class interference is visible at a glance. One simulation cycle
+//! maps to one trace-time unit.
 
 use std::collections::BTreeSet;
 
@@ -69,6 +72,17 @@ impl Recorder {
                 r#"{{"name":"thread_name","ph":"M","pid":2,"tid":{p},"args":{{"name":"port {p}"}}}}"#
             ));
         }
+        let classed: BTreeSet<u8> = self.jobs().filter_map(|t| self.job_class_of(t.job)).collect();
+        if !classed.is_empty() {
+            evs.push(
+                r#"{"name":"process_name","ph":"M","pid":3,"tid":0,"args":{"name":"idma classes"}}"#.to_string(),
+            );
+            for c in &classed {
+                evs.push(format!(
+                    r#"{{"name":"thread_name","ph":"M","pid":3,"tid":{c},"args":{{"name":"class {c}"}}}}"#
+                ));
+            }
+        }
 
         // Per-job lifecycle spans.
         for t in self.jobs() {
@@ -87,6 +101,14 @@ impl Recorder {
             span("queued", t.submitted, t.accepted.or(t.first_beat));
             span("launch", t.accepted, t.first_beat.or(t.done));
             span("transfer", t.first_beat, t.done);
+            if let Some(c) = self.job_class_of(t.job) {
+                if let (Some(a), Some(b)) = (t.submitted, t.done) {
+                    evs.push(format!(
+                        r#"{{"name":"job","ph":"X","ts":{a},"dur":{},"pid":3,"tid":{c},"args":{{"job":{job}}}}}"#,
+                        b.saturating_sub(a),
+                    ));
+                }
+            }
         }
 
         // Per-port beat events and bus-error instants from the raw log.
@@ -156,6 +178,19 @@ mod tests {
         ] {
             assert!(s.contains(needle), "missing {needle} in {s}");
         }
+    }
+
+    #[test]
+    fn classified_jobs_get_class_lanes() {
+        let mut r = Recorder::new();
+        r.event(&TelemetryEvent::JobClassified { job: 5, class: 2, at: 1 });
+        r.event(&TelemetryEvent::QosRetired { job: 5, class: 2, queue_cycles: 1, service_cycles: 9, at: 10 });
+        let s = r.chrome_trace();
+        assert!(s.contains(r#""name":"idma classes""#));
+        assert!(s.contains(r#""name":"class 2""#));
+        assert!(s.contains(r#""pid":3"#));
+        // Runs without QoS events keep the two-process layout.
+        assert!(!Recorder::new().chrome_trace().contains("idma classes"));
     }
 
     #[test]

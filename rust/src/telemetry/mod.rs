@@ -31,7 +31,7 @@
 mod chrome;
 mod record;
 
-pub use record::{JobTrace, PortCounter, Recorder, RunSummary};
+pub use record::{ClassLatency, JobTrace, PortCounter, Recorder, RunSummary};
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -177,6 +177,30 @@ pub enum TelemetryEvent {
         /// Cycle the fault was raised.
         at: Cycle,
     },
+    /// A [`crate::qos::QosScheduler`] admitted a job into a traffic
+    /// class's queue.
+    JobClassified {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Traffic class the job was accounted to.
+        class: u8,
+        /// Admission cycle (queue latency is measured from here).
+        at: Cycle,
+    },
+    /// A [`crate::qos::QosScheduler`] retired a job: every chunk
+    /// completed and the merged record was released.
+    QosRetired {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Traffic class the job was accounted to.
+        class: u8,
+        /// Cycles from admission to first chunk dispatch.
+        queue_cycles: u64,
+        /// Cycles from admission to the last chunk's completion.
+        service_cycles: u64,
+        /// Retirement cycle.
+        at: Cycle,
+    },
 }
 
 /// Receiver of [`TelemetryEvent`]s. Implemented by [`Recorder`]; user
@@ -259,7 +283,9 @@ impl Probe {
                 | TelemetryEvent::JobTimedOut { job, .. }
                 | TelemetryEvent::TlbHit { job, .. }
                 | TelemetryEvent::TlbMiss { job, .. }
-                | TelemetryEvent::PageFaulted { job, .. } => *job |= self.tag,
+                | TelemetryEvent::PageFaulted { job, .. }
+                | TelemetryEvent::JobClassified { job, .. }
+                | TelemetryEvent::QosRetired { job, .. } => *job |= self.tag,
                 _ => {}
             }
         }
@@ -292,6 +318,12 @@ impl Probe {
 ///   whole job (the [`crate::resilience::Supervisor`]'s fault handler
 ///   automates this). Like timed-out jobs, a faulted job ID must not be
 ///   resubmitted — replays need a fresh ID.
+/// * [`TransferStatus::DeadlineMissed`] — the data arrived *intact*
+///   (destination memory is as good as `Ok`), but completion came
+///   `late_by` cycles after the deadline the job's
+///   [`crate::qos::ClassConfig`] promised. Unlike `TimedOut` nothing
+///   was aborted; the status exists so latency-critical callers can
+///   distinguish "correct but late" from "correct and on time".
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransferStatus {
     /// All beats retired without an error response.
@@ -315,6 +347,11 @@ pub enum TransferStatus {
     PageFault {
         /// The virtual address that failed to translate.
         va: u64,
+    },
+    /// The job completed intact but after its QoS class deadline.
+    DeadlineMissed {
+        /// Cycles past the deadline at completion.
+        late_by: u64,
     },
 }
 
@@ -362,6 +399,7 @@ impl CompletionRecord {
             TransferStatus::BusError { errors, .. } => errors,
             TransferStatus::TimedOut { errors } => errors,
             TransferStatus::PageFault { .. } => 0,
+            TransferStatus::DeadlineMissed { .. } => 0,
         }
     }
 
@@ -373,6 +411,7 @@ impl CompletionRecord {
             TransferStatus::BusError { aborted, .. } => aborted,
             TransferStatus::TimedOut { .. } => true,
             TransferStatus::PageFault { .. } => true,
+            TransferStatus::DeadlineMissed { .. } => false,
         }
     }
 
@@ -383,6 +422,7 @@ impl CompletionRecord {
             TransferStatus::BusError { addr, .. } => addr,
             TransferStatus::TimedOut { .. } => None,
             TransferStatus::PageFault { .. } => None,
+            TransferStatus::DeadlineMissed { .. } => None,
         }
     }
 
@@ -396,6 +436,16 @@ impl CompletionRecord {
     pub fn page_fault(&self) -> Option<u64> {
         match self.status {
             TransferStatus::PageFault { va } => Some(va),
+            _ => None,
+        }
+    }
+
+    /// How late the job completed past its QoS deadline, when it did.
+    /// The data is intact (unlike [`CompletionRecord::aborted`] cases);
+    /// only the timing promise was broken.
+    pub fn deadline_missed(&self) -> Option<u64> {
+        match self.status {
+            TransferStatus::DeadlineMissed { late_by } => Some(late_by),
             _ => None,
         }
     }
@@ -461,5 +511,13 @@ mod tests {
         assert!(!r.timed_out());
         assert_eq!(r.error_addr(), None);
         assert_eq!(r.page_fault(), Some(0x1234));
+        r.status = TransferStatus::DeadlineMissed { late_by: 40 };
+        assert!(!r.ok(), "late is not ok");
+        assert_eq!(r.errors(), 0);
+        assert!(!r.aborted(), "late data is intact, not cut short");
+        assert!(!r.timed_out());
+        assert_eq!(r.error_addr(), None);
+        assert_eq!(r.page_fault(), None);
+        assert_eq!(r.deadline_missed(), Some(40));
     }
 }

@@ -4,6 +4,7 @@
 use std::collections::{BTreeMap, HashMap};
 
 use super::{TelemetryEvent, TelemetrySink};
+use crate::sim::stats::Histogram;
 use crate::sim::Cycle;
 
 /// Lifecycle trace of one job as observed by a [`Recorder`].
@@ -52,10 +53,25 @@ pub struct PortCounter {
     pub last_beat: Option<Cycle>,
 }
 
+/// Per-traffic-class queue/service latency distributions, aggregated
+/// from [`TelemetryEvent::JobClassified`] / [`TelemetryEvent::QosRetired`]
+/// pairs by the [`Recorder`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClassLatency {
+    /// Traffic class ID ([`crate::qos::TrafficClass`] payload).
+    pub class: u8,
+    /// Jobs retired in this class.
+    pub jobs: u64,
+    /// Queue latency (admission → first chunk dispatch), in cycles.
+    pub queue: Histogram,
+    /// Service latency (admission → last chunk completion), in cycles.
+    pub service: Histogram,
+}
+
 /// Flat run summary — the record every bench embeds in its
 /// `BENCH_<name>.json` (via
 /// [`crate::sim::bench::BenchJson::summary`]).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RunSummary {
     /// Jobs observed (submitted, accepted or completed).
     pub jobs: u64,
@@ -87,6 +103,10 @@ pub struct RunSummary {
     pub first_submit: Option<Cycle>,
     /// Latest retire cycle.
     pub last_done: Option<Cycle>,
+    /// Per-traffic-class latency distributions (empty unless a
+    /// [`crate::qos::QosScheduler`] emitted classification events),
+    /// ordered by class ID.
+    pub classes: Vec<ClassLatency>,
 }
 
 impl RunSummary {
@@ -143,6 +163,8 @@ pub struct Recorder {
     tlb_misses: u64,
     ptw_beats: u64,
     page_faults: u64,
+    classes: BTreeMap<u8, ClassLatency>,
+    job_class: BTreeMap<u64, u8>,
 }
 
 impl Recorder {
@@ -176,6 +198,17 @@ impl Recorder {
         self.bus_errors
     }
 
+    /// Per-traffic-class latency aggregates, ordered by class ID (empty
+    /// unless a QoS scheduler emitted classification events).
+    pub fn classes(&self) -> impl Iterator<Item = &ClassLatency> {
+        self.classes.values()
+    }
+
+    /// Traffic class of a (tagged) job ID, when one was recorded.
+    pub fn job_class_of(&self, job: u64) -> Option<u8> {
+        self.job_class.get(&job).copied()
+    }
+
     /// Fold the recorded run into a flat [`RunSummary`].
     pub fn summary(&self) -> RunSummary {
         let mut s = RunSummary {
@@ -204,11 +237,16 @@ impl Recorder {
             s.first_submit = min_opt(s.first_submit, t.submitted.or(t.accepted));
             s.last_done = max_opt(s.last_done, t.done);
         }
+        s.classes = self.classes.values().cloned().collect();
         s
     }
 
     fn trace(&mut self, job: u64) -> &mut JobTrace {
         self.jobs.entry(job).or_insert_with(|| JobTrace { job, ..Default::default() })
+    }
+
+    fn class_entry(&mut self, class: u8) -> &mut ClassLatency {
+        self.classes.entry(class).or_insert_with(|| ClassLatency { class, ..Default::default() })
     }
 }
 
@@ -310,6 +348,22 @@ impl TelemetrySink for Recorder {
             TelemetryEvent::PageFaulted { job, .. } => {
                 self.page_faults += 1;
                 self.trace(job).page_faulted = true;
+            }
+            TelemetryEvent::JobClassified { job, class, at } => {
+                self.job_class.insert(job, class);
+                self.class_entry(class);
+                let t = self.trace(job);
+                if t.submitted.is_none() {
+                    t.submitted = Some(at);
+                }
+            }
+            TelemetryEvent::QosRetired { job, class, queue_cycles, service_cycles, at } => {
+                let c = self.class_entry(class);
+                c.jobs += 1;
+                c.queue.add(queue_cycles);
+                c.service.add(service_cycles);
+                let t = self.trace(job);
+                t.done = max_opt(t.done, Some(at));
             }
         }
     }
@@ -418,9 +472,37 @@ mod tests {
     }
 
     #[test]
+    fn qos_events_aggregate_per_class() {
+        let mut r = Recorder::new();
+        feed(
+            &mut r,
+            &[
+                TelemetryEvent::JobClassified { job: 1, class: 0, at: 0 },
+                TelemetryEvent::JobClassified { job: 2, class: 1, at: 4 },
+                TelemetryEvent::QosRetired { job: 1, class: 0, queue_cycles: 2, service_cycles: 50, at: 50 },
+                TelemetryEvent::QosRetired { job: 2, class: 1, queue_cycles: 8, service_cycles: 96, at: 100 },
+            ],
+        );
+        assert_eq!(r.job_class_of(1), Some(0));
+        assert_eq!(r.job_class_of(2), Some(1));
+        assert_eq!(r.job_class_of(3), None);
+        let s = r.summary();
+        assert_eq!(s.classes.len(), 2);
+        assert_eq!(s.classes[0].class, 0);
+        assert_eq!(s.classes[0].jobs, 1);
+        assert_eq!(s.classes[0].queue.max(), 2);
+        assert_eq!(s.classes[1].service.percentile(99.0), 96);
+        // Classified jobs get a trace with submit/done bounds.
+        assert_eq!(r.job(1).unwrap().submitted, Some(0));
+        assert_eq!(r.job(2).unwrap().done, Some(100));
+        assert_eq!(s.cycles(), 100);
+    }
+
+    #[test]
     fn empty_summary_is_zero() {
         let s = Recorder::new().summary();
         assert_eq!(s.cycles(), 0);
         assert_eq!(s.bus_utilization(8), 0.0);
+        assert!(s.classes.is_empty());
     }
 }
