@@ -453,6 +453,7 @@ pub struct EngineBuilder {
     ports: Vec<PortCfg>,
     tensor_dims: usize,
     zero_latency_tensor: bool,
+    optimize: bool,
     error_handling: bool,
     owner: u32,
 }
@@ -468,6 +469,7 @@ impl EngineBuilder {
             ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
             tensor_dims: 0,
             zero_latency_tensor: true,
+            optimize: false,
             error_handling: false,
             owner: 0,
         }
@@ -488,6 +490,15 @@ impl EngineBuilder {
     /// Configure the tensor mid-end's added latency (§4.3: zero or one).
     pub fn tensor_latency_one(mut self) -> Self {
         self.zero_latency_tensor = false;
+        self
+    }
+
+    /// Replace the tensor mid-end with the access-pattern optimizer
+    /// ([`crate::midend::PatternOptimizer`]): same ND expansion, but
+    /// contiguous patterns are fused into longer rows first. Off by
+    /// default, so plain builds stay byte- and cycle-identical.
+    pub fn optimize(mut self) -> Self {
+        self.optimize = true;
         self
     }
 
@@ -516,7 +527,16 @@ impl EngineBuilder {
             ..Default::default()
         })?;
         let mut mids: Vec<Box<dyn MidEnd>> = Vec::new();
-        if self.tensor_dims > 1 {
+        if self.optimize {
+            mids.push(Box::new(crate::midend::PatternOptimizer::new(
+                crate::midend::OptimizerCfg {
+                    max_dims: if self.tensor_dims > 1 { self.tensor_dims - 1 } else { 3 },
+                    zero_latency: self.zero_latency_tensor,
+                    bus_bytes: self.dw,
+                    ..Default::default()
+                },
+            )));
+        } else if self.tensor_dims > 1 {
             mids.push(Box::new(crate::midend::TensorNd::new(
                 self.tensor_dims - 1,
                 self.zero_latency_tensor,
@@ -583,6 +603,32 @@ mod tests {
         let done = e.take_done();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].job, 9);
+    }
+
+    #[test]
+    fn optimizer_chain_matches_tensor_chain_bytes() {
+        // Same 2D job through the dense tensor chain and the optimizer
+        // chain: identical destination bytes, optimizer no slower.
+        let run = |optimize: bool| {
+            let b = EngineBuilder::new(32, 4, 8).tensor(3);
+            let mut e = if optimize { b.optimize() } else { b }.build().unwrap();
+            let mut m = [Endpoint::new(MemModel::sram(4))];
+            for r in 0..4u64 {
+                let row: Vec<u8> = (0..16).map(|i| (r * 16 + i) as u8).collect();
+                m[0].data.write(0x1000 + r * 16, &row);
+            }
+            // Fully contiguous 2D: src/dst row stride == row length.
+            let inner = Transfer1D::copy(0, 0x1000, 0x8000, 16, ProtocolKind::Axi4);
+            let nd = NdTransfer::d2(inner, 16, 16, 4);
+            assert!(e.submit(0, NdJob::new(9, nd)));
+            let end = run_engine(&mut e, &mut m, 10_000);
+            assert_eq!(e.take_done().len(), 1);
+            (m[0].data.read_vec(0x8000, 64), end)
+        };
+        let (dense_bytes, dense_end) = run(false);
+        let (opt_bytes, opt_end) = run(true);
+        assert_eq!(opt_bytes, dense_bytes);
+        assert!(opt_end <= dense_end, "optimizer must not be slower: {opt_end} vs {dense_end}");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! | (scatter/gather) | [`ScatterGather`]     |
 //! | (mmu)            | [`crate::vm::Mmu`]    |
 //! | (arbiter)        | [`RoundRobinArbiter`] |
+//! | (optimizer)      | [`PatternOptimizer`]  |
 //!
 //! `ScatterGather` covers the paper's §2.2 "scattering or gathering"
 //! claim: it resolves an in-memory index list into per-element 1D
@@ -28,6 +29,7 @@
 mod arbiter;
 mod mp_dist;
 mod mp_split;
+mod optimizer;
 mod rt3d;
 mod scatter_gather;
 mod tensor;
@@ -35,6 +37,7 @@ mod tensor;
 pub use arbiter::RoundRobinArbiter;
 pub use mp_dist::{DistSide, MpDist};
 pub use mp_split::{MpSplit, SplitSide};
+pub use optimizer::{canonicalize, OptStats, OptimizerCfg, PatternOptimizer};
 pub use rt3d::{Rt3D, Rt3DConfig, RT_JOB_BIT};
 pub use scatter_gather::{ScatterGather, SgConfig, SgMode, SG_OWNER};
 pub use tensor::{Tensor2D, TensorNd};

@@ -1,0 +1,801 @@
+//! ND access-pattern optimizer mid-end.
+//!
+//! The paper's mid-ends exist to "accelerate complex data transfer
+//! patterns such as multi-dimensional transfers" (§2.2). The dense
+//! `tensor_ND` walks every row of an affine pattern naively, so a
+//! contiguous 2D/3D transfer pays per-row legalization and beat
+//! overhead the hardware would fuse away. [`PatternOptimizer`] is a
+//! drop-in superset of [`super::TensorNd`]: it **canonicalizes** the ND
+//! descriptor before expanding it —
+//!
+//! * **degenerate collapse** — outer dimensions with `reps <= 1`
+//!   contribute nothing to the walk and are dropped;
+//! * **unit-stride fusion** — an innermost dimension whose source *and*
+//!   destination strides equal the row length describes one contiguous
+//!   block; its rows are fused into a single longer row;
+//! * **adjacent merge** — an outer dimension whose strides exactly
+//!   continue the walk of the dimension below it (`stride ==
+//!   inner_stride * inner_reps` on both sides) is merged into it;
+//!
+//! — then expands the canonical pattern one row per cycle exactly like
+//! `tensor_ND`. Every transform preserves the per-byte
+//! (destination ← source) mapping *and* the emission order, so
+//! optimized runs are byte-identical to dense runs; only the cycle
+//! count improves (fewer rows ⇒ fewer legalization passes and fewer
+//! partial tail beats).
+//!
+//! Two optional knobs go beyond the dense semantics:
+//!
+//! * [`OptimizerCfg::max_row_bytes`] splits fused mega-rows back into
+//!   page/burst-aligned chunks using the back-end legalizer's
+//!   [`max_legal_len`] math (off by default — `u64::MAX`);
+//! * a small deterministic LRU ([`OptimizerCfg::cache_entries`]) keyed
+//!   on `(addr alignment class, len, protocol pair)` caches those split
+//!   plans so repeated rows skip recomputation.
+//!
+//! Telemetry: one [`TelemetryEvent::RowsCoalesced`] per job whose rows
+//! were fused, and one [`TelemetryEvent::PatternFused`] when the job's
+//! expansion completes; both feed the `rows_in` / `rows_out` /
+//! `fused_bytes` / cache counters of
+//! [`crate::telemetry::RunSummary`].
+
+use std::collections::VecDeque;
+
+use super::{MidEnd, NdJob};
+use crate::backend::max_legal_len;
+use crate::protocol::{BurstRule, ProtocolKind};
+use crate::sim::{Cycle, Fifo};
+use crate::telemetry::{Probe, TelemetryEvent};
+use crate::transfer::{NdTransfer, Transfer1D};
+
+/// Alignment-class modulus for plan-cache keys: the LCM bound of every
+/// address-sensitive burst rule in the crate (AXI4 pages are 4 KiB,
+/// TileLink-UH power-of-two bursts cap at 4 KiB, single-beat windows
+/// divide it). Two addresses congruent mod this value legalize
+/// identically at every offset of a row.
+const PLAN_ALIGN: u64 = 4096;
+
+/// Configuration of a [`PatternOptimizer`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptimizerCfg {
+    /// Maximum outer dimensions accepted (pre-canonicalization), like
+    /// [`super::TensorNd::new`]'s `max_dims`.
+    pub max_dims: usize,
+    /// Zero-latency configuration (§4.3): the first row of a job is
+    /// visible the cycle it is accepted.
+    pub zero_latency: bool,
+    /// Drop outer dimensions with `reps <= 1`.
+    pub collapse: bool,
+    /// Fuse unit-stride inner dimensions and merge exactly-continuing
+    /// adjacent dimensions.
+    pub fuse: bool,
+    /// Split rows longer than this at page/burst boundaries via
+    /// [`max_legal_len`]. `u64::MAX` (the default) disables splitting,
+    /// keeping the emitted stream identical to the dense row walk.
+    pub max_row_bytes: u64,
+    /// Capacity of the deterministic split-plan LRU (values below 1 are
+    /// treated as 1).
+    pub cache_entries: usize,
+    /// Bus width in bytes, fed to [`max_legal_len`] when splitting.
+    pub bus_bytes: u64,
+}
+
+impl Default for OptimizerCfg {
+    fn default() -> Self {
+        Self {
+            max_dims: 3,
+            zero_latency: true,
+            collapse: true,
+            fuse: true,
+            max_row_bytes: u64::MAX,
+            cache_entries: 16,
+            bus_bytes: 8,
+        }
+    }
+}
+
+/// Lifetime counters of one [`PatternOptimizer`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptStats {
+    /// Jobs fully expanded.
+    pub jobs: u64,
+    /// Rows the dense expansion would have emitted.
+    pub rows_in: u64,
+    /// Rows actually emitted.
+    pub rows_out: u64,
+    /// Rows absorbed into longer neighbours by fusion.
+    pub fused_rows: u64,
+    /// Payload bytes those absorbed rows carried.
+    pub fused_bytes: u64,
+    /// Split-plan cache hits.
+    pub cache_hits: u64,
+    /// Split-plan cache misses.
+    pub cache_misses: u64,
+}
+
+impl OptStats {
+    /// Plan-cache hit rate in `[0,1]`; `0.0` when the cache was never
+    /// consulted.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let n = self.cache_hits + self.cache_misses;
+        if n == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / n as f64
+    }
+}
+
+/// Canonicalize an ND descriptor: collapse degenerate dimensions, fuse
+/// unit-stride inner dimensions into longer rows, and merge adjacent
+/// exactly-continuing dimensions, to a fixpoint.
+///
+/// Returns `(canonical, fused_rows, fused_bytes)` where `fused_rows`
+/// counts the dense rows absorbed into longer neighbours and
+/// `fused_bytes` the payload bytes they carried. The canonical pattern
+/// enumerates the same (destination ← source) byte mapping in the same
+/// order as the input — this is the invariant the conformance sweep in
+/// `tests/nd_optimizer.rs` pins.
+pub fn canonicalize(nd: &NdTransfer, collapse: bool, fuse: bool) -> (NdTransfer, u64, u64) {
+    let mut out = nd.clone();
+    let mut fused_rows = 0u64;
+    let mut fused_bytes = 0u64;
+    if collapse {
+        // `reps == 0` walks exactly like `reps == 1` in the reference
+        // enumeration (the odometer emits the zero index once), so both
+        // are droppable.
+        out.dims.retain(|d| d.reps > 1);
+    }
+    if fuse {
+        loop {
+            let mut changed = false;
+            // Unit-stride inner fusion: the innermost dimension advances
+            // both cursors by exactly the row length, so its rows form
+            // one contiguous block on each side.
+            if let Some(d0) = out.dims.first().copied() {
+                let len = out.inner.len;
+                if d0.reps >= 1
+                    && len > 0
+                    && d0.src_stride as i128 == len as i128
+                    && d0.dst_stride as i128 == len as i128
+                {
+                    if let Some(new_len) = len.checked_mul(d0.reps) {
+                        fused_rows += d0.reps - 1;
+                        fused_bytes += len * (d0.reps - 1);
+                        out.inner.len = new_len;
+                        out.dims.remove(0);
+                        changed = true;
+                    }
+                }
+            }
+            // Adjacent merge: dimension i+1 strides exactly continue
+            // dimension i's walk, so the pair is one longer walk.
+            if !changed {
+                let mut i = 0;
+                while i + 1 < out.dims.len() {
+                    let a = out.dims[i];
+                    let b = out.dims[i + 1];
+                    let merged_reps = a.reps.checked_mul(b.reps);
+                    if a.reps >= 1
+                        && b.src_stride as i128 == a.src_stride as i128 * a.reps as i128
+                        && b.dst_stride as i128 == a.dst_stride as i128 * a.reps as i128
+                    {
+                        if let Some(reps) = merged_reps {
+                            out.dims[i].reps = reps;
+                            out.dims.remove(i + 1);
+                            changed = true;
+                            continue;
+                        }
+                    }
+                    i += 1;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+    (out, fused_rows, fused_bytes)
+}
+
+/// Plan-cache key: the alignment classes of the row's endpoints plus
+/// its length and protocol pair fully determine the legal split plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PlanKey {
+    src_off: u64,
+    dst_off: u64,
+    len: u64,
+    src_protocol: ProtocolKind,
+    dst_protocol: ProtocolKind,
+}
+
+/// Deterministic LRU over a plain vector (MRU first): identical lookup
+/// sequences produce identical hit/miss sequences regardless of host
+/// threading, hash seeds or pointer values.
+#[derive(Debug)]
+struct PlanCache {
+    entries: Vec<(PlanKey, Vec<u64>)>,
+    cap: usize,
+}
+
+impl PlanCache {
+    fn new(cap: usize) -> Self {
+        Self { entries: Vec::new(), cap: cap.max(1) }
+    }
+
+    fn get(&mut self, key: &PlanKey) -> Option<Vec<u64>> {
+        let pos = self.entries.iter().position(|(k, _)| k == key)?;
+        let e = self.entries.remove(pos);
+        let plan = e.1.clone();
+        self.entries.insert(0, e);
+        Some(plan)
+    }
+
+    fn put(&mut self, key: PlanKey, plan: Vec<u64>) {
+        self.entries.insert(0, (key, plan));
+        self.entries.truncate(self.cap);
+    }
+}
+
+/// Compute the chunk lengths splitting a `key.len`-byte row into pieces
+/// of at most `max_row_bytes`, each piece greedily accumulating whole
+/// legal bursts of both directions so chunk boundaries land on the
+/// page/burst split points the back-end legalizer would pick anyway.
+fn plan_chunks(cfg: &OptimizerCfg, key: &PlanKey) -> Vec<u64> {
+    let src_rule = key.src_protocol.caps().burst;
+    let dst_rule = key.dst_protocol.caps().burst;
+    debug_assert!(alignment_sound(src_rule, cfg.bus_bytes));
+    debug_assert!(alignment_sound(dst_rule, cfg.bus_bytes));
+    // Representative addresses in the row's alignment class; PLAN_ALIGN
+    // + off has the same page offset and the same trailing-zero count
+    // (capped at the 4 KiB rule bound) as any address ≡ off (mod 4 KiB).
+    let src0 = PLAN_ALIGN + key.src_off;
+    let dst0 = PLAN_ALIGN + key.dst_off;
+    let mut plan = Vec::new();
+    let mut off = 0u64;
+    while off < key.len {
+        let mut chunk = 0u64;
+        loop {
+            let left = key.len - off - chunk;
+            if left == 0 {
+                break;
+            }
+            let b = max_legal_len(src_rule, src0 + off + chunk, left, cfg.bus_bytes)
+                .min(max_legal_len(dst_rule, dst0 + off + chunk, left, cfg.bus_bytes))
+                .max(1);
+            // A chunk takes at least one burst, then stops before
+            // overrunning the row-size cap.
+            if chunk > 0 && chunk + b > cfg.max_row_bytes {
+                break;
+            }
+            chunk += b;
+            if chunk >= cfg.max_row_bytes {
+                break;
+            }
+        }
+        plan.push(chunk);
+        off += chunk;
+    }
+    plan
+}
+
+/// The [`PLAN_ALIGN`] soundness condition: the rule's address
+/// sensitivity must be fully determined by `addr mod PLAN_ALIGN`.
+fn alignment_sound(rule: BurstRule, bus_bytes: u64) -> bool {
+    match rule {
+        BurstRule::SingleBeat => bus_bytes <= PLAN_ALIGN && PLAN_ALIGN % bus_bytes == 0,
+        BurstRule::Paged { page, .. } => page <= PLAN_ALIGN && PLAN_ALIGN % page == 0,
+        BurstRule::PowerOfTwo { max_bytes } => max_bytes <= PLAN_ALIGN,
+        BurstRule::Unlimited => true,
+    }
+}
+
+/// Queue a row into the chunk queue: whole when small, Init-sourced or
+/// splitting is disabled; otherwise via the (cached) split plan.
+fn fill_chunks(
+    cfg: &OptimizerCfg,
+    cache: &mut PlanCache,
+    chunks: &mut VecDeque<Transfer1D>,
+    hits: &mut u64,
+    misses: &mut u64,
+    row: Transfer1D,
+) {
+    // Init rows are never split: the pattern generator restarts per
+    // transfer, so slicing one would change the generated bytes.
+    let splittable = cfg.max_row_bytes != u64::MAX
+        && row.len > cfg.max_row_bytes
+        && row.src_protocol != ProtocolKind::Init;
+    if !splittable {
+        chunks.push_back(row);
+        return;
+    }
+    let key = PlanKey {
+        src_off: row.src % PLAN_ALIGN,
+        dst_off: row.dst % PLAN_ALIGN,
+        len: row.len,
+        src_protocol: row.src_protocol,
+        dst_protocol: row.dst_protocol,
+    };
+    let plan = match cache.get(&key) {
+        Some(p) => {
+            *hits += 1;
+            p
+        }
+        None => {
+            *misses += 1;
+            let p = plan_chunks(cfg, &key);
+            cache.put(key, p.clone());
+            p
+        }
+    };
+    let mut off = 0u64;
+    for &c in &plan {
+        chunks.push_back(Transfer1D { src: row.src + off, dst: row.dst + off, len: c, ..row });
+        off += c;
+    }
+    debug_assert_eq!(off, row.len, "split plan must cover the row exactly");
+}
+
+/// One in-flight job being expanded.
+#[derive(Debug)]
+struct Expansion {
+    job: u64,
+    class: crate::qos::TrafficClass,
+    inner: Transfer1D,
+    dims: Vec<crate::transfer::NdDim>,
+    idx: Vec<u64>,
+    walked: bool,
+    chunks: VecDeque<Transfer1D>,
+    rows_in: u64,
+    rows_out: u64,
+    fused_rows: u64,
+    fused_bytes: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+impl Expansion {
+    /// Next canonical row in reference-enumeration order (innermost
+    /// dimension fastest); `None` once the odometer has wrapped.
+    fn next_row(&mut self) -> Option<Transfer1D> {
+        if self.walked {
+            return None;
+        }
+        let mut src = self.inner.src as i128;
+        let mut dst = self.inner.dst as i128;
+        for (i, d) in self.dims.iter().enumerate() {
+            src += d.src_stride as i128 * self.idx[i] as i128;
+            dst += d.dst_stride as i128 * self.idx[i] as i128;
+        }
+        let mut k = 0;
+        loop {
+            if k == self.dims.len() {
+                self.walked = true;
+                break;
+            }
+            self.idx[k] += 1;
+            if self.idx[k] < self.dims[k].reps {
+                break;
+            }
+            self.idx[k] = 0;
+            k += 1;
+        }
+        Some(Transfer1D { src: src as u64, dst: dst as u64, ..self.inner })
+    }
+}
+
+/// The access-pattern optimizer mid-end: canonicalizes ND descriptors
+/// (see the module docs) and expands them one row — or one split chunk
+/// — per cycle. A functional superset of [`super::TensorNd`]: with
+/// fusion and splitting disabled it degrades to exactly the dense row
+/// walk.
+#[derive(Debug)]
+pub struct PatternOptimizer {
+    cfg: OptimizerCfg,
+    inq: Fifo<NdJob>,
+    active: Option<Expansion>,
+    out: Fifo<NdJob>,
+    cache: PlanCache,
+    stats: OptStats,
+    probe: Probe,
+}
+
+impl PatternOptimizer {
+    /// Create an optimizer with the given configuration.
+    pub fn new(cfg: OptimizerCfg) -> Self {
+        Self {
+            cfg,
+            inq: Fifo::new(2),
+            active: None,
+            out: Fifo::new(2),
+            cache: PlanCache::new(cfg.cache_entries),
+            stats: OptStats::default(),
+            probe: Probe::none(),
+        }
+    }
+
+    /// Lifetime counters (rows in/out, fusion, plan-cache hits).
+    pub fn stats(&self) -> OptStats {
+        self.stats
+    }
+
+    /// The active configuration.
+    pub fn cfg(&self) -> OptimizerCfg {
+        self.cfg
+    }
+
+    fn pump(&mut self, now: Cycle) {
+        // Load and canonicalize the next job.
+        if self.active.is_none() {
+            if let Some(j) = self.inq.pop(now) {
+                let rows_in = j.nd.num_inner();
+                let (nd, fused_rows, fused_bytes) =
+                    canonicalize(&j.nd, self.cfg.collapse, self.cfg.fuse);
+                debug_assert!(nd.dims.len() <= self.cfg.max_dims);
+                if fused_rows > 0 {
+                    self.probe.emit(TelemetryEvent::RowsCoalesced {
+                        job: j.job,
+                        rows: fused_rows,
+                        bytes: fused_bytes,
+                        at: now,
+                    });
+                }
+                self.active = Some(Expansion {
+                    job: j.job,
+                    class: j.class,
+                    inner: nd.inner,
+                    idx: vec![0; nd.dims.len()],
+                    dims: nd.dims,
+                    walked: false,
+                    chunks: VecDeque::new(),
+                    rows_in,
+                    rows_out: 0,
+                    fused_rows,
+                    fused_bytes,
+                    cache_hits: 0,
+                    cache_misses: 0,
+                });
+            }
+        }
+        // Emit one chunk per cycle.
+        if let Some(exp) = self.active.as_mut() {
+            if self.out.can_push() {
+                if exp.chunks.is_empty() && !exp.walked {
+                    if let Some(row) = exp.next_row() {
+                        fill_chunks(
+                            &self.cfg,
+                            &mut self.cache,
+                            &mut exp.chunks,
+                            &mut exp.cache_hits,
+                            &mut exp.cache_misses,
+                            row,
+                        );
+                    }
+                }
+                if let Some(t) = exp.chunks.pop_front() {
+                    exp.rows_out += 1;
+                    let j = NdJob::new(exp.job, NdTransfer::d1(t)).with_class(exp.class);
+                    if self.cfg.zero_latency {
+                        self.out.push_visible(now, j);
+                    } else {
+                        self.out.push(now, j);
+                    }
+                }
+                if exp.walked && exp.chunks.is_empty() {
+                    let exp = self.active.take().expect("active expansion");
+                    self.finish(now, exp);
+                }
+            }
+        }
+    }
+
+    fn finish(&mut self, now: Cycle, exp: Expansion) {
+        self.stats.jobs += 1;
+        self.stats.rows_in += exp.rows_in;
+        self.stats.rows_out += exp.rows_out;
+        self.stats.fused_rows += exp.fused_rows;
+        self.stats.fused_bytes += exp.fused_bytes;
+        self.stats.cache_hits += exp.cache_hits;
+        self.stats.cache_misses += exp.cache_misses;
+        self.probe.emit(TelemetryEvent::PatternFused {
+            job: exp.job,
+            rows_in: exp.rows_in,
+            rows_out: exp.rows_out,
+            cache_hits: exp.cache_hits,
+            cache_misses: exp.cache_misses,
+            at: now,
+        });
+    }
+}
+
+impl MidEnd for PatternOptimizer {
+    fn name(&self) -> &'static str {
+        "pattern_opt"
+    }
+
+    fn can_accept(&self) -> bool {
+        self.inq.can_push()
+    }
+
+    fn accept(&mut self, now: Cycle, j: NdJob) -> bool {
+        if j.nd.dims.len() > self.cfg.max_dims {
+            return false;
+        }
+        if self.cfg.zero_latency {
+            if !self.inq.can_push() {
+                return false;
+            }
+            let ok = self.inq.push_visible(now, j);
+            self.pump(now);
+            ok
+        } else {
+            self.inq.push(now, j)
+        }
+    }
+
+    fn tick(&mut self, now: Cycle) {
+        self.pump(now);
+    }
+
+    fn set_probe(&mut self, probe: Probe) {
+        self.probe = probe;
+    }
+
+    fn pop_port(&mut self, now: Cycle, port: usize) -> Option<NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.pop(now)
+    }
+
+    fn peek_port(&self, now: Cycle, port: usize) -> Option<&NdJob> {
+        debug_assert_eq!(port, 0);
+        self.out.peek(now)
+    }
+
+    fn busy(&self) -> bool {
+        !self.inq.is_empty() || self.active.is_some() || !self.out.is_empty()
+    }
+
+    fn added_latency(&self) -> u64 {
+        if self.cfg.zero_latency {
+            0
+        } else {
+            1
+        }
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer::NdDim;
+
+    fn nd(len: u64, dims: &[(i64, i64, u64)]) -> NdTransfer {
+        let inner = Transfer1D::copy(0, 0x1000, 0x8000, len, ProtocolKind::Axi4);
+        let mut nd = NdTransfer::d1(inner);
+        for &(s, d, r) in dims {
+            nd.dims.push(NdDim { src_stride: s, dst_stride: d, reps: r });
+        }
+        nd
+    }
+
+    /// Flatten a row list into its (dst byte ← src byte) mapping in
+    /// emission order — the conformance currency of this module.
+    fn byte_map(rows: &[Transfer1D]) -> Vec<(u64, u64)> {
+        rows.iter()
+            .flat_map(|t| (0..t.len).map(move |i| (t.dst.wrapping_add(i), t.src.wrapping_add(i))))
+            .collect()
+    }
+
+    /// Expand a job through a mid-end, collecting all emitted 1D rows.
+    fn drive(me: &mut dyn MidEnd, j: NdJob, max_cycles: u64) -> Vec<Transfer1D> {
+        let mut out = Vec::new();
+        let mut offered = Some(j);
+        for now in 0..max_cycles {
+            me.tick(now);
+            if let Some(jj) = offered.take() {
+                if !me.accept(now, jj.clone()) {
+                    offered = Some(jj);
+                }
+            }
+            if let Some(o) = me.pop(now) {
+                assert!(o.nd.dims.is_empty(), "outputs must be 1D");
+                out.push(o.nd.inner);
+            }
+            if offered.is_none() && !me.busy() {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fuses_unit_stride_inner_dimension() {
+        let x = nd(16, &[(16, 16, 4)]);
+        let (c, fused_rows, fused_bytes) = canonicalize(&x, true, true);
+        assert!(c.dims.is_empty());
+        assert_eq!(c.inner.len, 64);
+        assert_eq!(fused_rows, 3);
+        assert_eq!(fused_bytes, 48);
+        assert_eq!(byte_map(&x.enumerate()), byte_map(&c.enumerate()));
+    }
+
+    #[test]
+    fn collapses_degenerate_dimensions() {
+        let x = nd(32, &[(64, 32, 1), (256, 128, 3), (0, 0, 0)]);
+        let (c, _, _) = canonicalize(&x, true, true);
+        assert_eq!(c.dims, vec![NdDim { src_stride: 256, dst_stride: 128, reps: 3 }]);
+        assert_eq!(byte_map(&x.enumerate()), byte_map(&c.enumerate()));
+    }
+
+    #[test]
+    fn merges_exactly_continuing_adjacent_dimensions() {
+        let x = nd(16, &[(256, 16, 4), (1024, 64, 3)]);
+        let (c, fused_rows, _) = canonicalize(&x, true, true);
+        assert_eq!(c.dims, vec![NdDim { src_stride: 256, dst_stride: 16, reps: 12 }]);
+        assert_eq!(fused_rows, 0, "merge changes no row count");
+        assert_eq!(byte_map(&x.enumerate()), byte_map(&c.enumerate()));
+    }
+
+    #[test]
+    fn merge_then_fuse_collapses_contiguous_3d() {
+        // Fully contiguous on both sides at every level: canonical form
+        // is a single 1D row covering all the bytes.
+        let x = nd(16, &[(16, 16, 4), (64, 64, 3)]);
+        let (c, fused_rows, fused_bytes) = canonicalize(&x, true, true);
+        assert!(c.dims.is_empty(), "canonical: {:?}", c.dims);
+        assert_eq!(c.inner.len, 16 * 4 * 3);
+        assert_eq!(fused_rows, 11);
+        assert_eq!(fused_bytes, 16 * 11);
+        assert_eq!(byte_map(&x.enumerate()), byte_map(&c.enumerate()));
+    }
+
+    #[test]
+    fn non_contiguous_patterns_untouched() {
+        // Strided source: nothing fuses, nothing merges.
+        let x = nd(48, &[(64, 48, 8)]);
+        let (c, fused_rows, fused_bytes) = canonicalize(&x, true, true);
+        assert_eq!(c, x);
+        assert_eq!((fused_rows, fused_bytes), (0, 0));
+        // One-sided contiguity must not fuse either.
+        let y = nd(48, &[(48, 64, 8)]);
+        let (cy, f, _) = canonicalize(&y, true, true);
+        assert_eq!(cy, y);
+        assert_eq!(f, 0);
+    }
+
+    #[test]
+    fn negative_and_overlapping_strides_preserved() {
+        for dims in [
+            vec![(-64i64, 32i64, 5u64)],
+            vec![(8, 32, 4)],  // overlapping source reads
+            vec![(0, 48, 3)],  // degenerate source broadcast
+            vec![(-16, 16, 4), (128, 64, 2)],
+        ] {
+            let x = nd(16, &dims);
+            let (c, _, _) = canonicalize(&x, true, true);
+            assert_eq!(byte_map(&x.enumerate()), byte_map(&c.enumerate()), "dims {dims:?}");
+        }
+    }
+
+    #[test]
+    fn optimizer_stream_byte_identical_to_dense() {
+        for dims in [
+            vec![(16i64, 16i64, 8u64)],
+            vec![(256, 16, 4), (1024, 64, 3)],
+            vec![(-32, 16, 4)],
+            vec![],
+        ] {
+            let x = nd(16, &dims);
+            let j = NdJob::new(7, x.clone());
+            let mut opt = PatternOptimizer::new(OptimizerCfg::default());
+            let got = drive(&mut opt, j, 1000);
+            assert_eq!(byte_map(&got), byte_map(&x.enumerate()), "dims {dims:?}");
+            assert!(got.len() <= x.num_inner() as usize, "never more rows than dense");
+        }
+    }
+
+    #[test]
+    fn zero_latency_first_row_same_cycle() {
+        let j = NdJob::new(3, nd(16, &[(16, 16, 2)]));
+        let mut opt = PatternOptimizer::new(OptimizerCfg::default());
+        assert_eq!(opt.added_latency(), 0);
+        assert!(opt.accept(5, j));
+        assert!(opt.pop(5).is_some(), "zero-latency config must pass through combinationally");
+        assert!(!opt.busy(), "fully fused 2D is one row");
+    }
+
+    #[test]
+    fn rejects_too_many_dims() {
+        let j = NdJob::new(1, nd(8, &[(1, 1, 2), (1, 1, 2), (1, 1, 2), (1, 1, 2)]));
+        let mut opt = PatternOptimizer::new(OptimizerCfg::default());
+        assert!(!opt.accept(0, j));
+    }
+
+    #[test]
+    fn splitting_respects_cap_and_page_boundaries() {
+        let cfg = OptimizerCfg { max_row_bytes: 4096, bus_bytes: 8, ..Default::default() };
+        let mut opt = PatternOptimizer::new(cfg);
+        // A fused 16 KiB mega-row, unaligned start.
+        let mut x = nd(4096, &[(4096, 4096, 4)]);
+        x.inner.src = 0x1020;
+        x.inner.dst = 0x8040;
+        let j = NdJob::new(1, x.clone());
+        let got = drive(&mut opt, j, 1000);
+        assert!(got.len() > 1, "mega-row must be split");
+        for t in &got {
+            assert!(t.len <= 4096 + 8, "chunk near the cap: {}", t.len);
+        }
+        assert_eq!(byte_map(&got), byte_map(&x.enumerate()));
+        let s = opt.stats();
+        assert_eq!(s.cache_misses, 1, "one plan computed for the single mega-row");
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeated_alignment_class() {
+        let cfg =
+            OptimizerCfg { max_row_bytes: 2048, bus_bytes: 8, fuse: false, ..Default::default() };
+        let mut opt = PatternOptimizer::new(cfg);
+        // 6 rows of 8 KiB whose strides are page multiples: every row
+        // shares one (src_off, dst_off, len) alignment class.
+        let x = nd(8192, &[(16384, 16384, 6)]);
+        let j = NdJob::new(1, x.clone());
+        let got = drive(&mut opt, j, 10_000);
+        assert_eq!(byte_map(&got), byte_map(&x.enumerate()));
+        let s = opt.stats();
+        assert_eq!(s.cache_misses, 1, "first row computes the plan");
+        assert_eq!(s.cache_hits, 5, "remaining rows reuse it");
+        assert!(s.cache_hit_rate() > 0.8);
+    }
+
+    #[test]
+    fn stats_track_rows_and_fusion() {
+        let x = nd(16, &[(16, 16, 8)]);
+        let j = NdJob::new(1, x);
+        let mut opt = PatternOptimizer::new(OptimizerCfg::default());
+        let got = drive(&mut opt, j, 100);
+        assert_eq!(got.len(), 1);
+        let s = opt.stats();
+        assert_eq!((s.jobs, s.rows_in, s.rows_out), (1, 8, 1));
+        assert_eq!(s.fused_rows, 7);
+        assert_eq!(s.fused_bytes, 16 * 7);
+    }
+
+    #[test]
+    fn telemetry_events_emitted_once_per_job() {
+        use crate::telemetry::{shared, Recorder};
+        let rec = shared(Recorder::new());
+        let mut opt = PatternOptimizer::new(OptimizerCfg::default());
+        opt.set_probe(Probe::attached(rec.clone()));
+        let j = NdJob::new(9, nd(32, &[(32, 32, 4)]));
+        drive(&mut opt, j, 100);
+        let s = rec.borrow().summary();
+        assert_eq!((s.rows_in, s.rows_out), (4, 1));
+        assert_eq!(s.fused_bytes, 96);
+        let r = rec.borrow();
+        let fused = r
+            .events()
+            .iter()
+            .filter(|e| matches!(e, TelemetryEvent::PatternFused { .. }))
+            .count();
+        let coalesced = r
+            .events()
+            .iter()
+            .filter(|e| matches!(e, TelemetryEvent::RowsCoalesced { .. }))
+            .count();
+        assert_eq!((fused, coalesced), (1, 1));
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let mk = || {
+            let cfg = OptimizerCfg { max_row_bytes: 1024, bus_bytes: 8, ..Default::default() };
+            let mut opt = PatternOptimizer::new(cfg);
+            let j = NdJob::new(1, nd(2048, &[(2048, 2048, 3), (8192, 8192, 2)]));
+            (drive(&mut opt, j, 10_000), opt.stats())
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -158,6 +158,12 @@ impl BenchJson {
             .int("telemetry_tlb_misses", s.tlb_misses)
             .int("telemetry_ptw_beats", s.ptw_beats)
             .int("telemetry_page_faults", s.page_faults)
+            .int("telemetry_rows_in", s.rows_in)
+            .int("telemetry_rows_out", s.rows_out)
+            .int("telemetry_fused_bytes", s.fused_bytes)
+            .int("telemetry_opt_cache_hits", s.opt_cache_hits)
+            .int("telemetry_opt_cache_misses", s.opt_cache_misses)
+            .num("telemetry_opt_cache_hit_rate", s.opt_cache_hit_rate())
             .int("telemetry_cycles", s.cycles());
         for c in &s.classes {
             let n = c.class;

@@ -120,6 +120,85 @@ impl Cheshire {
         sys
     }
 
+    /// Dense ND baseline: [`Cheshire::system`]'s backend and DRAM
+    /// endpoint with a plain [`crate::midend::TensorNd`] (up to 4 total
+    /// dimensions, zero-latency) and direct submission. The reference
+    /// half of every differential optimizer test — identical hardware
+    /// to [`Cheshire::optimized_system`], no rewriting.
+    pub fn dense_system(&self) -> IdmaSystem {
+        use crate::midend::{MidEnd, TensorNd};
+        let mids: Vec<Box<dyn MidEnd>> = vec![Box::new(TensorNd::new(3, true))];
+        let engine = IdmaEngine::new(mids, self.backend());
+        let mems = vec![Endpoint::new(MemModel::custom(
+            "dram",
+            self.mem_latency,
+            self.nax.max(16),
+            self.dw,
+        ))];
+        IdmaSystem::new(engine, mems)
+    }
+
+    /// Access-pattern-optimized variant of [`Cheshire::dense_system`]:
+    /// the same backend and DRAM endpoint with a
+    /// [`crate::midend::PatternOptimizer`] in place of the dense
+    /// `tensor_ND` — contiguous ND patterns are fused into longer rows
+    /// before legalization. Byte-identical to the dense system on every
+    /// pattern; faster on fusable ones.
+    pub fn optimized_system(&self) -> IdmaSystem {
+        use crate::midend::{MidEnd, OptimizerCfg, PatternOptimizer};
+        let cfg = OptimizerCfg { bus_bytes: self.dw, ..Default::default() };
+        let mids: Vec<Box<dyn MidEnd>> = vec![Box::new(PatternOptimizer::new(cfg))];
+        let engine = IdmaEngine::new(mids, self.backend());
+        let mems = vec![Endpoint::new(MemModel::custom(
+            "dram",
+            self.mem_latency,
+            self.nax.max(16),
+            self.dw,
+        ))];
+        IdmaSystem::new(engine, mems)
+    }
+
+    /// [`Cheshire::virtual_system`] with the access-pattern optimizer in
+    /// front of the MMU: ND descriptors are fused before translation, so
+    /// fewer (longer) rows cross the IOTLB. Returns the facade plus the
+    /// page-table builder, like [`Cheshire::virtual_system`] (no
+    /// scatter/gather stage — the optimizer consumes affine patterns).
+    pub fn optimized_virtual_system(&self) -> (IdmaSystem, crate::vm::PageTable) {
+        use crate::midend::{MidEnd, OptimizerCfg, PatternOptimizer};
+        use crate::vm::{IotlbCfg, Mmu, MmuCfg, PageTable};
+        let be = Backend::new(BackendCfg {
+            aw_bits: 64,
+            dw_bytes: self.dw,
+            nax_r: self.nax,
+            nax_w: self.nax,
+            error_handling: true,
+            ports: vec![PortCfg { protocol: ProtocolKind::Axi4, mem: 0 }],
+            desc_depth: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let pt = PageTable::new(0x4000_0000, 12, 2);
+        let cfg = OptimizerCfg { bus_bytes: self.dw, ..Default::default() };
+        let mids: Vec<Box<dyn MidEnd>> = vec![
+            Box::new(PatternOptimizer::new(cfg)),
+            Box::new(Mmu::new(MmuCfg {
+                iotlb: IotlbCfg { sets: 8, ways: 2, page_bits: 12 },
+                root: pt.root(),
+                levels: 2,
+                pt_port: 0,
+                ..Default::default()
+            })),
+        ];
+        let engine = IdmaEngine::new(mids, be);
+        let mems = vec![Endpoint::new(MemModel::custom(
+            "dram",
+            self.mem_latency,
+            self.nax.max(16),
+            self.dw,
+        ))];
+        (IdmaSystem::new(engine, mems), pt)
+    }
+
     /// Irregular-transfer variant: the same DRAM endpoint behind a
     /// [`crate::midend::ScatterGather`] mid-end (index lists fetched
     /// through port 0) feeding a [`crate::vm::Mmu`] that translates the

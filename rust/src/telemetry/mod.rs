@@ -201,6 +201,36 @@ pub enum TelemetryEvent {
         /// Retirement cycle.
         at: Cycle,
     },
+    /// The [`crate::midend::PatternOptimizer`] finished rewriting one
+    /// job's ND descriptor: the canonicalized pattern was fully
+    /// expanded into its emitted 1D row stream.
+    PatternFused {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Rows the dense (unoptimized) expansion would have emitted.
+        rows_in: u64,
+        /// Rows actually emitted after fusion / collapse / splitting.
+        rows_out: u64,
+        /// Legalization-plan cache hits while expanding this job.
+        cache_hits: u64,
+        /// Legalization-plan cache misses while expanding this job.
+        cache_misses: u64,
+        /// Cycle the last row of the job left the optimizer.
+        at: Cycle,
+    },
+    /// The optimizer coalesced a run of contiguous rows of a job into
+    /// one longer row (unit-stride fusion or adjacent-dimension merge).
+    RowsCoalesced {
+        /// Facade-tagged job ID.
+        job: u64,
+        /// Rows absorbed into longer neighbours (rows_in - rows_out
+        /// attributable to fusion, before any boundary splitting).
+        rows: u64,
+        /// Payload bytes those absorbed rows carried.
+        bytes: u64,
+        /// Cycle the fused descriptor was canonicalized.
+        at: Cycle,
+    },
 }
 
 /// Receiver of [`TelemetryEvent`]s. Implemented by [`Recorder`]; user
@@ -285,7 +315,9 @@ impl Probe {
                 | TelemetryEvent::TlbMiss { job, .. }
                 | TelemetryEvent::PageFaulted { job, .. }
                 | TelemetryEvent::JobClassified { job, .. }
-                | TelemetryEvent::QosRetired { job, .. } => *job |= self.tag,
+                | TelemetryEvent::QosRetired { job, .. }
+                | TelemetryEvent::PatternFused { job, .. }
+                | TelemetryEvent::RowsCoalesced { job, .. } => *job |= self.tag,
                 _ => {}
             }
         }

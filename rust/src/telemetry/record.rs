@@ -99,6 +99,18 @@ pub struct RunSummary {
     pub ptw_beats: u64,
     /// Translation faults raised ([`TelemetryEvent::PageFaulted`]).
     pub page_faults: u64,
+    /// Rows the dense expansion of optimizer-handled jobs would have
+    /// emitted ([`TelemetryEvent::PatternFused`]).
+    pub rows_in: u64,
+    /// Rows the [`crate::midend::PatternOptimizer`] actually emitted.
+    pub rows_out: u64,
+    /// Payload bytes absorbed into longer rows by fusion
+    /// ([`TelemetryEvent::RowsCoalesced`]).
+    pub fused_bytes: u64,
+    /// Optimizer legalization-plan cache hits.
+    pub opt_cache_hits: u64,
+    /// Optimizer legalization-plan cache misses.
+    pub opt_cache_misses: u64,
     /// Earliest submit cycle.
     pub first_submit: Option<Cycle>,
     /// Latest retire cycle.
@@ -141,6 +153,30 @@ impl RunSummary {
         }
         self.tlb_hits as f64 / n as f64
     }
+
+    /// Optimizer plan-cache lookups (each is exactly one hit or miss).
+    pub fn opt_cache_lookups(&self) -> u64 {
+        self.opt_cache_hits + self.opt_cache_misses
+    }
+
+    /// Optimizer plan-cache hit rate in `[0,1]`; `0.0` when the
+    /// optimizer never consulted the cache.
+    pub fn opt_cache_hit_rate(&self) -> f64 {
+        let n = self.opt_cache_lookups();
+        if n == 0 {
+            return 0.0;
+        }
+        self.opt_cache_hits as f64 / n as f64
+    }
+
+    /// Fraction of dense rows the optimizer eliminated, in `[0,1]`
+    /// (`0.0` when the optimizer saw no jobs).
+    pub fn row_reduction(&self) -> f64 {
+        if self.rows_in == 0 {
+            return 0.0;
+        }
+        1.0 - self.rows_out as f64 / self.rows_in as f64
+    }
 }
 
 /// The built-in [`TelemetrySink`]: aggregates events into per-job
@@ -163,6 +199,11 @@ pub struct Recorder {
     tlb_misses: u64,
     ptw_beats: u64,
     page_faults: u64,
+    rows_in: u64,
+    rows_out: u64,
+    fused_bytes: u64,
+    opt_cache_hits: u64,
+    opt_cache_misses: u64,
     classes: BTreeMap<u8, ClassLatency>,
     job_class: BTreeMap<u64, u8>,
 }
@@ -219,6 +260,11 @@ impl Recorder {
             tlb_misses: self.tlb_misses,
             ptw_beats: self.ptw_beats,
             page_faults: self.page_faults,
+            rows_in: self.rows_in,
+            rows_out: self.rows_out,
+            fused_bytes: self.fused_bytes,
+            opt_cache_hits: self.opt_cache_hits,
+            opt_cache_misses: self.opt_cache_misses,
             ..Default::default()
         };
         for t in self.jobs.values() {
@@ -365,6 +411,17 @@ impl TelemetrySink for Recorder {
                 let t = self.trace(job);
                 t.done = max_opt(t.done, Some(at));
             }
+            TelemetryEvent::PatternFused { job, rows_in, rows_out, cache_hits, cache_misses, .. } => {
+                self.rows_in += rows_in;
+                self.rows_out += rows_out;
+                self.opt_cache_hits += cache_hits;
+                self.opt_cache_misses += cache_misses;
+                self.trace(job);
+            }
+            TelemetryEvent::RowsCoalesced { job, bytes, .. } => {
+                self.fused_bytes += bytes;
+                self.trace(job);
+            }
         }
     }
 }
@@ -496,6 +553,44 @@ mod tests {
         assert_eq!(r.job(1).unwrap().submitted, Some(0));
         assert_eq!(r.job(2).unwrap().done, Some(100));
         assert_eq!(s.cycles(), 100);
+    }
+
+    #[test]
+    fn optimizer_events_aggregate() {
+        let mut r = Recorder::new();
+        feed(
+            &mut r,
+            &[
+                TelemetryEvent::RowsCoalesced { job: 1, rows: 7, bytes: 448, at: 3 },
+                TelemetryEvent::PatternFused {
+                    job: 1,
+                    rows_in: 8,
+                    rows_out: 1,
+                    cache_hits: 0,
+                    cache_misses: 1,
+                    at: 4,
+                },
+                TelemetryEvent::PatternFused {
+                    job: 2,
+                    rows_in: 4,
+                    rows_out: 4,
+                    cache_hits: 3,
+                    cache_misses: 1,
+                    at: 9,
+                },
+            ],
+        );
+        let s = r.summary();
+        assert_eq!((s.rows_in, s.rows_out), (12, 5));
+        assert_eq!(s.fused_bytes, 448);
+        assert_eq!((s.opt_cache_hits, s.opt_cache_misses), (3, 2));
+        assert_eq!(s.opt_cache_lookups(), 5);
+        assert!((s.opt_cache_hit_rate() - 0.6).abs() < 1e-12);
+        assert!((s.row_reduction() - 7.0 / 12.0).abs() < 1e-12);
+        assert!(r.job(1).is_some() && r.job(2).is_some(), "events open traces");
+        let empty = Recorder::new().summary();
+        assert_eq!(empty.opt_cache_hit_rate(), 0.0);
+        assert_eq!(empty.row_reduction(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Shared test support for the integration suites: seeded payload
+//! generation, software copy oracles, differential (event vs exact /
+//! optimized vs dense) run helpers, and small system builders. Each
+//! integration test binary pulls this in with `mod common;` and uses a
+//! subset, hence the file-wide `dead_code` allowance.
+//!
+//! The differential-oracle pattern every new suite should follow (see
+//! the README "Testing guide"): build the *same* scenario twice from
+//! identical seeds, run it through two paths that must agree (the
+//! event-driven core vs the per-cycle reference, or an optimized
+//! configuration vs its dense baseline), then compare complete
+//! observable tuples — final cycle, completion records, destination
+//! bytes — rather than single values, so any divergence names the run
+//! that broke.
+#![allow(dead_code)]
+
+use std::collections::BTreeMap;
+
+use idma::backend::Backend;
+use idma::mem::{Endpoint, MemModel, SparseMemory};
+use idma::midend::NdJob;
+use idma::protocol::ProtocolKind;
+use idma::sim::{Watchdog, XorShift64};
+use idma::system::IdmaSystem;
+use idma::transfer::{NdTransfer, Transfer1D};
+
+/// Per-case seed derivation used by every sharded property sweep: mixes
+/// the case index through a golden-ratio multiply so neighbouring cases
+/// see unrelated streams.
+pub fn case_seed(base: u64, case: u64) -> u64 {
+    base ^ (case + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Deterministic random payload of `len` bytes from `seed`.
+pub fn payload(seed: u64, len: usize) -> Vec<u8> {
+    let mut v = vec![0u8; len];
+    XorShift64::new(seed).fill(&mut v);
+    v
+}
+
+/// A plain 1D AXI4 copy wrapped as a directly submittable job.
+pub fn copy_job(id: u64, src: u64, dst: u64, len: u64) -> NdJob {
+    NdJob::new(id, NdTransfer::d1(Transfer1D::copy(0, src, dst, len, ProtocolKind::Axi4)))
+}
+
+/// Drive a bare back-end to idle under a deadlock watchdog (the
+/// per-cycle loop the backend-level property sweeps use).
+pub fn run_backend_wd(be: &mut Backend, mems: &mut [Endpoint], max: u64) {
+    let mut wd = Watchdog::new(100_000);
+    let mut now = 0;
+    while be.busy() {
+        be.tick(now, mems);
+        now += 1;
+        assert!(now < max, "exceeded {max} cycles");
+        assert!(!wd.check(now, be.fingerprint()), "deadlock at {now}");
+    }
+}
+
+/// Software copy oracle: the destination bytes the reference
+/// enumeration of `nd` must produce, reading every source byte from the
+/// *initial* memory image (callers must keep source and destination
+/// windows disjoint). Later rows overwrite earlier ones on destination
+/// overlap — the same last-write-wins order the in-order engine
+/// produces.
+pub fn oracle_copy(nd: &NdTransfer, img: &SparseMemory) -> BTreeMap<u64, u8> {
+    let mut out = BTreeMap::new();
+    for t in nd.enumerate() {
+        let bytes = img.read_vec(t.src, t.len as usize);
+        for (i, b) in bytes.iter().enumerate() {
+            out.insert(t.dst + i as u64, *b);
+        }
+    }
+    out
+}
+
+/// The (destination byte ← source byte) address mapping of `nd`'s
+/// reference enumeration, last write winning. Two descriptors with
+/// equal maps move identical data no matter how their rows are cut.
+pub fn byte_map(nd: &NdTransfer) -> BTreeMap<u64, u64> {
+    let mut m = BTreeMap::new();
+    for t in nd.enumerate() {
+        for i in 0..t.len {
+            m.insert(t.dst.wrapping_add(i), t.src.wrapping_add(i));
+        }
+    }
+    m
+}
+
+/// Run a closure once per driver — `f(false)` event-driven, `f(true)`
+/// per-cycle exact — returning `(event, exact)` observables.
+pub fn diff_drivers<T>(f: impl Fn(bool) -> T) -> (T, T) {
+    (f(false), f(true))
+}
+
+/// [`diff_drivers`] + full-tuple equality: the standard "drivers must
+/// not diverge" assertion.
+pub fn assert_event_exact_agree<T: PartialEq + std::fmt::Debug>(
+    label: &str,
+    f: impl Fn(bool) -> T,
+) {
+    let (ev, ex) = diff_drivers(f);
+    assert_eq!(ev, ex, "{label}: event-driven and exact drivers diverge");
+}
+
+/// Run the same prepared system through both drivers and assert cycle-
+/// and byte-identical observables. `build` must produce identical
+/// systems; `dsts` lists the (addr, len) windows to compare. Returns
+/// the shared final cycle and the event driver's executed tick count.
+pub fn assert_system_equivalent(
+    label: &str,
+    build: &dyn Fn() -> IdmaSystem,
+    dsts: &[(u64, usize)],
+) -> (u64, u64) {
+    let mut a = build();
+    let mut b = build();
+    let end_a = a.run_until_idle_exact();
+    let end_b = b.run_until_idle();
+    assert_eq!(end_a, end_b, "{label}: final cycle differs (exact {end_a} vs event {end_b})");
+    assert_eq!(a.take_done(), b.take_done(), "{label}: completion logs differ");
+    for (i, &(addr, len)) in dsts.iter().enumerate() {
+        assert_eq!(
+            a.mems[0].data.read_vec(addr, len),
+            b.mems[0].data.read_vec(addr, len),
+            "{label}: destination window {i} differs"
+        );
+    }
+    for i in 0..a.num_frontends() {
+        assert_eq!(
+            a.frontend_dyn(i).status(),
+            b.frontend_dyn(i).status(),
+            "{label}: front-end {i} status differs"
+        );
+    }
+    (end_b, b.ticks())
+}
+
+/// A facade over a single high-latency endpoint — the standard
+/// latency-bound system the facade differential tests run against.
+pub fn latent_system(latency: u64, dw: u64, nax: usize, tensor: usize) -> IdmaSystem {
+    let mut builder = idma::engine::EngineBuilder::new(32, dw, nax);
+    if tensor > 1 {
+        builder = builder.tensor(tensor);
+    }
+    let engine = builder.build().unwrap();
+    IdmaSystem::new(engine, vec![Endpoint::new(MemModel::custom("m", latency, 16, dw))])
+}

@@ -4,6 +4,10 @@
 //! conservation, page-fault surfacing, supervised demand paging, and
 //! parameterized IOTLB property sweeps.
 
+mod common;
+
+use common::payload;
+
 use idma::mem::SparseMemory;
 use idma::midend::{NdJob, ScatterGather, SgConfig, SgMode};
 use idma::protocol::ProtocolKind;
@@ -31,8 +35,7 @@ const PAGE: u64 = 4096;
 /// `SRC_VA` and `dst_span` bytes of destination mapped at `DST_VA`.
 fn vm_setup(src_span: u64, dst_span: u64, seed: u64) -> (IdmaSystem, Vec<u8>) {
     let (mut sys, mut pt) = Cheshire::default().virtual_system();
-    let mut src = vec![0u8; src_span as usize];
-    XorShift64::new(seed).fill(&mut src);
+    let src = payload(seed, src_span as usize);
     sys.mems[0].data.write(SRC_PA, &src);
     for off in (0..src_span.div_ceil(PAGE) * PAGE).step_by(PAGE as usize) {
         pt.map(&mut sys.mems[0].data, SRC_VA + off, SRC_PA + off);
@@ -83,9 +86,7 @@ fn gather_matches_oracle_event_and_exact() {
         let src_span = (p.max_index() + 1) * p.elem_len;
         let want = {
             let mut m = SparseMemory::new();
-            let mut src = vec![0u8; src_span as usize];
-            XorShift64::new(seed ^ 0xDA7A).fill(&mut src);
-            m.write(SRC_PA, &src);
+            m.write(SRC_PA, &payload(seed ^ 0xDA7A, src_span as usize));
             p.oracle_gather(&m, SRC_PA)
         };
 
@@ -116,9 +117,7 @@ fn scatter_matches_oracle() {
     let dst_span = (p.max_index() + 1) * p.elem_len;
     let want = {
         let mut m = SparseMemory::new();
-        let mut src = vec![0u8; src_span as usize];
-        XorShift64::new(0xABCD).fill(&mut src);
-        m.write(SRC_PA, &src);
+        m.write(SRC_PA, &payload(0xABCD, src_span as usize));
         p.oracle_scatter(&m, SRC_PA, DST_PA, dst_span as usize)
     };
     for exact in [false, true] {
@@ -193,8 +192,7 @@ fn page_fault_reports_faulting_va() {
     let bytes = 2 * PAGE;
     let (mut sys, _) = {
         let (mut sys, mut pt) = Cheshire::default().virtual_system();
-        let mut src = vec![0u8; bytes as usize];
-        XorShift64::new(9).fill(&mut src);
+        let src = payload(9, bytes as usize);
         sys.mems[0].data.write(SRC_PA, &src);
         for off in (0..bytes).step_by(PAGE as usize) {
             pt.map(&mut sys.mems[0].data, SRC_VA + off, SRC_PA + off);
@@ -224,8 +222,7 @@ fn page_fault_reports_faulting_va() {
 fn supervisor_maps_page_and_replays() {
     let bytes = 2 * PAGE;
     let (mut sys, mut pt) = Cheshire::default().virtual_system();
-    let mut src = vec![0u8; bytes as usize];
-    XorShift64::new(0xFEED).fill(&mut src);
+    let src = payload(0xFEED, bytes as usize);
     sys.mems[0].data.write(SRC_PA, &src);
     for off in (0..bytes).step_by(PAGE as usize) {
         pt.map(&mut sys.mems[0].data, SRC_VA + off, SRC_PA + off);

@@ -3,28 +3,21 @@
 //! available in this offline environment; DESIGN.md §5 lists the
 //! invariants exercised here).
 
+mod common;
+
+use common::{case_seed, run_backend_wd as run_backend};
+
 use idma::backend::{Backend, BackendCfg, Legalizer, PortCfg};
 use idma::engine::EngineBuilder;
 use idma::mem::{Endpoint, ErrorInjector, MemModel};
 use idma::midend::NdJob;
 use idma::protocol::{BurstRule, ProtocolKind};
-use idma::sim::{sweep, Watchdog, XorShift64};
+use idma::sim::{sweep, XorShift64};
 use idma::systems::common::{
     run_backend as drive_event, run_backend_exact as drive_exact, run_backend_instrumented,
     run_engine as drive_engine_event, run_engine_exact as drive_engine_exact,
 };
 use idma::transfer::{ErrorAction, NdDim, NdTransfer, Transfer1D};
-
-fn run_backend(be: &mut Backend, mems: &mut [Endpoint], max: u64) {
-    let mut wd = Watchdog::new(100_000);
-    let mut now = 0;
-    while be.busy() {
-        be.tick(now, mems);
-        now += 1;
-        assert!(now < max, "exceeded {max} cycles");
-        assert!(!wd.check(now, be.fingerprint()), "deadlock at {now}");
-    }
-}
 
 /// Property: any 1D transfer between any protocol pair at any alignment
 /// is byte-exact (invariant 1 of DESIGN.md §5). The 60 cases are
@@ -33,7 +26,7 @@ fn run_backend(be: &mut Backend, mems: &mut [Endpoint], max: u64) {
 fn prop_random_transfers_byte_exact() {
     let cases: Vec<u64> = (0..60).collect();
     sweep::sweep_default(&cases, |_, &case| {
-        let mut rng = XorShift64::new(0xBEEF ^ (case + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = XorShift64::new(case_seed(0xBEEF, case));
         let protos = [
             ProtocolKind::Axi4,
             ProtocolKind::Obi,
@@ -664,7 +657,7 @@ fn prop_event_driven_matches_per_cycle() {
 fn prop_event_driven_matches_per_cycle_with_faults() {
     let cases: Vec<u64> = (0..12).collect();
     sweep::sweep_default(&cases, |_, &case| {
-        let mut rng = XorShift64::new(0xFA17 ^ (case + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = XorShift64::new(case_seed(0xFA17, case));
         let len = 256 + rng.below(1500);
         let latency = 1 + rng.below(120);
         let action = [ErrorAction::Replay, ErrorAction::Continue, ErrorAction::Abort]
@@ -818,6 +811,7 @@ fn init_behind_copy_keeps_stream_order() {
 // run_until_idle vs the per-cycle run_until_idle_exact oracle)
 // ---------------------------------------------------------------------
 
+use common::{assert_system_equivalent, latent_system};
 use idma::engine::IdmaEngine;
 use idma::frontend::{
     decode, encode, regs, write_descriptor, DescFlags, DescFrontend, InstFrontend, Opcode,
@@ -825,46 +819,6 @@ use idma::frontend::{
 };
 use idma::midend::{MidEnd, Rt3D, Rt3DConfig, TensorNd};
 use idma::system::IdmaSystem;
-
-/// Run the same prepared system through both drivers and assert cycle-
-/// and byte-identical observables. `build` must produce identical
-/// systems; `dsts` lists the (addr, len) windows to compare.
-fn assert_system_equivalent(
-    label: &str,
-    build: &dyn Fn() -> IdmaSystem,
-    dsts: &[(u64, usize)],
-) -> (u64, u64) {
-    let mut a = build();
-    let mut b = build();
-    let end_a = a.run_until_idle_exact();
-    let end_b = b.run_until_idle();
-    assert_eq!(end_a, end_b, "{label}: final cycle differs (exact {end_a} vs event {end_b})");
-    assert_eq!(a.take_done(), b.take_done(), "{label}: completion logs differ");
-    for (i, &(addr, len)) in dsts.iter().enumerate() {
-        assert_eq!(
-            a.mems[0].data.read_vec(addr, len),
-            b.mems[0].data.read_vec(addr, len),
-            "{label}: destination window {i} differs"
-        );
-    }
-    for i in 0..a.num_frontends() {
-        assert_eq!(
-            a.frontend_dyn(i).status(),
-            b.frontend_dyn(i).status(),
-            "{label}: front-end {i} status differs"
-        );
-    }
-    (end_b, b.ticks())
-}
-
-fn latent_system(latency: u64, dw: u64, nax: usize, tensor: usize) -> IdmaSystem {
-    let mut builder = idma::engine::EngineBuilder::new(32, dw, nax);
-    if tensor > 1 {
-        builder = builder.tensor(tensor);
-    }
-    let engine = builder.build().unwrap();
-    IdmaSystem::new(engine, vec![Endpoint::new(MemModel::custom("m", latency, 16, dw))])
-}
 
 /// Acceptance scenario 1: a reg_32_3d-driven 2D transfer.
 #[test]

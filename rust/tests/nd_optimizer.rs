@@ -1,0 +1,322 @@
+//! Differential conformance harness for the access-pattern optimizer
+//! mid-end ([`idma::midend::PatternOptimizer`]).
+//!
+//! The load-bearing property: for *any* ND descriptor — overlapping,
+//! degenerate, negative or zero source strides, any protocol pairing,
+//! any bus width — a run with the optimizer enabled is byte-identical
+//! to the dense `tensor_ND` run and to the software oracle, and never
+//! slower. Randomized cases are sharded with [`idma::sim::sweep`] and
+//! the whole sweep is re-run at two thread counts to pin
+//! thread-count-invariant results. Composition tests cover the QoS
+//! chunk scheduler and the MMU paging path in front of / behind the
+//! optimizer.
+
+mod common;
+
+use common::{case_seed, oracle_copy, payload};
+
+use idma::backend::{Backend, BackendCfg, PortCfg};
+use idma::engine::IdmaEngine;
+use idma::mem::{Endpoint, MemModel, SparseMemory};
+use idma::midend::{MidEnd, NdJob, OptimizerCfg, PatternOptimizer, TensorNd};
+use idma::protocol::ProtocolKind;
+use idma::qos::{ClassConfig, QosPolicy, QosScheduler, TrafficClass};
+use idma::sim::sweep;
+use idma::sim::XorShift64;
+use idma::system::IdmaSystem;
+use idma::systems::cheshire::Cheshire;
+use idma::telemetry::{shared, Recorder};
+use idma::transfer::{NdDim, NdTransfer, Transfer1D};
+
+/// Source window base: high enough that bounded negative strides never
+/// underflow the address space.
+const SRC_REGION: u64 = 0x0010_0000;
+/// Destination window base, disjoint from every reachable source byte
+/// (the oracle reads the *initial* image).
+const DST_REGION: u64 = 0x0080_0000;
+
+/// One randomized scenario: the descriptor plus the hardware knobs.
+struct Case {
+    nd: NdTransfer,
+    dw: u64,
+    nax: usize,
+    latency: u64,
+    src_p: ProtocolKind,
+    dst_p: ProtocolKind,
+}
+
+/// Draw a random case. Source strides are unconstrained (overlapping,
+/// zero, negative, degenerate `reps == 1`); destination strides always
+/// cover the span of the walk below them, so destination windows never
+/// overlap and the byte image is cut-invariant — exactly the envelope
+/// in which the optimizer must be a no-op on observable bytes.
+fn gen_case(case: u64) -> Case {
+    let mut rng = XorShift64::new(case_seed(0x0D7A, case));
+    let protos = [
+        ProtocolKind::Axi4,
+        ProtocolKind::Obi,
+        ProtocolKind::Axi4Lite,
+        ProtocolKind::TileLinkUh,
+    ];
+    let src_p = protos[rng.below(4) as usize];
+    let dst_p = protos[rng.below(4) as usize];
+    let dw = [2u64, 4, 8, 16][rng.below(4) as usize];
+    let nax = 1 + rng.below(8) as usize;
+    let latency = 1 + rng.below(24);
+    let len = 1 + rng.below(96);
+    let mut inner = Transfer1D::copy(
+        0,
+        SRC_REGION + rng.below(64),
+        DST_REGION + rng.below(64),
+        len,
+        src_p,
+    );
+    inner.dst_protocol = dst_p;
+    let mut dims = Vec::new();
+    // Bytes the walk below the dimension being added spans on the
+    // destination side (the lower bound for a non-overlapping stride).
+    let mut dst_span = len as i64;
+    for _ in 0..rng.below(4) {
+        let reps = 1 + rng.below(4);
+        let contiguous = rng.chance(0.4);
+        let dst_stride = if contiguous { dst_span } else { dst_span + rng.below(64) as i64 };
+        let src_stride = if contiguous && rng.chance(0.7) {
+            dst_stride // mirrored contiguity → fusable
+        } else {
+            rng.below(8192) as i64 - 4096 // overlapping / zero / negative
+        };
+        dims.push(NdDim { src_stride, dst_stride, reps });
+        dst_span = dst_stride * reps as i64;
+    }
+    Case { nd: NdTransfer { inner, dims }, dw, nax, latency, src_p, dst_p }
+}
+
+/// Identical hardware for both runs; only the mid-end differs.
+fn build_sys(c: &Case, optimize: bool) -> IdmaSystem {
+    let be = Backend::new(BackendCfg {
+        dw_bytes: c.dw,
+        nax_r: c.nax,
+        nax_w: c.nax,
+        ports: vec![
+            PortCfg { protocol: c.src_p, mem: 0 },
+            PortCfg { protocol: c.dst_p, mem: 0 },
+        ],
+        ..Default::default()
+    })
+    .unwrap();
+    let mids: Vec<Box<dyn MidEnd>> = if optimize {
+        vec![Box::new(PatternOptimizer::new(OptimizerCfg {
+            max_dims: 4,
+            bus_bytes: c.dw,
+            ..Default::default()
+        }))]
+    } else {
+        vec![Box::new(TensorNd::new(4, true))]
+    };
+    let engine = IdmaEngine::new(mids, be);
+    IdmaSystem::new(engine, vec![Endpoint::new(MemModel::custom("m", c.latency, 16, c.dw))])
+}
+
+/// The source/destination windows touched by `c`'s reference walk.
+fn windows(c: &Case) -> (u64, u64, u64, u64) {
+    let rows = c.nd.enumerate();
+    let src_lo = rows.iter().map(|t| t.src).min().unwrap();
+    let src_hi = rows.iter().map(|t| t.src + t.len).max().unwrap();
+    let dst_lo = rows.iter().map(|t| t.dst).min().unwrap();
+    let dst_hi = rows.iter().map(|t| t.dst + t.len).max().unwrap();
+    (src_lo, src_hi, dst_lo, dst_hi)
+}
+
+/// Run one case through one configuration; returns `(end cycle,
+/// destination window bytes)`.
+fn run_one(c: &Case, case: u64, optimize: bool) -> (u64, Vec<u8>) {
+    let (src_lo, src_hi, dst_lo, dst_hi) = windows(c);
+    let blob = payload(case_seed(0xB10B, case), (src_hi - src_lo) as usize);
+    let mut sys = build_sys(c, optimize);
+    sys.mems[0].data.write(src_lo, &blob);
+    assert!(sys.submit(NdJob::new(1, c.nd.clone())), "case {case}: submit refused");
+    let end = sys.run_until_idle();
+    let done = sys.take_done();
+    assert_eq!(done.len(), 1, "case {case}: exactly one completion expected");
+    assert!(done[0].ok(), "case {case}: job must complete cleanly: {:?}", done[0]);
+    (end, sys.mems[0].data.read_vec(dst_lo, (dst_hi - dst_lo) as usize))
+}
+
+/// The destination window the software oracle predicts (untouched
+/// bytes stay zero, like a fresh [`SparseMemory`]).
+fn oracle_window(c: &Case, case: u64) -> Vec<u8> {
+    let (src_lo, src_hi, dst_lo, dst_hi) = windows(c);
+    let mut img = SparseMemory::new();
+    img.write(src_lo, &payload(case_seed(0xB10B, case), (src_hi - src_lo) as usize));
+    let mut win = vec![0u8; (dst_hi - dst_lo) as usize];
+    for (addr, b) in oracle_copy(&c.nd, &img) {
+        win[(addr - dst_lo) as usize] = b;
+    }
+    win
+}
+
+/// Full differential check of one case: dense vs optimized vs oracle,
+/// optimizer never slower. Returns the observables the thread-
+/// invariance comparison pins.
+fn check_case(c: &Case, case: u64) -> (u64, u64, Vec<u8>) {
+    let (dense_end, dense_win) = run_one(c, case, false);
+    let (opt_end, opt_win) = run_one(c, case, true);
+    assert_eq!(dense_win, opt_win, "case {case}: optimized bytes diverge ({:?})", c.nd);
+    assert_eq!(
+        dense_win,
+        oracle_window(c, case),
+        "case {case}: dense run diverges from the software oracle"
+    );
+    assert!(
+        opt_end <= dense_end,
+        "case {case}: optimizer must not be slower ({opt_end} vs dense {dense_end})"
+    );
+    (dense_end, opt_end, opt_win)
+}
+
+/// Satellite (b): the randomized conformance sweep, run at two thread
+/// counts — results (cycles and bytes) must be identical, so the sweep
+/// itself is deterministic under sharding.
+#[test]
+fn prop_optimized_runs_byte_identical_and_not_slower() {
+    let cases: Vec<u64> = (0..24).collect();
+    let run_case = |_i: usize, &case: &u64| check_case(&gen_case(case), case);
+    let one = sweep::sweep(&cases, 1, run_case);
+    let eight = sweep::sweep(&cases, 8, run_case);
+    assert_eq!(one, eight, "sweep results must be thread-count invariant");
+}
+
+/// Deterministic edge patterns the random generator only rarely draws:
+/// broadcast (zero source stride), descending source walks, heavily
+/// overlapping source windows, degenerate dimensions, and a fully
+/// contiguous 3D block that fuses to a single row.
+#[test]
+fn handcrafted_edge_patterns_stay_oracle_exact() {
+    let edge = |dims: Vec<NdDim>| {
+        let inner = Transfer1D::copy(0, SRC_REGION, DST_REGION, 24, ProtocolKind::Axi4);
+        NdTransfer { inner, dims }
+    };
+    let patterns = vec![
+        edge(vec![NdDim { src_stride: 0, dst_stride: 24, reps: 5 }]),
+        edge(vec![NdDim { src_stride: -24, dst_stride: 24, reps: 4 }]),
+        edge(vec![NdDim { src_stride: 8, dst_stride: 24, reps: 6 }]),
+        edge(vec![
+            NdDim { src_stride: 24, dst_stride: 24, reps: 1 },
+            NdDim { src_stride: 24, dst_stride: 48, reps: 3 },
+        ]),
+        edge(vec![
+            NdDim { src_stride: 24, dst_stride: 24, reps: 4 },
+            NdDim { src_stride: 96, dst_stride: 96, reps: 3 },
+        ]),
+    ];
+    for (i, nd) in patterns.into_iter().enumerate() {
+        let c = Case {
+            nd,
+            dw: 8,
+            nax: 8,
+            latency: 8,
+            src_p: ProtocolKind::Axi4,
+            dst_p: ProtocolKind::Axi4,
+        };
+        check_case(&c, 1000 + i as u64);
+    }
+}
+
+/// Acceptance: a fusable workload reports `rows_out < rows_in` and the
+/// absorbed payload bytes through the telemetry summary.
+#[test]
+fn fused_telemetry_reports_row_reduction() {
+    let mut sys = Cheshire::default().optimized_system();
+    let rec = shared(Recorder::new());
+    sys.attach_sink(rec.clone());
+    let (len, reps) = (64u64, 32u64);
+    let src = payload(0xF00D, (len * reps) as usize);
+    sys.mems[0].data.write(SRC_REGION, &src);
+    let inner = Transfer1D::copy(0, SRC_REGION, DST_REGION, len, ProtocolKind::Axi4);
+    assert!(sys.submit(NdJob::new(7, NdTransfer::d2(inner, len as i64, len as i64, reps))));
+    sys.run_until_idle();
+    assert!(sys.take_done()[0].ok());
+    assert_eq!(sys.mems[0].data.read_vec(DST_REGION, src.len()), src);
+    let s = rec.borrow().summary();
+    assert_eq!(s.rows_in, reps, "dense expansion would emit one row per rep");
+    assert_eq!(s.rows_out, 1, "fully contiguous 2D must fuse to a single row");
+    assert_eq!(s.fused_bytes, len * (reps - 1));
+    assert!(s.row_reduction() > 0.9, "row reduction {:.3}", s.row_reduction());
+}
+
+/// Composition with the QoS chunk scheduler: the scheduler slices jobs
+/// into chunk sub-jobs *before* the mid-end chain, so the optimizer
+/// must stay transparent under preemption — same bytes as the dense
+/// system under the identical policy, every job completing.
+#[test]
+fn optimizer_composes_with_qos_chunking() {
+    let policy = || {
+        QosPolicy::new(vec![
+            ClassConfig::default(),
+            ClassConfig { priority: 1, ..Default::default() },
+        ])
+        .with_chunk_bytes(1024)
+    };
+    let total = 16 * 1024u64;
+    let run = |optimize: bool| {
+        let mut sys = if optimize {
+            Cheshire::default().optimized_system()
+        } else {
+            Cheshire::default().dense_system()
+        };
+        sys.set_qos(QosScheduler::new(policy()));
+        let src = payload(0x9035, total as usize);
+        sys.mems[0].data.write(SRC_REGION, &src);
+        // One bulk 2D job (first 8 KiB) racing eight class-1 copies.
+        let inner = Transfer1D::copy(0, SRC_REGION, DST_REGION, 512, ProtocolKind::Axi4);
+        assert!(sys.submit(NdJob::new(1, NdTransfer::d2(inner, 512, 512, 16))));
+        for i in 0..8u64 {
+            let off = 8 * 1024 + i * 1024;
+            let j = common::copy_job(10 + i, SRC_REGION + off, DST_REGION + off, 1024)
+                .with_class(TrafficClass(1));
+            assert!(sys.submit(j));
+        }
+        sys.run_until_idle();
+        let done = sys.take_done();
+        assert_eq!(done.len(), 9);
+        assert!(done.iter().all(|r| r.ok()), "all jobs complete under chunking");
+        sys.mems[0].data.read_vec(DST_REGION, total as usize)
+    };
+    let dense = run(false);
+    let opt = run(true);
+    assert_eq!(dense, opt, "QoS-chunked image must not depend on the mid-end");
+    assert_eq!(opt, payload(0x9035, total as usize), "image must equal the source");
+}
+
+/// Composition with virtual addressing: the optimizer fuses an 8 KiB
+/// contiguous 2D walk into one mega-row, which the MMU re-splits at
+/// page boundaries and translates. Event and exact drivers must agree
+/// on every observable and the paged copy must land byte-exact.
+#[test]
+fn optimizer_composes_with_mmu_paging() {
+    const SRC_VA: u64 = 0x0010_0000;
+    const DST_VA: u64 = 0x0800_0000;
+    const SRC_PA: u64 = 0x8000_0000;
+    const DST_PA: u64 = 0x9000_0000;
+    const PAGE: u64 = 4096;
+    let total = 2 * PAGE;
+    let run = |exact: bool| {
+        let (mut sys, mut pt) = Cheshire::default().optimized_virtual_system();
+        let src = payload(0x7A9E, total as usize);
+        sys.mems[0].data.write(SRC_PA, &src);
+        for off in (0..total).step_by(PAGE as usize) {
+            pt.map(&mut sys.mems[0].data, SRC_VA + off, SRC_PA + off);
+            pt.map(&mut sys.mems[0].data, DST_VA + off, DST_PA + off);
+        }
+        let inner = Transfer1D::copy(0, SRC_VA, DST_VA, 1024, ProtocolKind::Axi4);
+        assert!(sys.submit(NdJob::new(3, NdTransfer::d2(inner, 1024, 1024, 8))));
+        let end = if exact { sys.run_until_idle_exact() } else { sys.run_until_idle() };
+        let done = sys.take_done();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].ok(), "paged job must complete: {:?}", done[0]);
+        (end, sys.now(), done, sys.mems[0].data.read_vec(DST_PA, total as usize))
+    };
+    let (ev, ex) = common::diff_drivers(run);
+    assert_eq!(ev, ex, "event and exact drivers diverge with optimizer + MMU");
+    assert_eq!(ev.3, payload(0x7A9E, total as usize), "paged copy must land byte-exact");
+}

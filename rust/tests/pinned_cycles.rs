@@ -1,0 +1,100 @@
+//! Pinned-cycle regression tests: one small fixed transfer per system
+//! instantiation, with the exact end-to-end cycle count locked against
+//! a golden file (`tests/data/pinned_cycles.json`). Any timing-visible
+//! change to the engine, mid-ends, legalizer or memory models shows up
+//! here as an exact-number diff instead of a silent drift.
+//!
+//! Blessing: when the golden file is absent, or `IDMA_BLESS` is set in
+//! the environment, the measured counts are written out and the test
+//! passes — commit the refreshed file together with the change that
+//! legitimately moved the numbers. Event-driven and per-cycle exact
+//! drivers are additionally required to agree on every measurement.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+
+use common::payload;
+use idma::midend::NdJob;
+use idma::protocol::ProtocolKind;
+use idma::system::IdmaSystem;
+use idma::systems::cheshire::Cheshire;
+use idma::systems::control_pulp::ControlPulp;
+use idma::systems::manticore::Manticore;
+use idma::systems::mempool::MemPool;
+use idma::systems::pulp_open::PulpOpen;
+use idma::transfer::{NdTransfer, Transfer1D};
+
+/// The fixed probe transfer: 256 bytes from `0x1000` to `0x2000`.
+/// `cross` routes the write to the system's second memory over its OBI
+/// port (the multi-port systems), otherwise both ends sit in `mems[0]`.
+fn measure(label: &str, build: &dyn Fn() -> IdmaSystem, cross: bool) -> u64 {
+    let len = 256u64;
+    let (src, dst) = (0x1000u64, 0x2000u64);
+    let run = |exact: bool| {
+        let mut sys = build();
+        sys.mems[0].data.write(src, &payload(0x5EED, len as usize));
+        let mut t = Transfer1D::copy(0, src, dst, len, ProtocolKind::Axi4);
+        if cross {
+            t.dst_protocol = ProtocolKind::Obi;
+        }
+        assert!(sys.submit(NdJob::new(1, NdTransfer::d1(t))), "{label}: submit refused");
+        let end = if exact { sys.run_until_idle_exact() } else { sys.run_until_idle() };
+        let done = sys.take_done();
+        assert!(done.len() == 1 && done[0].ok(), "{label}: job must complete: {done:?}");
+        let mem = usize::from(cross);
+        (end, sys.mems[mem].data.read_vec(dst, len as usize))
+    };
+    let (ev, ex) = common::diff_drivers(run);
+    assert_eq!(ev, ex, "{label}: event and exact drivers diverge");
+    assert_eq!(ev.1, payload(0x5EED, len as usize), "{label}: bytes must land");
+    ev.0
+}
+
+/// Minimal extractor for the flat `{"name": value, ...}` golden file.
+fn golden(text: &str, name: &str) -> Option<u64> {
+    let key = format!("\"{name}\":");
+    let at = text.find(&key)? + key.len();
+    let digits: String =
+        text[at..].trim_start().chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+#[test]
+fn pinned_cycle_counts_per_system() {
+    let measured: Vec<(&str, u64)> = vec![
+        ("cheshire", measure("cheshire", &|| Cheshire::default().resilient_system(), false)),
+        ("manticore", measure("manticore", &|| Manticore::default().resilient_system(), true)),
+        ("pulp_open", measure("pulp_open", &|| PulpOpen::default().resilient_system(), true)),
+        (
+            "control_pulp",
+            measure("control_pulp", &|| ControlPulp::default().resilient_system(), true),
+        ),
+        ("mempool", measure("mempool", &|| MemPool::default().flat_system(), true)),
+    ];
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/pinned_cycles.json");
+    if std::env::var_os("IDMA_BLESS").is_some() || !path.exists() {
+        let mut out = String::from("{\n");
+        for (i, (name, cycles)) in measured.iter().enumerate() {
+            let sep = if i + 1 < measured.len() { "," } else { "" };
+            out.push_str(&format!("  \"{name}\": {cycles}{sep}\n"));
+        }
+        out.push_str("}\n");
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, out).unwrap();
+        eprintln!("pinned_cycles: blessed {} entries into {}", measured.len(), path.display());
+        return;
+    }
+    let text = fs::read_to_string(&path).unwrap();
+    for (name, cycles) in measured {
+        let want = golden(&text, name).unwrap_or_else(|| {
+            panic!("{name} missing from {} — re-bless with IDMA_BLESS=1", path.display())
+        });
+        assert_eq!(
+            cycles, want,
+            "{name}: end-to-end cycle count drifted from the pinned golden \
+             (set IDMA_BLESS=1 and re-run to re-bless after an intended timing change)"
+        );
+    }
+}

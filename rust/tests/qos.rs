@@ -5,22 +5,23 @@
 //! deadline-miss surfacing, and front-end class routing into the
 //! per-class telemetry histograms.
 
+mod common;
+
+use common::payload;
+
 use idma::engine::EngineBuilder;
 use idma::frontend::{regs, RegFrontend, RegVariant};
 use idma::mem::{Endpoint, MemModel};
 use idma::midend::NdJob;
-use idma::protocol::ProtocolKind;
 use idma::qos::scenario::{percentile_exact, FairnessScenario, IsolationScenario, DST_BASE, SRC_BASE};
 use idma::qos::{ClassConfig, QosPolicy, QosScheduler, RateLimit, TrafficClass};
-use idma::sim::XorShift64;
 use idma::system::IdmaSystemBuilder;
 use idma::systems::cheshire::Cheshire;
 use idma::telemetry::{shared, Recorder};
-use idma::transfer::{NdTransfer, Transfer1D};
 
+/// A copy at `off` inside the scenario's shared src/dst windows.
 fn copy_job(id: u64, off: u64, len: u64) -> NdJob {
-    let t = Transfer1D::copy(0, SRC_BASE + off, DST_BASE + off, len, ProtocolKind::Axi4);
-    NdJob::new(id, NdTransfer::d1(t))
+    common::copy_job(id, SRC_BASE + off, DST_BASE + off, len)
 }
 
 /// Satellite (a): two same-priority classes saturating the engine split
@@ -104,8 +105,7 @@ fn event_and_exact_drivers_agree_with_qos_active() {
     let total = 12 * 1024u64;
     let run = |exact: bool| {
         let mut sys = Cheshire::default().qos_system(policy());
-        let mut src = vec![0u8; total as usize];
-        XorShift64::new(0x51AB).fill(&mut src);
+        let src = payload(0x51AB, total as usize);
         sys.mems[0].data.write(SRC_BASE, &src);
         for i in 0..8u64 {
             assert!(sys.submit(copy_job(i + 1, i * 1024, 1024)));
@@ -136,8 +136,7 @@ fn deadline_missed_status_surfaces_with_data_intact() {
     let policy = QosPolicy::new(vec![ClassConfig { deadline: Some(8), ..Default::default() }]);
     let mut sys = Cheshire::default().qos_system(policy);
     let len = 4096u64;
-    let mut src = vec![0u8; len as usize];
-    XorShift64::new(0xDEAD).fill(&mut src);
+    let src = payload(0xDEAD, len as usize);
     sys.mems[0].data.write(SRC_BASE, &src);
     assert!(sys.submit(copy_job(1, 0, len)));
     sys.run_until_idle();
@@ -173,8 +172,7 @@ fn frontend_jobs_inherit_the_port_class_and_reach_telemetry() {
         .build();
     sys.set_frontend_class(0, TrafficClass(1));
     let (src_a, dst_a, len) = (0x1000u64, 0x8000u64, 512u64);
-    let mut src = vec![0u8; len as usize];
-    XorShift64::new(0xBEEF).fill(&mut src);
+    let src = payload(0xBEEF, len as usize);
     sys.mems[0].data.write(src_a, &src);
     let fe = sys.try_frontend_mut::<RegFrontend>(0).unwrap();
     fe.write_reg(0, regs::SRC, src_a);
@@ -205,8 +203,7 @@ fn untagged_runs_without_scheduler_stay_cycle_identical_across_drivers() {
     let total = 8 * 1024u64;
     let run = |exact: bool| {
         let mut sys = Cheshire::default().resilient_system();
-        let mut src = vec![0u8; total as usize];
-        XorShift64::new(0x0FF).fill(&mut src);
+        let src = payload(0x0FF, total as usize);
         sys.mems[0].data.write(SRC_BASE, &src);
         let mut pending: Vec<NdJob> = (0..8u64).rev().map(|i| copy_job(i + 1, i * 1024, 1024)).collect();
         while let Some(j) = pending.last() {
