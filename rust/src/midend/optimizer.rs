@@ -159,7 +159,13 @@ pub fn canonicalize(nd: &NdTransfer, collapse: bool, fuse: bool) -> (NdTransfer,
                     && d0.dst_stride as i128 == len as i128
                 {
                     if let Some(new_len) = len.checked_mul(d0.reps) {
-                        fused_rows += d0.reps - 1;
+                        // Earlier fusion steps grow `len`, so one current
+                        // row stands for `len / nd.inner.len` dense rows
+                        // (`len` is always a multiple of the original
+                        // inner length); scale the absorbed count back
+                        // into dense-row units so cascaded fusion counts
+                        // every dense row it swallows.
+                        fused_rows += (d0.reps - 1) * (len / nd.inner.len);
                         fused_bytes += len * (d0.reps - 1);
                         out.inner.len = new_len;
                         out.dims.remove(0);
@@ -236,39 +242,45 @@ impl PlanCache {
     }
 }
 
-/// Compute the chunk lengths splitting a `key.len`-byte row into pieces
-/// of at most `max_row_bytes`, each piece greedily accumulating whole
-/// legal bursts of both directions so chunk boundaries land on the
-/// page/burst split points the back-end legalizer would pick anyway.
-fn plan_chunks(cfg: &OptimizerCfg, key: &PlanKey) -> Vec<u64> {
-    let src_rule = key.src_protocol.caps().burst;
-    let dst_rule = key.dst_protocol.caps().burst;
-    debug_assert!(alignment_sound(src_rule, cfg.bus_bytes));
-    debug_assert!(alignment_sound(dst_rule, cfg.bus_bytes));
-    // Representative addresses in the row's alignment class; PLAN_ALIGN
-    // + off has the same page offset and the same trailing-zero count
-    // (capped at the 4 KiB rule bound) as any address ≡ off (mod 4 KiB).
-    let src0 = PLAN_ALIGN + key.src_off;
-    let dst0 = PLAN_ALIGN + key.dst_off;
+/// Compute the chunk lengths splitting a `len`-byte row starting at
+/// `(src0, dst0)` into pieces of at most `max_row_bytes`, each piece
+/// greedily accumulating whole legal bursts of both directions so chunk
+/// boundaries land on the page/burst split points the back-end
+/// legalizer would pick anyway.
+fn plan_chunks(
+    cfg: &OptimizerCfg,
+    src_rule: BurstRule,
+    dst_rule: BurstRule,
+    src0: u64,
+    dst0: u64,
+    len: u64,
+) -> Vec<u64> {
+    let cap = cfg.max_row_bytes.max(1);
     let mut plan = Vec::new();
     let mut off = 0u64;
-    while off < key.len {
+    while off < len {
         let mut chunk = 0u64;
         loop {
-            let left = key.len - off - chunk;
+            let left = len - off - chunk;
             if left == 0 {
                 break;
             }
-            let b = max_legal_len(src_rule, src0 + off + chunk, left, cfg.bus_bytes)
+            let mut b = max_legal_len(src_rule, src0 + off + chunk, left, cfg.bus_bytes)
                 .min(max_legal_len(dst_rule, dst0 + off + chunk, left, cfg.bus_bytes))
                 .max(1);
-            // A chunk takes at least one burst, then stops before
-            // overrunning the row-size cap.
-            if chunk > 0 && chunk + b > cfg.max_row_bytes {
+            if chunk == 0 {
+                // The cap binds even when a single legal burst (e.g.
+                // `BurstRule::Unlimited`) exceeds it: a truncated burst
+                // is re-legalized by the back-end, and every chunk must
+                // honour the documented `max_row_bytes` contract.
+                b = b.min(cap);
+            } else if chunk + b > cap {
+                // A chunk takes at least one burst, then stops before
+                // overrunning the row-size cap.
                 break;
             }
             chunk += b;
-            if chunk >= cfg.max_row_bytes {
+            if chunk >= cap {
                 break;
             }
         }
@@ -280,6 +292,10 @@ fn plan_chunks(cfg: &OptimizerCfg, key: &PlanKey) -> Vec<u64> {
 
 /// The [`PLAN_ALIGN`] soundness condition: the rule's address
 /// sensitivity must be fully determined by `addr mod PLAN_ALIGN`.
+/// [`fill_chunks`] checks this per protocol pair and falls back to
+/// uncached per-row planning at the row's real addresses when it does
+/// not hold, so an unsound rule degrades to correct-but-slower plans
+/// instead of sharing a split plan across different alignment classes.
 fn alignment_sound(rule: BurstRule, bus_bytes: u64) -> bool {
     match rule {
         BurstRule::SingleBeat => bus_bytes <= PLAN_ALIGN && PLAN_ALIGN % bus_bytes == 0,
@@ -308,23 +324,44 @@ fn fill_chunks(
         chunks.push_back(row);
         return;
     }
-    let key = PlanKey {
-        src_off: row.src % PLAN_ALIGN,
-        dst_off: row.dst % PLAN_ALIGN,
-        len: row.len,
-        src_protocol: row.src_protocol,
-        dst_protocol: row.dst_protocol,
-    };
-    let plan = match cache.get(&key) {
-        Some(p) => {
-            *hits += 1;
-            p
-        }
-        None => {
-            *misses += 1;
-            let p = plan_chunks(cfg, &key);
-            cache.put(key, p.clone());
-            p
+    let src_rule = row.src_protocol.caps().burst;
+    let dst_rule = row.dst_protocol.caps().burst;
+    let plan = if !alignment_sound(src_rule, cfg.bus_bytes) || !alignment_sound(dst_rule, cfg.bus_bytes) {
+        // The legal burst length is not determined by `addr mod
+        // PLAN_ALIGN` for this protocol pair: the alignment-class cache
+        // key would alias genuinely different rows, so plan this row
+        // uncached at its real addresses.
+        plan_chunks(cfg, src_rule, dst_rule, row.src, row.dst, row.len)
+    } else {
+        let key = PlanKey {
+            src_off: row.src % PLAN_ALIGN,
+            dst_off: row.dst % PLAN_ALIGN,
+            len: row.len,
+            src_protocol: row.src_protocol,
+            dst_protocol: row.dst_protocol,
+        };
+        match cache.get(&key) {
+            Some(p) => {
+                *hits += 1;
+                p
+            }
+            None => {
+                *misses += 1;
+                // Representative addresses in the row's alignment
+                // class; PLAN_ALIGN + off has the same page offset and
+                // the same trailing-zero count (capped at the 4 KiB
+                // rule bound) as any address ≡ off (mod 4 KiB).
+                let p = plan_chunks(
+                    cfg,
+                    src_rule,
+                    dst_rule,
+                    PLAN_ALIGN + key.src_off,
+                    PLAN_ALIGN + key.dst_off,
+                    key.len,
+                );
+                cache.put(key, p.clone());
+                p
+            }
         }
     };
     let mut off = 0u64;
@@ -731,6 +768,39 @@ mod tests {
         assert_eq!(byte_map(&got), byte_map(&x.enumerate()));
         let s = opt.stats();
         assert_eq!(s.cache_misses, 1, "one plan computed for the single mega-row");
+    }
+
+    #[test]
+    fn cap_enforced_on_unlimited_bursts() {
+        // Axi4Stream's `BurstRule::Unlimited` makes the whole remaining
+        // row one legal burst; the `max_row_bytes` cap must still bind
+        // on the first burst of every chunk.
+        let cfg = OptimizerCfg { max_row_bytes: 4096, bus_bytes: 8, ..Default::default() };
+        let mut opt = PatternOptimizer::new(cfg);
+        let mut x = nd(16384, &[]);
+        x.inner.src_protocol = ProtocolKind::Axi4Stream;
+        x.inner.dst_protocol = ProtocolKind::Axi4Stream;
+        let j = NdJob::new(1, x.clone());
+        let got = drive(&mut opt, j, 1000);
+        assert_eq!(got.len(), 4, "16 KiB at a 4 KiB cap is four chunks: {got:?}");
+        for t in &got {
+            assert!(t.len <= 4096, "chunk within the cap: {}", t.len);
+        }
+        assert_eq!(byte_map(&got), byte_map(&x.enumerate()));
+    }
+
+    #[test]
+    fn cascaded_fusion_counts_dense_rows() {
+        // Three fully contiguous levels: 2*3*4 = 24 dense rows fuse to
+        // one, so exactly 23 dense rows are absorbed and fused_bytes
+        // telescopes to all-but-one row's payload.
+        let x = nd(8, &[(8, 8, 2), (16, 16, 3), (48, 48, 4)]);
+        let (c, fused_rows, fused_bytes) = canonicalize(&x, true, true);
+        assert!(c.dims.is_empty());
+        assert_eq!(c.inner.len, 8 * 24);
+        assert_eq!(fused_rows, 23);
+        assert_eq!(fused_bytes, 8 * 23);
+        assert_eq!(byte_map(&x.enumerate()), byte_map(&c.enumerate()));
     }
 
     #[test]
